@@ -1,0 +1,53 @@
+"""Paper Figure 9 (MFU per training stage) — roofline edition.
+
+No real TPUs here, so instead of measured MFU we derive, per paper training
+stage (Table 11 shapes, 4M-token batches, 32K -> 1M sequence length), the
+three roofline terms from the compiled dry-run and report the implied MFU
+*bound* (MODEL_FLOPS / (step_time_lb * chips * peak)). The paper's claim —
+MFU stays high as context grows because RingAttention overlaps K/V exchange
+with blockwise compute — shows up as the collective term staying under the
+compute term across stages.
+
+Runs in a subprocess (needs the 512-device XLA flag before jax init).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.abspath(os.path.join(HERE, "..", "src"))
+
+
+def run(*, quick: bool = False) -> list[dict]:
+    env = dict(os.environ, PYTHONPATH=SRC + ":" + os.path.dirname(HERE))
+    env.pop("XLA_FLAGS", None)
+    cmd = [sys.executable, os.path.join(HERE, "_stage_dryrun.py")]
+    if quick:
+        cmd.append("--quick")
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=3000)
+    rows = []
+    for line in r.stdout.splitlines():
+        if line.startswith("STAGE_ROW "):
+            row = json.loads(line[len("STAGE_ROW "):])
+            row["bench"] = "mfu_roofline"
+            rows.append(row)
+    if not rows:
+        rows = [{"bench": "mfu_roofline", "error": r.stderr[-500:]}]
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    for row in run(quick=args.quick):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

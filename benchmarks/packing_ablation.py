@@ -1,0 +1,114 @@
+"""Paper Table 10: masked sequence packing vs naive packing.
+
+The paper's ablation shows naive packing degrades tasks whose answers are
+short (image understanding): token-mean weighting drowns the few answer
+tokens under dense long-segment loss tokens. We reproduce the mechanism:
+
+  * mixture: long filler documents (every token carries loss) packed
+    together with short-answer retrieval examples (loss only on 3 answer
+    tokens);
+  * two models trained identically except the packing loss mode;
+  * metric: answer-token accuracy on held-out short-answer examples.
+
+Masked packing must win on answer accuracy (paper: 55.8 vs 48.3 VQAv2 etc.).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.packing import packed_loss_weights
+from repro.data.books import BookSampler
+from repro.data.needle import NeedleTask, retrieval_accuracy
+from repro.data.packing import Example, pack_examples
+from repro.data.vocab import build_vocab
+from repro.models.registry import build_model
+from repro.train.train_step import init_train_state, make_eval_step, make_train_step
+
+import jax.numpy as jnp
+
+SEQ = 256
+ANSWER_SEQ = 64
+
+
+def _mixed_batch(nt, books, vocab, rows, rng, mode):
+    """Rows packing long filler segments + short needle examples."""
+    examples = []
+    for _ in range(rows * 3):
+        if rng.random() < 0.5:
+            doc = books.sample_document(int(rng.integers(100, 200)))
+            examples.append(Example(doc))
+        else:
+            ex = nt.build(ANSWER_SEQ, num_needles=1, num_retrieve=1)
+            examples.append(Example(ex.tokens, ex.loss_mask))
+    batch = pack_examples(examples, vocab=vocab, seq_len=SEQ, batch_rows=rows)
+    w = packed_loss_weights(jnp.asarray(batch.segment_ids),
+                            jnp.asarray(batch.loss_mask),
+                            max_segments=batch.num_segments + 2, mode=mode)
+    return {
+        "tokens": batch.tokens, "labels": batch.labels,
+        "segment_ids": batch.segment_ids, "positions": batch.positions,
+        "loss_weights": np.asarray(w, np.float32),
+    }
+
+
+def run(*, steps: int = 600, rows: int = 4, quick: bool = False) -> list[dict]:
+    from benchmarks.needle import answer_logprob
+
+    if quick:
+        steps = 200
+    cfg = get_reduced("lwm-7b")
+    vocab = build_vocab(cfg.vocab_size, 0)
+    nt = NeedleTask(vocab, seed=0, key_len=1, val_len=1)
+    books = BookSampler(vocab, 100, 200, seed=5)
+    model = build_model(cfg)
+    eval_step = jax.jit(make_eval_step(cfg))
+
+    results = []
+    for mode in ("naive", "masked"):
+        state = init_train_state(model, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, learning_rate=3e-3,
+                                       weight_decay=0.0))
+        rng = np.random.default_rng(0)
+        for _ in range(steps):
+            state, m = step(state, _mixed_batch(nt, books, vocab, rows, rng,
+                                                mode))
+        # eval: unpacked short-answer retrieval (accuracy + answer log-prob —
+        # the mechanism Table 10 measures: naive packing starves the short
+        # answers of gradient signal)
+        accs, lps, answer_ce = [], [], []
+        for _ in range(6):
+            b = nt.batch(rows, ANSWER_SEQ, num_needles=1, num_retrieve=1)
+            eb = {
+                "tokens": b["tokens"],
+                "labels": np.roll(b["tokens"], -1, axis=1),
+                "segment_ids": np.ones_like(b["tokens"]),
+                "positions": np.tile(np.arange(ANSWER_SEQ, dtype=np.int32),
+                                     (rows, 1)),
+                "loss_weights": np.roll(b["loss_mask"], -1,
+                                        axis=1).astype(np.float32),
+            }
+            logits, met = eval_step(state.params, eb)
+            accs.append(retrieval_accuracy(np.asarray(logits, np.float32), b))
+            lps.append(answer_logprob(np.asarray(logits, np.float32), b))
+            answer_ce.append(float(met["loss"]))
+        results.append({"bench": "packing_ablation", "mode": mode,
+                        "answer_acc": round(float(np.mean(accs)), 3),
+                        "answer_logprob": round(float(np.mean(lps)), 3),
+                        "answer_ce": round(float(np.mean(answer_ce)), 4)})
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    args = ap.parse_args(argv)
+    for row in run(steps=args.steps):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+    python -m benchmarks.run [--full] [--only needle,...]
+
+Default (quick) mode trims training steps so the whole suite finishes on a
+CPU in minutes; --full uses the per-benchmark defaults. Results print as
+one dict row per line plus a summary table.
+
+Paper artifact -> module map:
+    Table 1/11  progressive text stages      -> context_stages
+    Table 7/13  vision-language stages       -> context_stages --vision
+    Fig 2/5     single-needle retrieval      -> needle
+    Fig 6/T3    multi-needle retrieval       -> needle (multi rows)
+    Table 10    masked packing ablation      -> packing_ablation
+    Table 6     chat/QA mix trade-off        -> chat_mix
+    Fig 9       MFU per stage (roofline)     -> mfu_roofline
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import chat_mix, context_stages, mfu_roofline, needle, packing_ablation
+
+BENCHES = {
+    "context_stages": lambda q: context_stages.run(quick=q),
+    "context_stages_vision": lambda q: context_stages.run(vision=True, quick=q),
+    "needle": lambda q: needle.run(quick=q),
+    "packing_ablation": lambda q: packing_ablation.run(quick=q),
+    "chat_mix": lambda q: chat_mix.run(quick=q),
+    "mfu_roofline": lambda q: mfu_roofline.run(quick=q),
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="per-benchmark default step counts (slower)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args(argv)
+
+    names = list(BENCHES) if not args.only else args.only.split(",")
+    quick = not args.full
+    all_rows = []
+    failures = []
+    for name in names:
+        t0 = time.time()
+        print(f"=== {name} ===", flush=True)
+        try:
+            rows = BENCHES[name](quick)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"  FAILED: {e!r}")
+            continue
+        for row in rows:
+            print(" ", row, flush=True)
+            all_rows.append(row)
+        print(f"  ({time.time() - t0:.1f}s)")
+
+    print(f"\n{len(all_rows)} result rows from {len(names) - len(failures)}"
+          f"/{len(names)} benchmarks")
+    for name, err in failures:
+        print(f"  FAILED {name}: {err}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,92 @@
+"""Architecture configs (assigned pool + the paper's own LWM-7B) and the
+benchmark input shapes.
+
+Every config cites its source in ``ModelConfig.source``. ``get_config(name)``
+returns the full-scale config; ``get_reduced(name)`` the smoke-test variant
+(<=2 layers, d_model<=512, <=4 experts) of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = [
+    "qwen2-moe-a2.7b",
+    "granite-3-2b",
+    "starcoder2-7b",
+    "internvl2-2b",
+    "qwen2.5-14b",
+    "whisper-small",
+    "zamba2-7b",
+    "granite-3-8b",
+    "rwkv6-3b",
+    "deepseek-v3-671b",
+    "lwm-7b",           # the paper's own model (LLaMA-2 7B + vision vocab)
+]
+
+_MODULES = {name: name.replace("-", "_").replace(".", "_") for name in ARCH_IDS}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.reduced()
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a step.
+
+    train/prefill: the packed batch consumed by train_step / prefill_step.
+    decode: one new token + its absolute position; the (large) KV cache is
+    built separately by ``launch.dryrun`` so its sharding can be specified.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+            "segment_ids": jax.ShapeDtypeStruct((b, s), i32),
+            "positions": jax.ShapeDtypeStruct((b, s), i32),
+            "loss_weights": jax.ShapeDtypeStruct((b, s), jnp.float32),
+        }
+    else:
+        specs = {
+            "token": jax.ShapeDtypeStruct((b, 1), i32),
+            "position": jax.ShapeDtypeStruct((b,), i32),
+        }
+    # modality stubs (task carve-out: precomputed frame/patch embeddings)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        v = cfg.vlm
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, min(v.num_patches, s), v.vision_embed_dim), jnp.bfloat16)
+    if cfg.family == "audio" and shape.kind != "decode":
+        e = cfg.encdec
+        specs["encoder_frames"] = jax.ShapeDtypeStruct(
+            (b, e.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    return specs

@@ -1,0 +1,47 @@
+"""deepseek-v3-671b [arXiv:2412.19437] — MLA + 1 shared/256 routed top-8 MoE.
+
+61L d_model=7168 128H; MLA (q_lora 1536, kv_lora 512, qk 128+64, v 128);
+first 3 layers dense (d_ff=18432), remaining MoE with expert d_ff=2048;
+vocab=129280. MTP head available via cfg.mtp.
+"""
+from repro.models.config import MLAConfig, MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,        # MLA: latent-compressed; kv head count == q heads
+    head_dim=128,
+    d_ff=2048,               # routed expert d_ff
+    vocab_size=129280,
+    rope_theta=1e4,
+    max_context=131072,
+    moe=MoEConfig(
+        num_experts=256,
+        top_k=8,
+        expert_d_ff=2048,
+        num_shared_experts=1,
+        shared_d_ff=2048,
+        first_dense_layers=3,
+        dense_d_ff=18432,
+    ),
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512, qk_nope_head_dim=128,
+                  qk_rope_head_dim=64, v_head_dim=128),
+    mtp=False,
+    source="arXiv:2412.19437",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        num_layers=3, d_model=256, num_heads=4, num_kv_heads=4, head_dim=32,
+        d_ff=128, vocab_size=512,
+        moe=MoEConfig(num_experts=4, top_k=2, expert_d_ff=128,
+                      num_shared_experts=1, shared_d_ff=128,
+                      first_dense_layers=1, dense_d_ff=256),
+        mla=MLAConfig(q_lora_rank=64, kv_lora_rank=32, qk_nope_head_dim=32,
+                      qk_rope_head_dim=16, v_head_dim=32),
+        q_block=64, kv_block=64,
+    )

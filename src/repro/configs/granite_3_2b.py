@@ -1,0 +1,28 @@
+"""granite-3-2b [hf:ibm-granite/granite-3.0-2b-base].
+
+40L d_model=2048 32H (GQA kv=8) d_ff=8192 vocab=49155.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-2b",
+    family="dense",
+    num_layers=40,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=49155,
+    tie_embeddings=True,
+    rope_theta=1e4,
+    max_context=4096,
+    source="hf:ibm-granite/granite-3.0-2b-base",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        num_layers=2, d_model=256, num_heads=8, num_kv_heads=2, head_dim=32,
+        d_ff=512, vocab_size=512, q_block=64, kv_block=64,
+    )

@@ -1,0 +1,33 @@
+"""internvl2-2b [arXiv:2404.16821] — InternViT + InternLM2-1.8B backbone.
+
+LM: 24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553. The InternViT
+vision encoder + pixel-shuffle projector is a STUB per task rules:
+``input_specs`` provides precomputed patch embeddings (vision_embed_dim=1024,
+InternViT-300M hidden), which the in-model MLP projector maps to d_model.
+"""
+from repro.models.config import ModelConfig, VLMConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=92553,
+    rope_theta=1e6,
+    max_context=32768,
+    vlm=VLMConfig(num_patches=1024, vision_embed_dim=1024),
+    source="arXiv:2404.16821",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        num_layers=2, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=512,
+        vlm=VLMConfig(num_patches=16, vision_embed_dim=64),
+        q_block=64, kv_block=64,
+    )

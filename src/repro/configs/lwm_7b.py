@@ -1,0 +1,31 @@
+"""lwm-7b — the paper's own model: LLaMA-2 7B with the vision-token vocab.
+
+32L d_model=4096 32H (kv=32) d_ff=11008; vocab = 32000 text + 8192 VQGAN
+codes + <vision>,</vision>,<eof>,<eov> + pad/bos/eos = 40200 (paper §4.1).
+RoPE theta follows the paper's per-stage schedule (core.rope); the default
+here is the 1M-stage value 5e7.
+"""
+from repro.models.config import ModelConfig, VisionTokenConfig
+
+CONFIG = ModelConfig(
+    name="lwm-7b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=40200,
+    rope_theta=5e7,          # paper Table 1, 1M stage
+    max_context=1_048_576,
+    vision_tokens=VisionTokenConfig(codebook_size=8192, tokens_per_frame=256),
+    source="this paper (LWM), init from LLaMA-2 7B [TMS+23]",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        num_layers=2, d_model=256, num_heads=4, num_kv_heads=4, head_dim=64,
+        d_ff=512, vocab_size=1024, q_block=64, kv_block=64,
+    )

@@ -1,0 +1,41 @@
+"""qwen2-moe-a2.7b [hf:Qwen/Qwen1.5-MoE-A2.7B].
+
+24L d_model=2048 16H (GQA kv=16) d_ff=1408(expert) vocab=151936;
+MoE: 60 routed experts top-4 + 4 shared experts (shared ff 5632).
+"""
+from repro.models.config import MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1e6,
+    max_context=32768,
+    moe=MoEConfig(
+        num_experts=60,
+        top_k=4,
+        expert_d_ff=1408,
+        num_shared_experts=4,
+        shared_d_ff=5632,
+        norm_top_k_probs=False,
+    ),
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        num_layers=2, d_model=256, num_heads=4, num_kv_heads=4, head_dim=64,
+        d_ff=128, vocab_size=512,
+        moe=MoEConfig(num_experts=4, top_k=2, expert_d_ff=128,
+                      num_shared_experts=1, shared_d_ff=256,
+                      norm_top_k_probs=False),
+        q_block=64, kv_block=64,
+    )

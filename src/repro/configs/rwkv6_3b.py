@@ -1,0 +1,29 @@
+"""rwkv6-3b "Finch" [arXiv:2404.05892] — attention-free, data-dependent decay.
+
+32L d_model=2560 (40 heads x 64), d_ff=8960 vocab=65536.
+"""
+from repro.models.config import ModelConfig, RWKVConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    num_layers=32,
+    d_model=2560,
+    num_heads=40,            # d_model / rwkv.head_dim
+    num_kv_heads=40,
+    head_dim=64,
+    d_ff=8960,
+    vocab_size=65536,
+    rope_theta=1e4,          # unused (attention-free)
+    max_context=4096,
+    rwkv=RWKVConfig(head_dim=64, decay_lora=64, chunk_size=64),
+    source="arXiv:2404.05892",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=4, head_dim=32,
+        d_ff=256, vocab_size=512,
+        rwkv=RWKVConfig(head_dim=32, decay_lora=16, chunk_size=32),
+    )

@@ -1,0 +1,30 @@
+"""starcoder2-7b [arXiv:2402.19173].
+
+32L d_model=4608 36H (GQA kv=4) d_ff=18432 vocab=49152 — GQA, RoPE,
+GELU MLP with biases (starcoder2 style).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b",
+    family="dense",
+    num_layers=32,
+    d_model=4608,
+    num_heads=36,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18432,
+    vocab_size=49152,
+    qkv_bias=True,
+    activation="gelu",
+    rope_theta=1e5,
+    max_context=16384,
+    source="arXiv:2402.19173",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        num_layers=2, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=512, q_block=64, kv_block=64,
+    )

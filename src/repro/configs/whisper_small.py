@@ -1,0 +1,33 @@
+"""whisper-small [arXiv:2212.04356] — encoder-decoder, conv frontend STUB.
+
+12L (each side) d_model=768 12H (kv=12) d_ff=3072 vocab=51865, GELU,
+LayerNorm. The mel-spectrogram + conv feature extractor is stubbed:
+``input_specs`` provides precomputed frame embeddings (B, 1500, 768).
+"""
+from repro.models.config import EncDecConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    activation="gelu",
+    rope_theta=1e4,          # decoder uses learned/sinusoidal pos; RoPE unused
+    max_context=448,
+    encdec=EncDecConfig(num_encoder_layers=12, encoder_seq_len=1500),
+    source="arXiv:2212.04356",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=4, head_dim=32,
+        d_ff=256, vocab_size=512,
+        encdec=EncDecConfig(num_encoder_layers=2, encoder_seq_len=64),
+        q_block=64, kv_block=64,
+    )

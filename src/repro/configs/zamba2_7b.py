@@ -1,0 +1,36 @@
+"""zamba2-7b [arXiv:2411.15242] — Mamba2 backbone + shared attention blocks.
+
+81L d_model=3584 (Mamba2: expand=2, head_dim=64, state=64); shared attention
+block (32H, GQA kv=32, d_ff=14336) applied every 6 Mamba blocks with the
+original embedding concatenated to its input. vocab=32000.
+"""
+from repro.models.config import HybridConfig, MambaConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab_size=32000,
+    rope_theta=1e4,
+    max_context=4096,
+    mamba=MambaConfig(state_dim=64, head_dim=64, expand=2, conv_width=4,
+                      chunk_size=128),
+    hybrid=HybridConfig(attn_every=6, shared_attn_blocks=1),
+    source="arXiv:2411.15242",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        num_layers=5, d_model=256, num_heads=4, num_kv_heads=4, head_dim=64,
+        d_ff=512, vocab_size=512,
+        mamba=MambaConfig(state_dim=16, head_dim=32, expand=2, conv_width=4,
+                          chunk_size=32),
+        hybrid=HybridConfig(attn_every=2, shared_attn_blocks=1),
+        q_block=64, kv_block=64,
+    )

@@ -1,0 +1,94 @@
+"""Reference attention: GQA, causal + segment (masked sequence packing) masks.
+
+These are the semantics oracles for the blockwise / ring / Pallas paths.
+Shapes follow the convention used throughout the repo:
+
+  q: (batch, q_len, num_heads, head_dim)
+  k,v: (batch, kv_len, num_kv_heads, head_dim)   num_heads % num_kv_heads == 0
+
+Masked sequence packing (paper §4.2, Table 10): each token carries a
+``segment_id``; attention is allowed only within the same segment, so packed
+examples cannot attend to each other. Padding uses segment id 0 by convention
+in the data pipeline (any consistent id works for the math here).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps fully-masked rows finite
+
+
+def repeat_kv(x: jnp.ndarray, num_heads: int) -> jnp.ndarray:
+    """(B, S, Hkv, D) -> (B, S, H, D) by repeating each kv head H/Hkv times."""
+    num_kv = x.shape[-2]
+    if num_kv == num_heads:
+        return x
+    reps = num_heads // num_kv
+    return jnp.repeat(x, reps, axis=-2)
+
+
+def make_attention_mask(
+    q_positions: jnp.ndarray,
+    kv_positions: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_segment_ids: jnp.ndarray | None = None,
+    kv_segment_ids: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Boolean mask (..., q_len, kv_len); True = attend.
+
+    positions are absolute (global) so ring shards compose correctly.
+    """
+    shape = jnp.broadcast_shapes(
+        q_positions.shape[:-1], kv_positions.shape[:-1]
+    ) + q_positions.shape[-1:] + kv_positions.shape[-1:]
+    mask = jnp.ones(shape, dtype=bool)
+    if causal:
+        mask = jnp.broadcast_to(
+            q_positions[..., :, None] >= kv_positions[..., None, :], shape)
+    if q_segment_ids is not None:
+        assert kv_segment_ids is not None
+        seg = q_segment_ids[..., :, None] == kv_segment_ids[..., None, :]
+        mask = jnp.logical_and(mask, seg)
+    return mask
+
+
+def full_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_positions: jnp.ndarray | None = None,
+    kv_positions: jnp.ndarray | None = None,
+    q_segment_ids: jnp.ndarray | None = None,
+    kv_segment_ids: jnp.ndarray | None = None,
+    logits_soft_cap: float | None = None,
+) -> jnp.ndarray:
+    """O(S^2)-memory reference attention (the semantics oracle)."""
+    b, qs, h, d = q.shape
+    kvs = k.shape[1]
+    k = repeat_kv(k, h)
+    v = repeat_kv(v, h)
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(qs), (b, qs)) + (kvs - qs)
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(kvs), (b, kvs))
+
+    scale = d ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if logits_soft_cap is not None:
+        logits = logits_soft_cap * jnp.tanh(logits / logits_soft_cap)
+    mask = make_attention_mask(
+        q_positions, kv_positions, causal=causal,
+        q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
+    )  # (b, q, k)
+    logits = jnp.where(mask[:, None, :, :], logits, NEG_INF)
+    weights = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", weights, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def gqa_shapes_ok(num_heads: int, num_kv_heads: int) -> bool:
+    return num_heads % num_kv_heads == 0

@@ -1,0 +1,232 @@
+"""Blockwise Parallel Transformer (BPT) primitives.
+
+Paper §3.1: "we use the Blockwise RingAttention implementation that leverages
+block-wise transformer with sequence parallelism". This module implements the
+*blockwise* half: flash-attention-style online-softmax accumulation over K/V
+blocks (never materializing the (S x S) score matrix) and a blockwise
+feedforward so the (S x d_ff) activation is computed chunk by chunk.
+
+The accumulator carry is exposed so ``ring_attention`` can chain it across
+K/V shards arriving over the ring: each ring step is "one more set of KV
+blocks" folded into the same running (acc, m, l) statistics.
+
+All accumulation is float32 regardless of input dtype.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import NEG_INF, repeat_kv
+
+
+class AttnCarry(NamedTuple):
+    """Online-softmax running statistics for a set of query rows."""
+
+    acc: jnp.ndarray  # (B, Sq, H, D) f32 — un-normalized weighted values
+    m: jnp.ndarray    # (B, Sq, H)   f32 — running row max of logits
+    l: jnp.ndarray    # (B, Sq, H)   f32 — running normalizer sum
+
+
+def init_carry(batch: int, q_len: int, heads: int, head_dim: int) -> AttnCarry:
+    return AttnCarry(
+        acc=jnp.zeros((batch, q_len, heads, head_dim), jnp.float32),
+        m=jnp.full((batch, q_len, heads), NEG_INF, jnp.float32),
+        l=jnp.zeros((batch, q_len, heads), jnp.float32),
+    )
+
+
+def finalize_carry(carry: AttnCarry, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """acc / l with fully-masked rows mapped to zeros (not NaN)."""
+    l = carry.l[..., None]
+    out = carry.acc / jnp.where(l == 0.0, 1.0, l)
+    return out.astype(dtype)
+
+
+def combine_carries(a: AttnCarry, b: AttnCarry) -> AttnCarry:
+    """Merge two partial-attention carries over disjoint KV sets.
+
+    Associative + commutative; used by the distributed decode combine and by
+    tree-reductions of ring partials.
+    """
+    m = jnp.maximum(a.m, b.m)
+    ca = jnp.exp(a.m - m)
+    cb = jnp.exp(b.m - m)
+    return AttnCarry(
+        acc=a.acc * ca[..., None] + b.acc * cb[..., None],
+        m=m,
+        l=a.l * ca + b.l * cb,
+    )
+
+
+def _block_update(
+    q: jnp.ndarray,           # (B, Sq, H, D) — already repeated to H heads
+    k_blk: jnp.ndarray,       # (B, Bk, H, D)
+    v_blk: jnp.ndarray,       # (B, Bk, H, D)
+    mask_blk: jnp.ndarray,    # (B, Sq, Bk) bool
+    carry: AttnCarry,
+    *,
+    scale: float,
+    logits_soft_cap: float | None,
+) -> AttnCarry:
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k_blk.astype(jnp.float32)) * scale
+    if logits_soft_cap is not None:
+        s = logits_soft_cap * jnp.tanh(s / logits_soft_cap)
+    s = jnp.where(mask_blk[:, None, :, :], s, NEG_INF)          # (B,H,Sq,Bk)
+    s = jnp.moveaxis(s, 1, 2)                                    # (B,Sq,H,Bk)
+    m_new = jnp.maximum(carry.m, jnp.max(s, axis=-1))
+    # Explicitly zero masked entries: for fully-masked rows m_new stays at
+    # NEG_INF and exp(s - m_new) = exp(0) = 1 would leak mass.
+    p = jnp.where(jnp.moveaxis(mask_blk[:, None, :, :], 1, 2),
+                  jnp.exp(s - m_new[..., None]), 0.0)
+    corr = jnp.exp(carry.m - m_new)
+    l_new = carry.l * corr + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bqhk,bkhd->bqhd", p, v_blk.astype(jnp.float32))
+    acc_new = carry.acc * corr[..., None] + pv
+    return AttnCarry(acc_new, m_new, l_new)
+
+
+def attend_shard(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    carry: AttnCarry,
+    *,
+    q_positions: jnp.ndarray,         # (B, Sq) absolute
+    kv_positions: jnp.ndarray,        # (B, Skv) absolute
+    q_segment_ids: jnp.ndarray | None = None,
+    kv_segment_ids: jnp.ndarray | None = None,
+    causal: bool = True,
+    kv_block_size: int = 512,
+    logits_soft_cap: float | None = None,
+    skip_masked_blocks: bool = True,
+) -> AttnCarry:
+    """Fold one KV shard into the running carry, block by block.
+
+    This is both the BPT inner loop (shard == the whole local sequence) and
+    one ring step (shard == the KV block that just arrived via ppermute).
+
+    Causal block skip: blocks entirely in the future of every query are
+    skipped with ``lax.cond`` (zero-work branch) — this is what makes the
+    plain causal ring unbalanced and motivates the striped variant.
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    k = repeat_kv(k, h)
+    v = repeat_kv(v, h)
+    scale = d ** -0.5
+
+    blk = min(kv_block_size, skv)
+    if skv % blk != 0:  # fall back to one block if not divisible
+        blk = skv
+    n_blocks = skv // blk
+
+    k_blocks = k.reshape(b, n_blocks, blk, h, k.shape[-1])
+    v_blocks = v.reshape(b, n_blocks, blk, h, v.shape[-1])
+    kvp_blocks = kv_positions.reshape(b, n_blocks, blk)
+    if kv_segment_ids is not None:
+        kvseg_blocks = kv_segment_ids.reshape(b, n_blocks, blk)
+    else:
+        kvseg_blocks = jnp.zeros((b, n_blocks, blk), jnp.int32)
+
+    q_max_pos = jnp.max(q_positions, axis=-1)  # (B,)
+
+    def body(carry, xs):
+        k_blk, v_blk, kvp_blk, kvseg_blk = xs  # leading dim B
+        mask = jnp.ones((b, sq, blk), bool)
+        if causal:
+            mask = q_positions[:, :, None] >= kvp_blk[:, None, :]
+        if q_segment_ids is not None:
+            mask &= q_segment_ids[:, :, None] == kvseg_blk[:, None, :]
+
+        def compute(c):
+            return _block_update(q, k_blk, v_blk, mask, c,
+                                 scale=scale, logits_soft_cap=logits_soft_cap)
+
+        if causal and skip_masked_blocks:
+            # Entire block strictly in the future of all queries -> no work.
+            blk_min_pos = jnp.min(kvp_blk, axis=-1)              # (B,)
+            needed = jnp.any(q_max_pos >= blk_min_pos)
+            carry = jax.lax.cond(needed, compute, lambda c: c, carry)
+        else:
+            carry = compute(carry)
+        return carry, None
+
+    xs = (jnp.moveaxis(k_blocks, 1, 0), jnp.moveaxis(v_blocks, 1, 0),
+          jnp.moveaxis(kvp_blocks, 1, 0), jnp.moveaxis(kvseg_blocks, 1, 0))
+    carry, _ = jax.lax.scan(body, carry, xs)
+    return carry
+
+
+def blockwise_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_positions: jnp.ndarray | None = None,
+    kv_positions: jnp.ndarray | None = None,
+    q_segment_ids: jnp.ndarray | None = None,
+    kv_segment_ids: jnp.ndarray | None = None,
+    q_block_size: int = 512,
+    kv_block_size: int = 512,
+    logits_soft_cap: float | None = None,
+) -> jnp.ndarray:
+    """Memory-efficient exact attention (the single-device BPT attention).
+
+    Scans query blocks sequentially (bounding live memory at
+    O(q_block * kv_block)) and K/V blocks inside ``attend_shard``.
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(sq, dtype=jnp.int32), (b, sq)) + (skv - sq)
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(skv, dtype=jnp.int32), (b, skv))
+
+    qblk = min(q_block_size, sq)
+    if sq % qblk != 0:
+        qblk = sq
+    nq = sq // qblk
+
+    def one_q_block(args):
+        qb, qpb, qsb = args  # (B, qblk, H, D), (B, qblk), (B, qblk)|None
+        carry = init_carry(b, qblk, h, v.shape[-1])
+        carry = attend_shard(
+            qb, k, v, carry,
+            q_positions=qpb, kv_positions=kv_positions,
+            q_segment_ids=qsb if q_segment_ids is not None else None,
+            kv_segment_ids=kv_segment_ids,
+            causal=causal, kv_block_size=kv_block_size,
+            logits_soft_cap=logits_soft_cap,
+        )
+        return finalize_carry(carry, dtype=q.dtype)
+
+    q_blocks = jnp.moveaxis(q.reshape(b, nq, qblk, h, d), 1, 0)
+    qp_blocks = jnp.moveaxis(q_positions.reshape(b, nq, qblk), 1, 0)
+    if q_segment_ids is not None:
+        qs_blocks = jnp.moveaxis(q_segment_ids.reshape(b, nq, qblk), 1, 0)
+    else:
+        qs_blocks = jnp.zeros((nq, b, qblk), jnp.int32)
+
+    out_blocks = jax.lax.map(one_q_block, (q_blocks, qp_blocks, qs_blocks))
+    out = jnp.moveaxis(out_blocks, 0, 1).reshape(b, sq, h, v.shape[-1])
+    return out
+
+
+def blockwise_ffn(ffn_fn, x: jnp.ndarray, chunk_size: int = 512) -> jnp.ndarray:
+    """Apply a token-local FFN over sequence chunks (BPT feedforward).
+
+    ``ffn_fn`` maps (B, C, D) -> (B, C, D) and must be token-local (true for
+    MLP/SwiGLU/MoE). Bounds the live (C x d_ff) intermediate.
+    """
+    b, s, d = x.shape
+    c = min(chunk_size, s)
+    if s % c != 0:
+        return ffn_fn(x)
+    n = s // c
+    xs = jnp.moveaxis(x.reshape(b, n, c, d), 1, 0)
+    ys = jax.lax.map(ffn_fn, xs)
+    return jnp.moveaxis(ys, 0, 1).reshape(b, s, d)

@@ -1,0 +1,102 @@
+"""Decode-time attention: single new token vs a (possibly ring-sharded) cache.
+
+Paper §5 "Scaling Inference": million-length decoding with the KV cache
+sequence-sharded across devices (their v4-128 setup: 32-way tensor x 4-way
+sequence/ring). The decode combine here is the log-sum-exp merge of partial
+attention over disjoint KV shards — the same algebra as `combine_carries`,
+expressed as a psum-style reduction so it lowers to one collective instead of
+a P2P ring (at decode there is no per-step compute to overlap with, so a
+direct combine is strictly better; noted in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import NEG_INF, repeat_kv
+
+
+def decode_attend_local(
+    q: jnp.ndarray,            # (B, 1, H, D)
+    k_cache: jnp.ndarray,      # (B, L_local, Hkv, D)
+    v_cache: jnp.ndarray,      # (B, L_local, Hkv, D)
+    *,
+    kv_positions: jnp.ndarray,  # (B, L_local) absolute; -1 marks empty slots
+    q_position: jnp.ndarray,    # (B,) absolute position of the new token
+    logits_soft_cap: float | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Partial attention over the local cache shard.
+
+    Returns (acc, m, l): un-normalized value sum (B,1,H,D) and softmax stats
+    (B,1,H) — ready for cross-shard combine.
+    """
+    b, _, h, d = q.shape
+    k = repeat_kv(k_cache, h).astype(jnp.float32)
+    v = repeat_kv(v_cache, h).astype(jnp.float32)
+    scale = d ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bqhk", q.astype(jnp.float32), k) * scale  # (B,1,H,L)
+    if logits_soft_cap is not None:
+        s = logits_soft_cap * jnp.tanh(s / logits_soft_cap)
+    valid = (kv_positions >= 0) & (kv_positions <= q_position[:, None])  # (B,L)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                         # (B,1,H)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[:, None, None, :], p, 0.0)  # kill exp(NEG_INF - NEG_INF)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bqhk,bkhd->bqhd", p, v)
+    return acc, m, l
+
+
+def combine_decode_partials(acc, m, l, axis_name: str) -> jnp.ndarray:
+    """Merge partial decode attention across a mesh axis (inside shard_map).
+
+    Uses the numerically-safe global-max trick: one pmax + two psums.
+    """
+    m_glob = jax.lax.pmax(m, axis_name)                     # (B,1,H)
+    corr = jnp.exp(m - m_glob)
+    acc = jax.lax.psum(acc * corr[..., None], axis_name)
+    l = jax.lax.psum(l * corr, axis_name)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out
+
+
+def decode_attention_unsharded(
+    q, k_cache, v_cache, *, kv_positions, q_position, logits_soft_cap=None,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """Single-device decode attention (oracle / small-context path)."""
+    acc, m, l = decode_attend_local(
+        q, k_cache, v_cache, kv_positions=kv_positions, q_position=q_position,
+        logits_soft_cap=logits_soft_cap)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(out_dtype or q.dtype)
+
+
+def cache_update(
+    k_cache: jnp.ndarray,       # (B, L, Hkv, D)
+    v_cache: jnp.ndarray,
+    kv_positions: jnp.ndarray,  # (B, L)
+    k_new: jnp.ndarray,         # (B, 1, Hkv, D)
+    v_new: jnp.ndarray,
+    position: jnp.ndarray,      # (B,) absolute position to write
+    *,
+    local_offset: int = 0,
+    local_len: int | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Write the new K/V at ``position``; no-op on shards not owning it.
+
+    With a ring-sharded cache, device i owns absolute positions
+    [local_offset, local_offset + local_len); the write lowers to a
+    select-style masked update which GSPMD keeps local.
+    """
+    b, L = kv_positions.shape
+    if local_len is None:
+        local_len = L
+    local_idx = position - local_offset                      # (B,)
+    owns = (local_idx >= 0) & (local_idx < local_len)
+    idx = jnp.clip(local_idx, 0, L - 1)
+    one_hot = jax.nn.one_hot(idx, L, dtype=k_cache.dtype) * owns[:, None]  # (B,L)
+    k_cache = k_cache * (1 - one_hot[..., None, None]) + one_hot[..., None, None] * k_new
+    v_cache = v_cache * (1 - one_hot[..., None, None]) + one_hot[..., None, None] * v_new
+    new_pos = jnp.where(one_hot > 0, position[:, None], kv_positions)
+    return k_cache, v_cache, new_pos

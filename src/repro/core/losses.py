@@ -1,0 +1,75 @@
+"""Loss functions: weighted cross-entropy + modality loss balancing.
+
+Paper contributions covered here:
+  - "loss weighting to balance language and vision" (§1, §4): per-token
+    modality weights (text vs vision tokens) applied on top of packing
+    weights.
+  - packed-loss re-weighting (paper §4.2) via `packing.packed_loss_weights`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy_logits(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Per-token CE, f32. logits (B,S,V), labels (B,S) -> (B,S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    return logz - gold
+
+
+def weighted_cross_entropy(
+    logits: jnp.ndarray,
+    labels: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    normalize_by: str = "weight_sum",  # "weight_sum" | "examples" | "tokens"
+    num_examples: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, dict]:
+    """Weighted mean CE.
+
+    With `packed_loss_weights(mode="masked")` each segment's weights sum to 1,
+    so normalize_by="examples" reproduces the non-packed + padded regime
+    exactly: loss = mean over examples of (mean over that example's tokens).
+    """
+    ce = cross_entropy_logits(logits, labels)
+    total = jnp.sum(ce * weights)
+    if normalize_by == "weight_sum":
+        denom = jnp.maximum(jnp.sum(weights), 1e-6)
+    elif normalize_by == "examples":
+        assert num_examples is not None
+        denom = jnp.maximum(num_examples, 1.0)
+    elif normalize_by == "tokens":
+        denom = jnp.maximum(jnp.sum(weights > 0), 1)
+    else:
+        raise ValueError(normalize_by)
+    loss = total / denom
+    metrics = {
+        "loss": loss,
+        "ce_sum": total,
+        "weight_sum": jnp.sum(weights),
+        "loss_tokens": jnp.sum(weights > 0).astype(jnp.float32),
+    }
+    return loss, metrics
+
+
+def modality_weights(
+    modality_ids: jnp.ndarray,
+    *,
+    text_weight: float = 1.0,
+    vision_weight: float = 1.0,
+) -> jnp.ndarray:
+    """Per-token modality loss weights (paper: balance language vs vision).
+
+    modality_ids: (B, S) int — 0 = text, 1 = vision (VQGAN codes / delimiters).
+    """
+    return jnp.where(modality_ids == 0, text_weight, vision_weight).astype(jnp.float32)
+
+
+def z_loss(logits: jnp.ndarray, weights: jnp.ndarray, coeff: float = 1e-4) -> jnp.ndarray:
+    """Stabilizer penalizing large log-partition (standard for long training)."""
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    return coeff * jnp.sum((logz ** 2) * weights) / jnp.maximum(jnp.sum(weights), 1e-6)

@@ -1,0 +1,73 @@
+"""Masked sequence packing (paper §4.2 + Table 10).
+
+Two ingredients, both of which the paper ablates as crucial:
+
+1. **Attention masking**: packed examples carry ``segment_ids``; attention is
+   restricted to the own segment (enforced in attention/blockwise/ring paths
+   via the segment-id arguments).
+
+2. **Loss re-weighting**: with naive packing, a mean over loss tokens weights
+   every *token* equally, so examples with many loss tokens (densely packed
+   short chats) dominate examples with few (long-context QA has <1% loss tokens).
+   The paper re-weights "to make computation identical to training in a
+   non-packed + padding training regime": every *example* (segment)
+   contributes equally, i.e. token weight = loss_mask / tokens_in_segment,
+   then mean over segments.
+
+This module computes masks/weights; the data pipeline produces the packed
+batches; `losses.py` consumes the weights.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PAD_SEGMENT_ID = 0  # convention: segment id 0 == padding, never receives loss
+
+
+def segment_token_counts(segment_ids: jnp.ndarray, loss_mask: jnp.ndarray,
+                         max_segments: int) -> jnp.ndarray:
+    """Per-segment count of loss tokens. (B, S) -> (B, max_segments)."""
+    one_hot = jnp.equal(segment_ids[..., None],
+                        jnp.arange(max_segments)[None, None, :])
+    return jnp.sum(one_hot * loss_mask[..., None], axis=1)
+
+
+def packed_loss_weights(
+    segment_ids: jnp.ndarray,
+    loss_mask: jnp.ndarray,
+    *,
+    max_segments: int,
+    mode: str = "masked",  # "masked" (paper) | "naive" (ablation baseline)
+) -> jnp.ndarray:
+    """Token loss weights, shape (B, S), zero on pad/non-loss tokens.
+
+    masked: weight = loss_mask / n_loss_tokens(segment) — each packed example
+            contributes 1.0 total, exactly as if it were its own padded row.
+    naive:  weight = loss_mask — each token contributes equally (the paper's
+            degraded baseline, Table 10).
+    """
+    loss_mask = loss_mask.astype(jnp.float32)
+    not_pad = (segment_ids != PAD_SEGMENT_ID).astype(jnp.float32)
+    loss_mask = loss_mask * not_pad
+    if mode == "naive":
+        return loss_mask
+    if mode != "masked":
+        raise ValueError(f"unknown packing loss mode: {mode}")
+    counts = segment_token_counts(segment_ids, loss_mask, max_segments)  # (B, G)
+    counts = jnp.maximum(counts, 1.0)
+    per_token_count = jnp.take_along_axis(
+        counts, segment_ids.astype(jnp.int32), axis=1)  # (B, S)
+    return loss_mask / per_token_count
+
+
+def num_examples(segment_ids: jnp.ndarray) -> jnp.ndarray:
+    """Number of real (non-pad) segments in the batch (scalar f32).
+
+    Counts segment-start boundaries; exact because the packer lays segments
+    out contiguously.
+    """
+    b, _ = segment_ids.shape
+    is_first = jnp.concatenate(
+        [jnp.ones((b, 1), bool), segment_ids[:, 1:] != segment_ids[:, :-1]], axis=1)
+    real = segment_ids != PAD_SEGMENT_ID
+    return jnp.sum(jnp.logical_and(is_first, real).astype(jnp.float32))

@@ -1,0 +1,88 @@
+"""Sequence parallelism for recurrent (SSM / linear-attention) layers.
+
+The paper's RingAttention shards the *sequence* and exchanges K/V blocks.
+For attention-free layers (RWKV6) and Mamba2 blocks (zamba2) the analogous
+sequence-parallel primitive is **cross-device state handoff**: each device
+scans its local chunk, then the tiny recurrent state is composed across
+devices.
+
+All recurrences we support are diagonal-affine in the state:
+
+    S_out = D ⊙ S_in + b
+
+where D is the total elementwise decay across the local chunk and b the
+locally-accumulated state. Composition of such maps is associative, so the
+prefix each device needs is computed from one ``all_gather`` of (D, b)
+(size = a few MB; one hop instead of an n-step ppermute chain — at these
+sizes latency dominates, see EXPERIMENTS.md §Perf) followed by a local fold.
+
+Models then add the initial-state correction to their chunk outputs:
+``y = y_zero + correction(S_in)`` with a model-specific linear ``correction``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _axis_tuple(axis_name):
+    return tuple(axis_name) if isinstance(axis_name, (tuple, list)) else (axis_name,)
+
+
+def exclusive_state_prefix(
+    decay_total: jnp.ndarray,   # D_local: elementwise decay over the local chunk
+    state_incr: jnp.ndarray,    # b_local: state accumulated by the local chunk
+    *,
+    axis_name,
+) -> jnp.ndarray:
+    """Initial state S_in for this device = fold of all devices before it.
+
+    Runs inside shard_map. Returns zeros on device 0 of the (linearized) ring.
+    """
+    axes = _axis_tuple(axis_name)
+    # Linearized index across (possibly multiple) axes, outer-major.
+    my_idx = jnp.int32(0)
+    n = 1
+    for ax in axes:
+        sz = jax.lax.psum(1, ax)
+        my_idx = my_idx * sz + jax.lax.axis_index(ax)
+        n *= sz
+
+    # Gather (D_i, b_i) for all ring members. With multiple axes, gather along
+    # each in order so index 0 of the leading dim is outer-major linearized.
+    Ds, bs = decay_total, state_incr
+    for ax in reversed(axes):
+        Ds = jax.lax.all_gather(Ds, ax)
+        bs = jax.lax.all_gather(bs, ax)
+    Ds = Ds.reshape((n,) + decay_total.shape)
+    bs = bs.reshape((n,) + state_incr.shape)
+
+    def body(i, S):
+        take = i < my_idx
+        S_new = Ds[i] * S + bs[i]
+        return jnp.where(take, S_new, S)
+
+    S0 = jnp.zeros_like(state_incr)
+    return jax.lax.fori_loop(0, n, body, S0)
+
+
+def seq_parallel_recurrence(
+    local_scan_fn,
+    correction_fn,
+    x_local,
+    *,
+    axis_name,
+):
+    """Two-phase sequence-parallel recurrence.
+
+    ``local_scan_fn(x_local)`` -> ``(y_zero, decay_total, state_incr)`` scans
+    the local chunk with zero initial state and reports the chunk's
+    diagonal-affine state map. ``correction_fn(x_local, S_in)`` -> ``dy`` adds
+    the (linear) contribution of the true initial state to the outputs.
+
+    Returns ``(y, S_out)`` where S_out is this device's final state.
+    """
+    y_zero, D, b = local_scan_fn(x_local)
+    S_in = exclusive_state_prefix(D, b, axis_name=axis_name)
+    y = y_zero + correction_fn(x_local, S_in)
+    return y, D * S_in + b

@@ -1,0 +1,11 @@
+"""Data pipeline: synthetic stand-ins for the paper's datasets + the real
+packing / interleaving / QA-generation machinery.
+
+The *generators* are synthetic (no Books3/LAION/WebVid in this environment)
+but match the datasets' shape statistics; the *mechanisms* — masked sequence
+packing, loss re-weighting, vision-token interleave, model-generated QA,
+mixture ratios — are the paper's and fully real.
+"""
+from repro.data.vocab import Vocab, build_vocab
+from repro.data.packing import pack_examples, Example, PackedBatch
+from repro.data.pipeline import MixtureSpec, data_iterator

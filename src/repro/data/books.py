@@ -1,0 +1,69 @@
+"""Synthetic Books3 stand-in (paper §3.2).
+
+Generates long "documents" whose token statistics mimic natural text: a
+Zipfian unigram distribution with local repetition (burstiness), so that a
+model trained on it shows a real, decreasing loss curve. Document lengths are
+drawn log-uniformly inside the stage's filter band — the paper filters Books3
+by length per stage (10K-100K for 32K training, ..., 1M+ for 1M training).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data.vocab import Vocab
+
+# Paper Table 1: Books3 length filter per context stage.
+STAGE_FILTERS = {
+    32_768: (10_000, 100_000),
+    131_072: (100_000, 200_000),
+    262_144: (200_000, 500_000),
+    524_288: (500_000, 1_000_000),
+    1_048_576: (1_000_000, 2_000_000),
+}
+
+
+def zipf_logits(n: int, alpha: float = 1.1) -> np.ndarray:
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    p = ranks ** (-alpha)
+    return p / p.sum()
+
+
+@dataclasses.dataclass
+class BookSampler:
+    """Draws documents of tokens in the vocab's text range."""
+
+    vocab: Vocab
+    min_len: int
+    max_len: int
+    alpha: float = 1.1
+    burst_p: float = 0.3          # P(repeat a recent token) — burstiness
+    burst_window: int = 32
+    seed: int = 0
+
+    def __post_init__(self):
+        self.rng = np.random.default_rng(self.seed)
+        self._probs = zipf_logits(self.vocab.text_size, self.alpha)
+
+    def sample_length(self) -> int:
+        lo, hi = np.log(self.min_len), np.log(self.max_len)
+        return int(np.exp(self.rng.uniform(lo, hi)))
+
+    def sample_document(self, length: int | None = None) -> np.ndarray:
+        n = length or self.sample_length()
+        base = self.rng.choice(self.vocab.text_size, size=n, p=self._probs)
+        # Burstiness: with prob burst_p, copy a token from the recent window.
+        burst = self.rng.random(n) < self.burst_p
+        offsets = self.rng.integers(1, self.burst_window + 1, size=n)
+        src = np.maximum(np.arange(n) - offsets, 0)
+        for i in range(1, n):
+            if burst[i]:
+                base[i] = base[src[i]]
+        return base.astype(np.int32)
+
+
+def stage_sampler(vocab: Vocab, context_len: int, seed: int = 0) -> BookSampler:
+    lo, hi = STAGE_FILTERS.get(context_len, (max(context_len // 4, 256),
+                                             context_len * 2))
+    return BookSampler(vocab, min_len=lo, max_len=hi, seed=seed)

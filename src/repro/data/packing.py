@@ -1,0 +1,129 @@
+"""Sequence packer producing masked-packing training batches (paper §4.2).
+
+Greedy first-fit packing of variable-length examples into fixed-length rows.
+Each packed row carries:
+
+    tokens       (S,) int32
+    labels       (S,) int32   — next-token targets (shift inside each segment)
+    segment_ids  (S,) int32   — 0 = pad; packed examples numbered from 1
+    positions    (S,) int32   — position *within* the segment (restart at 0)
+    loss_mask    (S,) bool    — candidate loss tokens (example's own mask,
+                                shifted; never crosses a segment boundary)
+    modality_ids (S,) int32   — 0 text / 1 vision
+
+Attention masking happens downstream from segment_ids; loss re-weighting from
+``core.packing.packed_loss_weights`` over (segment_ids, loss_mask).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data.vocab import Vocab
+
+
+@dataclasses.dataclass
+class Example:
+    tokens: np.ndarray                    # (n,) int32
+    loss_mask: np.ndarray | None = None   # (n,) bool; None = loss on all
+    modality_ids: np.ndarray | None = None
+
+    def __len__(self) -> int:
+        return len(self.tokens)
+
+
+@dataclasses.dataclass
+class PackedBatch:
+    tokens: np.ndarray        # (B, S)
+    labels: np.ndarray        # (B, S)
+    segment_ids: np.ndarray   # (B, S)
+    positions: np.ndarray     # (B, S)
+    loss_mask: np.ndarray     # (B, S) bool
+    modality_ids: np.ndarray  # (B, S)
+    num_segments: int
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _emit_row(vocab: Vocab, seq_len: int, row_examples: list[Example],
+              seg_offset: int):
+    tokens = np.full(seq_len, vocab.pad, np.int32)
+    labels = np.full(seq_len, vocab.pad, np.int32)
+    seg = np.zeros(seq_len, np.int32)
+    pos = np.zeros(seq_len, np.int32)
+    lmask = np.zeros(seq_len, bool)
+    mod = np.zeros(seq_len, np.int32)
+    cur = 0
+    for j, ex in enumerate(row_examples):
+        n = len(ex)
+        sl = slice(cur, cur + n)
+        tokens[sl] = ex.tokens
+        # labels[i] = tokens[i+1] within the segment; last token gets pad
+        labels[cur:cur + n - 1] = ex.tokens[1:]
+        labels[cur + n - 1] = vocab.pad
+        seg[sl] = seg_offset + j + 1
+        pos[sl] = np.arange(n)
+        m = np.ones(n, bool) if ex.loss_mask is None else ex.loss_mask.copy()
+        # loss_mask marks *label* positions: token i predicts token i+1, so
+        # shift the example mask left by one; final token predicts nothing.
+        lm = np.zeros(n, bool)
+        lm[:n - 1] = m[1:]
+        lmask[sl] = lm
+        if ex.modality_ids is not None:
+            mod[sl] = ex.modality_ids
+        cur += n
+    return tokens, labels, seg, pos, lmask, mod, len(row_examples)
+
+
+def pack_examples(
+    examples: list[Example],
+    *,
+    vocab: Vocab,
+    seq_len: int,
+    batch_rows: int,
+    truncate: bool = True,
+) -> PackedBatch:
+    """Greedy sequential packing into ``batch_rows`` rows of ``seq_len``.
+
+    Examples longer than seq_len are truncated (truncate=True) or rejected.
+    Stops when rows are full; unused examples are dropped (callers stream).
+    """
+    rows = []
+    cur_row: list[Example] = []
+    cur_len = 0
+    seg_total = 0
+    it = iter(examples)
+    while len(rows) < batch_rows:
+        ex = next(it, None)
+        if ex is None:
+            break
+        if len(ex) > seq_len:
+            if not truncate:
+                continue
+            ex = Example(ex.tokens[:seq_len],
+                         None if ex.loss_mask is None else ex.loss_mask[:seq_len],
+                         None if ex.modality_ids is None
+                         else ex.modality_ids[:seq_len])
+        if cur_len + len(ex) > seq_len:
+            rows.append(_emit_row(vocab, seq_len, cur_row, seg_total))
+            seg_total += len(cur_row)
+            cur_row, cur_len = [], 0
+        cur_row.append(ex)
+        cur_len += len(ex)
+    while len(rows) < batch_rows:
+        rows.append(_emit_row(vocab, seq_len, cur_row, seg_total))
+        seg_total += len(cur_row)
+        cur_row, cur_len = [], 0
+
+    fields = list(zip(*rows))
+    return PackedBatch(
+        tokens=np.stack(fields[0]),
+        labels=np.stack(fields[1]),
+        segment_ids=np.stack(fields[2]),
+        positions=np.stack(fields[3]),
+        loss_mask=np.stack(fields[4]),
+        modality_ids=np.stack(fields[5]),
+        num_segments=int(sum(fields[6])),
+    )

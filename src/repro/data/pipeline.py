@@ -1,0 +1,163 @@
+"""Batch iterator assembling the paper's training mixtures.
+
+Paper mixtures:
+  * Stage I (LWM-Text): Books3 documents, length-filtered per context stage.
+  * Chat fine-tune: UltraChat : custom QA  ≈ 7 : 3, UltraChat pre-packed and
+    kept separate from QA rows (§3.3).
+  * Stage II LWM-1K: text-image pairs (+16% pure text).
+  * Stage II LWM-8K: 50/50 image / 30-frame video (+16% text).
+  * LWM-Chat stages: 25% per downstream task (text-image gen, image
+    understanding, text-video gen, video understanding).
+
+Each iterator yields dicts of device-ready numpy arrays:
+tokens/labels/segment_ids/positions/loss_weights (+ modality_ids).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.packing import packed_loss_weights
+from repro.data.books import BookSampler, stage_sampler
+from repro.data.packing import Example, PackedBatch, pack_examples
+from repro.data.qa import ChatSampler, QAGenerator
+from repro.data.vision import VisionTextSampler
+from repro.data.vocab import Vocab
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MixtureSpec:
+    """Sampling weights over named example streams."""
+    weights: dict[str, float]
+
+    def normalized(self) -> dict[str, float]:
+        z = sum(self.weights.values())
+        return {k: v / z for k, v in self.weights.items()}
+
+
+# Paper mixture presets -------------------------------------------------------
+
+TEXT_STAGE = MixtureSpec({"books": 1.0})
+CHAT_FINETUNE = MixtureSpec({"ultrachat": 0.7, "qa": 0.3})
+LWM_1K = MixtureSpec({"text_image": 0.84, "books": 0.16})
+LWM_8K = MixtureSpec({"text_image": 0.42, "text_video": 0.42, "books": 0.16})
+LWM_CHAT = MixtureSpec({"text_image": 0.25, "image_understand": 0.25,
+                        "text_video": 0.25, "video_understand": 0.25})
+
+
+def finalize_batch(batch: PackedBatch, *, packing_mode: str = "masked",
+                   max_segments: int | None = None) -> dict:
+    """PackedBatch -> model-input dict with computed loss weights."""
+    max_segments = max_segments or batch.num_segments + 2
+    weights = np.asarray(packed_loss_weights(
+        jnp.asarray(batch.segment_ids), jnp.asarray(batch.loss_mask),
+        max_segments=max_segments, mode=packing_mode))
+    return {
+        "tokens": batch.tokens,
+        "labels": batch.labels,
+        "segment_ids": batch.segment_ids,
+        "positions": batch.positions,
+        "loss_weights": weights.astype(np.float32),
+        "modality_ids": batch.modality_ids,
+    }
+
+
+class StreamSet:
+    """All example streams over one vocab, lazily constructed."""
+
+    def __init__(self, vocab: Vocab, *, seq_len: int, seed: int = 0,
+                 tokens_per_frame: int = 256):
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.rng = np.random.default_rng(seed)
+        self._books = stage_sampler(vocab, seq_len, seed=seed)
+        # Reduced-scale guard: keep book docs packable at example scale.
+        if seq_len <= 8192:
+            self._books = BookSampler(vocab, min_len=seq_len // 4,
+                                      max_len=seq_len, seed=seed)
+        self._qa = QAGenerator(vocab, seed=seed + 1)
+        self._chat = ChatSampler(vocab, seed=seed + 2)
+        has_vision = vocab.codebook_size > 0
+        self._vision = (VisionTextSampler(vocab, seed=seed + 3,
+                                          tokens_per_frame=tokens_per_frame)
+                        if has_vision else None)
+
+    def sample(self, stream: str) -> Example:
+        v = self.vocab
+        if stream == "books":
+            toks = self._books.sample_document()
+            return Example(tokens=toks[: self.seq_len])
+        if stream == "qa":
+            ex = self._qa.build(self.seq_len)
+            return Example(ex.tokens, ex.loss_mask)
+        if stream == "ultrachat":
+            # Pre-pack dialogues to the training length (paper §3.3).
+            toks, mask = [], []
+            total = 0
+            while total < self.seq_len:
+                d = self._chat.dialogue()
+                toks.append(d.tokens)
+                mask.append(d.loss_mask)
+                total += len(d.tokens)
+            t = np.concatenate(toks)[: self.seq_len]
+            m = np.concatenate(mask)[: self.seq_len]
+            return Example(t, m)
+        if stream == "text_image":
+            t, mod = self._vision.image_pair()
+            return Example(t, None, mod)
+        if stream == "text_video":
+            frames = min(30, max((self.seq_len - 64) //
+                                 (self._vision.tokens_per_frame + 1), 1))
+            t, mod = self._vision.video_pair(num_frames=frames)
+            return Example(t, None, mod)
+        if stream in ("image_understand", "video_understand"):
+            # chat format: vision block + question (no loss) + answer (loss)
+            frames = 1 if stream == "image_understand" else min(
+                8, max((self.seq_len - 128) //
+                       (self._vision.tokens_per_frame + 1), 1))
+            t, mod = self._vision.pair(num_frames=frames, swap_prob=0.0)
+            q = self._chat.books.sample_document()
+            a = self._chat.books.sample_document()
+            toks = np.concatenate([t, q, a])
+            mask = np.concatenate([np.zeros(len(t) + len(q), bool),
+                                   np.ones(len(a), bool)])
+            modal = np.concatenate([mod, np.zeros(len(q) + len(a), np.int32)])
+            return Example(toks, mask, modal)
+        raise ValueError(f"unknown stream: {stream}")
+
+
+def data_iterator(
+    vocab: Vocab,
+    mixture: MixtureSpec,
+    *,
+    seq_len: int,
+    batch_rows: int,
+    packing_mode: str = "masked",
+    seed: int = 0,
+    tokens_per_frame: int = 256,
+    max_segments: int | None = None,
+) -> Iterator[dict]:
+    """Infinite iterator of packed training batches for a mixture."""
+    streams = StreamSet(vocab, seq_len=seq_len, seed=seed,
+                        tokens_per_frame=tokens_per_frame)
+    rng = np.random.default_rng(seed + 7)
+    names = list(mixture.normalized().keys())
+    probs = np.array(list(mixture.normalized().values()))
+
+    def example_stream():
+        while True:
+            yield streams.sample(str(rng.choice(names, p=probs)))
+
+    gen = example_stream()
+    # Conservative static bound on segments per batch for weight computation.
+    default_max_seg = max_segments or batch_rows * max(seq_len // 32, 4)
+    while True:
+        batch = pack_examples(gen, vocab=vocab, seq_len=seq_len,
+                              batch_rows=batch_rows)
+        yield finalize_batch(batch, packing_mode=packing_mode,
+                             max_segments=min(default_max_seg,
+                                              batch.num_segments + 2))

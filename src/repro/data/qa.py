@@ -1,0 +1,118 @@
+"""Model-generated QA for long-context chat (paper §3.3).
+
+Paper mechanism: chunk Books3 documents into 1000-token chunks, have a
+short-context model generate one QA pair per chunk, concatenate adjacent
+chunks up to the context length, and append the relevant QA pairs at the end
+in chat form — loss only on the answers (<1% of tokens per sequence).
+
+We simulate the *generator model* with a deterministic extractive scheme
+(the "QA pair about the paragraph" is: question = marker + the chunk's
+3-token signature drawn from its content; answer = the 8 tokens following the
+signature inside the chunk). This preserves the two properties that matter
+for the mechanism: answers are recoverable only by attending to the right
+chunk, and the loss-token fraction is tiny.
+
+Also provides the UltraChat stand-in: densely packed short chat rows (high
+loss-token fraction), pre-packed to the training length and kept separate
+from QA rows — the paper found separating the two crucial (§3.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data.books import BookSampler
+from repro.data.vocab import Vocab
+
+CHUNK = 1000
+SIG_LEN = 3
+ANS_LEN = 8
+
+
+@dataclasses.dataclass
+class QAExample:
+    tokens: np.ndarray
+    loss_mask: np.ndarray     # True on answer tokens only
+
+
+class QAGenerator:
+    def __init__(self, vocab: Vocab, seed: int = 0):
+        self.vocab = vocab
+        t = vocab.text_size
+        self.q_marker = np.array([t - 6, t - 7], np.int32)   # "Question:"
+        self.a_marker = np.array([t - 8], np.int32)          # "Answer:"
+        self.books = BookSampler(vocab, min_len=CHUNK * 4, max_len=CHUNK * 12,
+                                 seed=seed)
+        self.rng = np.random.default_rng(seed + 17)
+
+    def qa_for_chunk(self, chunk: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(question tokens, answer tokens) — extractive simulation."""
+        start = int(self.rng.integers(0, len(chunk) - SIG_LEN - ANS_LEN))
+        sig = chunk[start:start + SIG_LEN]
+        ans = chunk[start + SIG_LEN:start + SIG_LEN + ANS_LEN]
+        q = np.concatenate([self.q_marker, sig])
+        a = np.concatenate([self.a_marker, ans])
+        return q.astype(np.int32), a.astype(np.int32)
+
+    def build(self, seq_len: int, *, qa_pairs: int = 4) -> QAExample:
+        """One long-context QA training sequence of exactly ``seq_len``."""
+        tail_len = qa_pairs * (len(self.q_marker) + SIG_LEN +
+                               len(self.a_marker) + ANS_LEN)
+        ctx_len = seq_len - tail_len
+        # Concatenate document chunks to fill the context.
+        ctx_parts, total = [], 0
+        while total < ctx_len:
+            doc = self.books.sample_document()
+            ctx_parts.append(doc)
+            total += len(doc)
+        context = np.concatenate(ctx_parts)[:ctx_len]
+
+        n_chunks = max(ctx_len // CHUNK, 1)
+        chosen = self.rng.choice(n_chunks, size=min(qa_pairs, n_chunks),
+                                 replace=False)
+        tail_toks, tail_mask = [], []
+        for c in chosen:
+            chunk = context[c * CHUNK:(c + 1) * CHUNK]
+            if len(chunk) < SIG_LEN + ANS_LEN + 1:
+                chunk = context[:CHUNK]
+            q, a = self.qa_for_chunk(chunk)
+            tail_toks += [q, a]
+            tail_mask += [np.zeros(len(q), bool),
+                          # loss on the answer *content*, not the marker
+                          np.concatenate([np.zeros(len(self.a_marker), bool),
+                                          np.ones(ANS_LEN, bool)])]
+        tail = np.concatenate(tail_toks)
+        mask_tail = np.concatenate(tail_mask)
+        pad = seq_len - ctx_len - len(tail)
+        if pad > 0:  # fewer pairs than requested fit
+            tail = np.concatenate([tail, np.full(pad, self.vocab.pad, np.int32)])
+            mask_tail = np.concatenate([mask_tail, np.zeros(pad, bool)])
+
+        tokens = np.concatenate([context, tail]).astype(np.int32)
+        loss_mask = np.concatenate([np.zeros(ctx_len, bool), mask_tail])
+        return QAExample(tokens=tokens, loss_mask=loss_mask)
+
+
+class ChatSampler:
+    """UltraChat stand-in: short densely-packed chat turns.
+
+    Every assistant turn carries loss — high loss-token fraction, the
+    opposite regime from QAGenerator (paper §3.3 separates the two).
+    """
+
+    def __init__(self, vocab: Vocab, seed: int = 0):
+        self.vocab = vocab
+        self.books = BookSampler(vocab, min_len=8, max_len=64, seed=seed + 31)
+        self.rng = np.random.default_rng(seed + 41)
+
+    def dialogue(self, turns: int | None = None) -> QAExample:
+        turns = turns or int(self.rng.integers(2, 6))
+        toks, mask = [], []
+        for _ in range(turns):
+            user = self.books.sample_document()
+            asst = self.books.sample_document()
+            toks += [user, asst]
+            mask += [np.zeros(len(user), bool), np.ones(len(asst), bool)]
+        t = np.concatenate(toks).astype(np.int32)
+        return QAExample(tokens=t, loss_mask=np.concatenate(mask))

@@ -1,0 +1,95 @@
+"""Vision-token stream construction (paper §4.1, Figure 4).
+
+VQGAN tokenizer is a **stub** (task carve-out): ``frame_codes`` returns the
+256 discrete codes for a frame from a deterministic hash of a synthetic frame
+id, instead of running a real encoder. Everything downstream of the tokenizer
+is the paper's real machinery:
+
+  * 256 codes per frame; videos = concatenated per-frame codes;
+  * <eof> after every non-final frame, <eov> after the last frame / a single
+    image (these live in the codebook-extended vocab, paper Fig 11 notes the
+    loss spike when they were introduced);
+  * <vision> ... </vision> text-token delimiters around every vision block;
+  * random modality-order swap: text-image and image-text both trained
+    (image captioning, text-to-image, unconditional generation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data.books import BookSampler
+from repro.data.vocab import Vocab
+
+
+def frame_codes(vocab: Vocab, frame_id: int, tokens_per_frame: int = 256,
+                seed: int = 0) -> np.ndarray:
+    """Deterministic VQGAN-stub: 'tokenize' frame #frame_id -> codes.
+
+    Adjacent frame ids share most codes (temporal coherence stand-in): frame
+    f+1 re-draws only ~25% of frame f's codes.
+    """
+    base_rng = np.random.default_rng(seed)
+    codes = base_rng.integers(0, vocab.codebook_size, size=tokens_per_frame)
+    f_rng = np.random.default_rng(seed * 7919 + 1)
+    for _ in range(frame_id):
+        resample = f_rng.random(tokens_per_frame) < 0.25
+        fresh = f_rng.integers(0, vocab.codebook_size, size=tokens_per_frame)
+        codes = np.where(resample, fresh, codes)
+    return (codes + vocab.vision_start).astype(np.int32)
+
+
+def vision_block(vocab: Vocab, num_frames: int, *, first_frame: int = 0,
+                 tokens_per_frame: int = 256, seed: int = 0) -> np.ndarray:
+    """<vision> f0 <eof> f1 <eof> ... f_last <eov> </vision> token stream."""
+    parts = [np.array([vocab.vision_open], np.int32)]
+    for i in range(num_frames):
+        parts.append(frame_codes(vocab, first_frame + i, tokens_per_frame, seed))
+        parts.append(np.array(
+            [vocab.eof if i < num_frames - 1 else vocab.eov], np.int32))
+    parts.append(np.array([vocab.vision_close], np.int32))
+    return np.concatenate(parts)
+
+
+@dataclasses.dataclass
+class VisionTextSampler:
+    """text-image / text-video pair generator (LAION / WebVid stand-ins)."""
+
+    vocab: Vocab
+    tokens_per_frame: int = 256
+    caption_len: tuple[int, int] = (8, 48)
+    seed: int = 0
+
+    def __post_init__(self):
+        self.rng = np.random.default_rng(self.seed)
+        self.text = BookSampler(self.vocab, *self.caption_len, seed=self.seed + 3)
+
+    def caption(self) -> np.ndarray:
+        n = int(self.rng.integers(*self.caption_len))
+        return self.text.sample_document(n)
+
+    def pair(self, *, num_frames: int = 1, swap_prob: float = 0.5):
+        """(tokens, modality_ids) — caption+vision, order randomly swapped.
+
+        modality_ids: 0 = text token, 1 = vision token (code or <eof>/<eov>).
+        The <vision>/</vision> delimiters are *text* tokens (paper §4.1).
+        """
+        cap = self.caption()
+        vis = vision_block(self.vocab, num_frames,
+                           first_frame=int(self.rng.integers(0, 1000)),
+                           tokens_per_frame=self.tokens_per_frame,
+                           seed=self.seed)
+        if self.rng.random() < swap_prob:
+            toks = np.concatenate([vis, cap])
+        else:
+            toks = np.concatenate([cap, vis])
+        modality = self.vocab.is_vision(toks).astype(np.int32)
+        return toks.astype(np.int32), modality
+
+    def image_pair(self):
+        return self.pair(num_frames=1)
+
+    def video_pair(self, num_frames: int = 30):
+        # Paper: 30-frame videos at 4 FPS in the 8K stage.
+        return self.pair(num_frames=num_frames)

@@ -1,0 +1,85 @@
+"""Vocabulary layout for LWM-style multimodal token streams (paper §4.1).
+
+Layout (contiguous id ranges):
+
+    [0, text_size)                        text tokens (synthetic "BPE")
+    [text_size, text_size + codebook)     VQGAN codes (vision tokens)
+    then the special tokens, in order:
+        <vision>   text-side delimiter: vision block starts
+        </vision>  text-side delimiter: vision block ended
+        <eof>      end of a non-final video frame   (codebook-side)
+        <eov>      end of vision (last frame / single image)
+        <pad> <bos> <eos>
+
+The paper wraps vision tokens with <vision>...</vision> *text* tokens and
+marks frame boundaries with <eof>/<eov> *codebook* tokens; we reproduce that
+exact layout so modality ids can be derived from id ranges alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Vocab:
+    text_size: int
+    codebook_size: int
+
+    @property
+    def vision_start(self) -> int:
+        return self.text_size
+
+    @property
+    def special_start(self) -> int:
+        return self.text_size + self.codebook_size
+
+    @property
+    def vision_open(self) -> int:      # <vision>
+        return self.special_start
+
+    @property
+    def vision_close(self) -> int:     # </vision>
+        return self.special_start + 1
+
+    @property
+    def eof(self) -> int:              # <eof>
+        return self.special_start + 2
+
+    @property
+    def eov(self) -> int:              # <eov>
+        return self.special_start + 3
+
+    @property
+    def pad(self) -> int:
+        return self.special_start + 4
+
+    @property
+    def bos(self) -> int:
+        return self.special_start + 5
+
+    @property
+    def eos(self) -> int:
+        return self.special_start + 6
+
+    @property
+    def size(self) -> int:
+        return self.special_start + 7
+
+    def is_vision(self, ids: np.ndarray) -> np.ndarray:
+        """Modality mask: True for VQGAN codes and <eof>/<eov> boundaries."""
+        in_codebook = (ids >= self.vision_start) & (ids < self.special_start)
+        boundary = (ids == self.eof) | (ids == self.eov)
+        return in_codebook | boundary
+
+
+def build_vocab(vocab_size: int, codebook_size: int = 0) -> Vocab:
+    """Fit the LWM layout inside an architecture's vocab_size.
+
+    For text-only architectures codebook_size=0: specials still exist (the
+    pipeline always needs pad/bos/eos) and text gets the rest.
+    """
+    text = vocab_size - codebook_size - 7
+    assert text > 16, f"vocab {vocab_size} too small for codebook {codebook_size}"
+    return Vocab(text_size=text, codebook_size=codebook_size)

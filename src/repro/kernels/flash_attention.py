@@ -1,0 +1,366 @@
+"""Pallas TPU flash attention (fwd + bwd) with segment-id (packing) masking.
+
+The paper (§3.1): "We further fuse Blockwise RingAttention with FlashAttention
+using Pallas to optimize performance compared with using XLA compiler."
+This kernel is that fusion's compute core: one causal, GQA-aware,
+segment-masked flash attention over a device-local Q shard vs one K/V shard
+(the shard that just arrived over the ring, or the whole local sequence for
+single-device BPT).
+
+TPU mapping
+-----------
+* Layout: (batch, heads, seq, head_dim); K/V keep their *kv* heads and the
+  BlockSpec index map folds the GQA group (h -> h // group), so no
+  materialized repeat_kv.
+* Grid: (batch, q_heads, num_q_blocks, num_kv_blocks); the last dimension is
+  ``ARBITRARY`` (sequential) so the VMEM scratch accumulators (acc, m, l)
+  carry across K/V blocks; the first three are ``PARALLEL``.
+* Block sizes default to 512x512 with head_dim tiles as-is — q/k blocks are
+  multiples of 128 to keep the MXU systolic array fully fed; accumulation is
+  f32 in VMEM regardless of input dtype.
+* Masking: absolute positions + segment ids ride in SMEM-friendly int32
+  blocks; causal and segment masks are applied on the logits tile. A
+  *static* causal block skip (iq, ik grid indices) applies when the caller
+  guarantees monotone contiguous positions (``static_causal=True``);
+  otherwise blocks are only masked dynamically (striped/ring layouts).
+
+Backward pass: standard two-kernel flash backward (dq, then dk/dv) using the
+saved logsumexp; delta = rowsum(dO * O) is computed outside (cheap, fused by
+XLA).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+DEFAULT_Q_BLOCK = 512
+DEFAULT_KV_BLOCK = 512
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(
+    qpos_ref, kpos_ref, qseg_ref, kseg_ref,   # (1, Bq) / (1, Bk) int32
+    q_ref,                                    # (1, 1, Bq, D)
+    k_ref, v_ref,                             # (1, 1, Bk, D)
+    out_ref,                                  # (1, 1, Bq, D)
+    lse_ref,                                  # (1, 1, Bq)
+    acc_ref, m_ref, l_ref,                    # VMEM scratch
+    *,
+    causal: bool,
+    sm_scale: float,
+    num_kv_blocks: int,
+):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (Bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)           # (Bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)           # (Bk, D)
+    qpos = qpos_ref[0]                            # (Bq,)
+    kpos = kpos_ref[0]                            # (Bk,)
+    qseg = qseg_ref[0]
+    kseg = kseg_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale  # (Bq,Bk)
+    mask = qseg[:, None] == kseg[None, :]
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (Bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                         # rows with all NEG_INF -> exp(0)=1? no: NEG_INF-m_new
+    # Fully-masked rows: m_new stays NEG_INF -> s - m_new = 0 -> p = 1 spuriously.
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)                 # (Bq, 1)
+    l_new = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        out_ref[0, 0] = out.astype(out_ref.dtype)
+        lse = m_ref[...] + jnp.log(jnp.where(l == 0.0, 1.0, l))
+        lse_ref[0, 0] = lse[:, 0]
+
+
+def flash_attention_fwd(
+    q: jnp.ndarray,            # (B, H, Sq, D)
+    k: jnp.ndarray,            # (B, Hkv, Skv, D)
+    v: jnp.ndarray,
+    q_positions: jnp.ndarray,  # (B, Sq) int32
+    kv_positions: jnp.ndarray, # (B, Skv) int32
+    q_segment_ids: jnp.ndarray,
+    kv_segment_ids: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_block: int = DEFAULT_Q_BLOCK,
+    kv_block: int = DEFAULT_KV_BLOCK,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (out (B,H,Sq,D), lse (B,H,Sq))."""
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = h // hkv
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    nq = pl.cdiv(sq, q_block)
+    nkv = pl.cdiv(skv, kv_block)
+    sm_scale = d ** -0.5
+
+    grid = (b, h, nq, nkv)
+
+    kernel = functools.partial(
+        _fwd_kernel, causal=causal, sm_scale=sm_scale, num_kv_blocks=nkv)
+
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block), lambda ib, ih, iq, ik: (ib, iq)),
+            pl.BlockSpec((1, kv_block), lambda ib, ih, iq, ik: (ib, ik)),
+            pl.BlockSpec((1, q_block), lambda ib, ih, iq, ik: (ib, iq)),
+            pl.BlockSpec((1, kv_block), lambda ib, ih, iq, ik: (ib, ik)),
+            pl.BlockSpec((1, 1, q_block, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q_block, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, q_block), lambda ib, ih, iq, ik: (ib, ih, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((q_block, d), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.ARBITRARY,
+            ),
+        ),
+        interpret=interpret,
+        name="lwm_flash_fwd",
+    )(q_positions, kv_positions, q_segment_ids, kv_segment_ids, q, k, v)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward
+# ---------------------------------------------------------------------------
+
+def _bwd_dq_kernel(
+    qpos_ref, kpos_ref, qseg_ref, kseg_ref,
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+    dq_ref,
+    dq_acc_ref,
+    *,
+    causal: bool,
+    sm_scale: float,
+    num_kv_blocks: int,
+):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_acc_ref[...] = jnp.zeros_like(dq_acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0][:, None]
+    delta = delta_ref[0, 0][:, None]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    mask = qseg_ref[0][:, None] == kseg_ref[0][None, :]
+    if causal:
+        mask &= qpos_ref[0][:, None] >= kpos_ref[0][None, :]
+    p = jnp.where(mask, jnp.exp(s - lse), 0.0)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta) * sm_scale
+    dq_acc_ref[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                           preferred_element_type=jnp.float32)
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        dq_ref[0, 0] = dq_acc_ref[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(
+    qpos_ref, kpos_ref, qseg_ref, kseg_ref,
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+    dk_ref, dv_ref,
+    dk_acc_ref, dv_acc_ref,
+    *,
+    causal: bool,
+    sm_scale: float,
+    num_q_blocks: int,
+):
+    iq = pl.program_id(3)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_acc_ref[...] = jnp.zeros_like(dk_acc_ref)
+        dv_acc_ref[...] = jnp.zeros_like(dv_acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0][:, None]
+    delta = delta_ref[0, 0][:, None]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    mask = qseg_ref[0][:, None] == kseg_ref[0][None, :]
+    if causal:
+        mask &= qpos_ref[0][:, None] >= kpos_ref[0][None, :]
+    p = jnp.where(mask, jnp.exp(s - lse), 0.0)                     # (Bq, Bk)
+    dv_acc_ref[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                           preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta) * sm_scale
+    dk_acc_ref[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                           preferred_element_type=jnp.float32)
+
+    @pl.when(iq == num_q_blocks - 1)
+    def _finalize():
+        dk_ref[0, 0] = dk_acc_ref[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc_ref[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(
+    q, k, v, out, lse, do,
+    q_positions, kv_positions, q_segment_ids, kv_segment_ids,
+    *,
+    causal: bool = True,
+    q_block: int = DEFAULT_Q_BLOCK,
+    kv_block: int = DEFAULT_KV_BLOCK,
+    interpret: bool = False,
+):
+    """Returns (dq (B,H,Sq,D), dk (B,H,Skv,D), dv (B,H,Skv,D)).
+
+    dk/dv are per *query* head; the GQA wrapper in ops.py sums over the group.
+    """
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = h // hkv
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    nq = pl.cdiv(sq, q_block)
+    nkv = pl.cdiv(skv, kv_block)
+    sm_scale = d ** -0.5
+
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)  # (B,H,Sq)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, causal=causal, sm_scale=sm_scale,
+                          num_kv_blocks=nkv),
+        grid=(b, h, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, q_block), lambda ib, ih, iq, ik: (ib, iq)),
+            pl.BlockSpec((1, kv_block), lambda ib, ih, iq, ik: (ib, ik)),
+            pl.BlockSpec((1, q_block), lambda ib, ih, iq, ik: (ib, iq)),
+            pl.BlockSpec((1, kv_block), lambda ib, ih, iq, ik: (ib, ik)),
+            pl.BlockSpec((1, 1, q_block, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, q_block, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, q_block), lambda ib, ih, iq, ik: (ib, ih, iq)),
+            pl.BlockSpec((1, 1, q_block), lambda ib, ih, iq, ik: (ib, ih, iq)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_block, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((q_block, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.ARBITRARY,
+            ),
+        ),
+        interpret=interpret,
+        name="lwm_flash_bwd_dq",
+    )(q_positions, kv_positions, q_segment_ids, kv_segment_ids,
+      q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, causal=causal, sm_scale=sm_scale,
+                          num_q_blocks=nq),
+        grid=(b, h, nkv, nq),
+        in_specs=[
+            pl.BlockSpec((1, q_block), lambda ib, ih, ik, iq: (ib, iq)),
+            pl.BlockSpec((1, kv_block), lambda ib, ih, ik, iq: (ib, ik)),
+            pl.BlockSpec((1, q_block), lambda ib, ih, ik, iq: (ib, iq)),
+            pl.BlockSpec((1, kv_block), lambda ib, ih, ik, iq: (ib, ik)),
+            pl.BlockSpec((1, 1, q_block, d), lambda ib, ih, ik, iq: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda ib, ih, ik, iq, g=group: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda ib, ih, ik, iq, g=group: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, q_block, d), lambda ib, ih, ik, iq: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, q_block), lambda ib, ih, ik, iq: (ib, ih, iq)),
+            pl.BlockSpec((1, 1, q_block), lambda ib, ih, ik, iq: (ib, ih, iq)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, kv_block, d), lambda ib, ih, ik, iq: (ib, ih, ik, 0)),
+            pl.BlockSpec((1, 1, kv_block, d), lambda ib, ih, ik, iq: (ib, ih, ik, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, skv, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, skv, d), q.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((kv_block, d), jnp.float32),
+            pltpu.VMEM((kv_block, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.ARBITRARY,
+            ),
+        ),
+        interpret=interpret,
+        name="lwm_flash_bwd_dkv",
+    )(q_positions, kv_positions, q_segment_ids, kv_segment_ids,
+      q, k, v, do, lse, delta)
+
+    return dq, dk, dv

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: Mamba2 (SSD) chunked selective-state-space scan.
+
+Used by the zamba2-7b hybrid architecture. The SSD recurrence
+
+    h_t = exp(A*dt_t) * h_{t-1} + dt_t * x_t B_t^T ;  y_t = h_t C_t
+
+is computed chunk-by-chunk: within a chunk the (C x C) decay-weighted
+interaction matrix turns the recurrence into two MXU matmuls; across chunks
+only the small (P x N) state is carried — in VMEM scratch across the
+sequential chunk grid dimension here, and across *devices* via
+``core.seq_parallel`` when the sequence is sharded (the paper's ring idea
+applied to a recurrent state).
+
+Numerical safety: all decay ratios are exp(clog_t - clog_i) with i <= t and
+negative log-decays, so every exponent is <= 0 (no overflow), matching how
+the reference computes them.
+
+Grid: (batch, heads, num_chunks); chunks are ARBITRARY (sequential), carrying
+the (P, N) f32 state scratch. Block shapes keep P and N on the MXU-aligned
+trailing dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_chunk_kernel(
+    x_ref,        # (1, C, 1, P)
+    dt_ref,       # (1, C, 1)
+    a_ref,        # (1,)            A (negative) for this head
+    b_ref,        # (1, C, N)
+    c_ref,        # (1, C, N)
+    s0_ref,       # (1, 1, P, N)    initial state for this (batch, head)
+    y_ref,        # (1, C, 1, P)
+    sout_ref,     # (1, 1, P, N)
+    state_ref,    # VMEM (P, N) f32
+    *,
+    num_chunks: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (C, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (C,)
+    A = a_ref[0].astype(jnp.float32)                 # scalar
+    Bm = b_ref[0].astype(jnp.float32)                # (C, N)
+    Cm = c_ref[0].astype(jnp.float32)                # (C, N)
+
+    logdec = A * dt                                  # (C,) <= 0
+    clog = jnp.cumsum(logdec)                        # inclusive
+    # Intra-chunk: M[t,i] = (C_t . B_i) * exp(clog_t - clog_i) * dt_i, i <= t
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (C, C)
+    diff = clog[:, None] - clog[None, :]             # <=0 on/below diagonal
+    tmask = jnp.tril(jnp.ones_like(cb, dtype=bool))
+    M = jnp.where(tmask, cb * jnp.exp(jnp.minimum(diff, 0.0)) * dt[None, :], 0.0)
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (C, P)
+    # Inter-chunk: y_t += exp(clog_t) * C_t @ S_prev^T
+    S = state_ref[...]                               # (P, N)
+    y += jnp.exp(clog)[:, None] * jax.lax.dot_general(
+        Cm, S, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # State update: S_new = exp(clog_C) * S + sum_i exp(clog_C - clog_i) dt_i x_i B_i^T
+    wts = jnp.exp(clog[-1] - clog) * dt              # (C,)
+    upd = jax.lax.dot_general(x * wts[:, None], Bm, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    state_ref[...] = jnp.exp(clog[-1]) * S + upd
+
+    @pl.when(ic == num_chunks - 1)
+    def _finalize():
+        sout_ref[0, 0] = state_ref[...]
+
+
+def mamba2_chunk_scan(
+    x: jnp.ndarray,      # (B, S, H, P)
+    dt: jnp.ndarray,     # (B, S, H)
+    A: jnp.ndarray,      # (H,)
+    Bmat: jnp.ndarray,   # (B, S, N)
+    Cmat: jnp.ndarray,   # (B, S, N)
+    *,
+    initial_state: jnp.ndarray | None = None,  # (B, H, P, N)
+    chunk_size: int = 128,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N) f32)."""
+    b, s, h, p = x.shape
+    n = Bmat.shape[-1]
+    c = min(chunk_size, s)
+    assert s % c == 0, f"seq {s} not divisible by chunk {c}"
+    nchunks = s // c
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    kernel = functools.partial(_mamba_chunk_kernel, num_chunks=nchunks)
+
+    y, s_out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, c, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, c, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, c, n), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, c, n), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.ARBITRARY,
+            ),
+        ),
+        interpret=interpret,
+        name="mamba2_chunk_scan",
+    )(x, dt, A, Bmat, Cmat, initial_state)
+    return y, s_out

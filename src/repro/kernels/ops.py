@@ -1,0 +1,177 @@
+"""Public jit'd wrappers for the Pallas kernels, with impl dispatch.
+
+Layout convention at this boundary matches the rest of the repo:
+(batch, seq, heads, head_dim). The wrappers transpose to the kernels'
+(batch, heads, seq, head_dim) layout.
+
+``impl`` dispatch:
+  * "pallas"      — compiled Pallas TPU kernel (TPU target).
+  * "interpret"   — same kernel body, Pallas interpret mode (CPU validation).
+  * "ref"         — pure-jnp oracle (kernels/ref.py).
+  * "auto"        — pallas on TPU, ref elsewhere (dry-run / CPU tests).
+
+The flash attention wrapper installs a custom_vjp pairing the Pallas forward
+with the two-kernel Pallas backward (dk/dv reduced over the GQA group).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import mamba_scan as ms
+from repro.kernels import rwkv_wkv as rw
+from repro.kernels import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+def _resolve_scan(impl: str) -> str:
+    """Recurrent kernels: 'auto' off-TPU uses the chunked jnp form — exact,
+    and it lowers with the kernel's cost structure instead of an S-step
+    while loop (EXPERIMENTS.md §Perf iteration 1)."""
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "chunked"
+    return impl
+
+
+def _bshd_to_bhsd(x):
+    return jnp.transpose(x, (0, 2, 1, 3))
+
+
+def _bhsd_to_bshd(x):
+    return jnp.transpose(x, (0, 2, 1, 3))
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+def _flash_core(q, k, v, qpos, kpos, qseg, kseg,
+                causal, q_block, kv_block, interpret):
+    out, _ = fa.flash_attention_fwd(
+        q, k, v, qpos, kpos, qseg, kseg,
+        causal=causal, q_block=q_block, kv_block=kv_block, interpret=interpret)
+    return out
+
+
+def _flash_core_fwd(q, k, v, qpos, kpos, qseg, kseg,
+                    causal, q_block, kv_block, interpret):
+    out, lse = fa.flash_attention_fwd(
+        q, k, v, qpos, kpos, qseg, kseg,
+        causal=causal, q_block=q_block, kv_block=kv_block, interpret=interpret)
+    return out, (q, k, v, out, lse, qpos, kpos, qseg, kseg)
+
+
+def _flash_core_bwd(causal, q_block, kv_block, interpret, res, do):
+    q, k, v, out, lse, qpos, kpos, qseg, kseg = res
+    dq, dk, dv = fa.flash_attention_bwd(
+        q, k, v, out, lse, do, qpos, kpos, qseg, kseg,
+        causal=causal, q_block=q_block, kv_block=kv_block, interpret=interpret)
+    # dk/dv come back per query head; reduce over the GQA group.
+    h, hkv = q.shape[1], k.shape[1]
+    if h != hkv:
+        g = h // hkv
+        b, _, skv, d = dk.shape
+        dk = dk.reshape(b, hkv, g, skv, d).sum(axis=2).astype(k.dtype)
+        dv = dv.reshape(b, hkv, g, skv, d).sum(axis=2).astype(v.dtype)
+    else:
+        dk = dk.astype(k.dtype)
+        dv = dv.astype(v.dtype)
+    return dq.astype(q.dtype), dk, dv, None, None, None, None
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(
+    q: jnp.ndarray,            # (B, Sq, H, D)
+    k: jnp.ndarray,            # (B, Skv, Hkv, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_positions: jnp.ndarray | None = None,
+    kv_positions: jnp.ndarray | None = None,
+    q_segment_ids: jnp.ndarray | None = None,
+    kv_segment_ids: jnp.ndarray | None = None,
+    q_block: int = fa.DEFAULT_Q_BLOCK,
+    kv_block: int = fa.DEFAULT_KV_BLOCK,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """Differentiable flash attention; (B,S,H,D) in/out."""
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(
+            jnp.arange(sq, dtype=jnp.int32) + (skv - sq), (b, sq))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(skv, dtype=jnp.int32), (b, skv))
+    if q_segment_ids is None:
+        q_segment_ids = jnp.ones((b, sq), jnp.int32)
+    if kv_segment_ids is None:
+        kv_segment_ids = jnp.ones((b, skv), jnp.int32)
+    q_positions = q_positions.astype(jnp.int32)
+    kv_positions = kv_positions.astype(jnp.int32)
+    q_segment_ids = q_segment_ids.astype(jnp.int32)
+    kv_segment_ids = kv_segment_ids.astype(jnp.int32)
+
+    impl = _resolve(impl)
+    if impl == "ref":
+        from repro.core.attention import full_attention
+        return full_attention(
+            q, k, v, causal=causal,
+            q_positions=q_positions, kv_positions=kv_positions,
+            q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids)
+
+    interpret = impl == "interpret"
+    qt, kt, vt = _bshd_to_bhsd(q), _bshd_to_bhsd(k), _bshd_to_bhsd(v)
+    out = _flash_core(qt, kt, vt, q_positions, kv_positions,
+                      q_segment_ids, kv_segment_ids,
+                      causal, q_block, kv_block, interpret)
+    return _bhsd_to_bshd(out)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / RWKV6
+# ---------------------------------------------------------------------------
+
+def mamba2_scan(x, dt, A, Bmat, Cmat, *, initial_state=None,
+                chunk_size: int = 128, impl: str = "auto"):
+    impl = _resolve_scan(impl)
+    if impl == "ref":
+        return ref.mamba2_chunk_scan_ref(x, dt, A, Bmat, Cmat,
+                                         initial_state=initial_state)
+    if impl == "chunked":
+        # c=128 measured best on the memory term (EXPERIMENTS §Perf A-iter2):
+        # per-chunk fixed overhead (state ops, operand reloads, bwd recompute)
+        # dominates the M-tensor growth up to c~256; 128 also matches the
+        # Pallas kernel's VMEM-bounded default.
+        return ref.mamba2_chunked(x, dt, A, Bmat, Cmat,
+                                  initial_state=initial_state,
+                                  chunk_size=chunk_size)
+    return ms.mamba2_chunk_scan(
+        x, dt, A, Bmat, Cmat, initial_state=initial_state,
+        chunk_size=chunk_size, interpret=(impl == "interpret"))
+
+
+def rwkv6(r, k, v, w, u, *, initial_state=None, chunk_size: int = 64,
+          impl: str = "auto"):
+    impl = _resolve_scan(impl)
+    if impl == "ref":
+        return ref.rwkv6_ref(r, k, v, w, u, initial_state=initial_state)
+    if impl == "chunked":
+        return ref.rwkv6_chunked(r, k, v, w, u, initial_state=initial_state,
+                                 chunk_size=chunk_size)
+    return rw.rwkv6_wkv(r, k, v, w, u, initial_state=initial_state,
+                        chunk_size=chunk_size, interpret=(impl == "interpret"))

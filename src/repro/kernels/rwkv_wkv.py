@@ -1,0 +1,139 @@
+"""Pallas TPU kernel: RWKV6 ("Finch") WKV recurrence, chunked.
+
+Used by the rwkv6-3b architecture. The recurrence has a *data-dependent,
+per-channel* decay w_t in (0, 1):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+Chunked form (GLA-style): within a chunk, pairwise decay ratios
+exp(clog_{t-1} - clog_i) (i < t, exponents <= 0, overflow-safe) form the
+strictly-lower-triangular interaction; across chunks only the (K, V) state is
+carried (VMEM scratch across the sequential chunk grid dim; across devices
+via ``core.seq_parallel``).
+
+The per-channel decay means the interaction cannot be a plain matmul; the
+kernel materializes the (C, C, K) decay tensor per chunk, so chunks default
+to 64 to bound VMEM (64*64*K f32 = 1 MB at K=64).
+
+Grid: (batch, heads, num_chunks), chunks ARBITRARY.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_chunk_kernel(
+    r_ref, k_ref, v_ref,     # (1, C, 1, K) / (1, C, 1, K) / (1, C, 1, V)
+    logw_ref,                # (1, C, 1, K) log decay (<= 0)
+    u_ref,                   # (1, K)
+    s0_ref,                  # (1, 1, K, V)
+    y_ref,                   # (1, C, 1, V)
+    sout_ref,                # (1, 1, K, V)
+    state_ref,               # VMEM (K, V) f32
+    *,
+    num_chunks: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)      # (C, K)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)      # (C, K)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)      # (C, V)
+    logw = logw_ref[0, :, 0, :].astype(jnp.float32)  # (C, K), <= 0
+    u = u_ref[0].astype(jnp.float32)               # (K,)
+
+    c = r.shape[0]
+    clog = jnp.cumsum(logw, axis=0)                # inclusive, (C, K)
+    clog_prev = clog - logw                        # exclusive prefix (C, K)
+
+    # Inter-chunk: y_t += (r_t * exp(clog_prev_t))^T S_prev
+    S = state_ref[...]                             # (K, V)
+    r_dec = r * jnp.exp(clog_prev)                 # exponents <= 0
+    y = jax.lax.dot_general(r_dec, S, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (C, V)
+
+    # Intra-chunk (strict lower): M[t,i] = sum_k r[t,k] k[i,k] exp(clog_prev[t,k]-clog[i,k])
+    diff = clog_prev[:, None, :] - clog[None, :, :]          # (C, C, K)
+    tmask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])  # strict lower
+    pair = r[:, None, :] * k[None, :, :] * jnp.exp(jnp.minimum(diff, 0.0))
+    M = jnp.where(tmask[:, :, None], pair, 0.0).sum(axis=-1)  # (C, C)
+    y += jax.lax.dot_general(M, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    # Diagonal bonus: y_t += (r_t * u * k_t) . v_t
+    y += jnp.sum(r * u[None, :] * k, axis=-1, keepdims=True) * v
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # State: S_new = exp(clog_C) ⊙ S + sum_i (exp(clog_C - clog_i) * k_i) v_i^T
+    k_dec = k * jnp.exp(clog[-1][None, :] - clog)            # (C, K), exp <= 0... per-chan
+    upd = jax.lax.dot_general(k_dec, v, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (K, V)
+    state_ref[...] = jnp.exp(clog[-1])[:, None] * S + upd
+
+    @pl.when(ic == num_chunks - 1)
+    def _finalize():
+        sout_ref[0, 0] = state_ref[...]
+
+
+def rwkv6_wkv(
+    r: jnp.ndarray,       # (B, S, H, K)
+    k: jnp.ndarray,       # (B, S, H, K)
+    v: jnp.ndarray,       # (B, S, H, V)
+    w: jnp.ndarray,       # (B, S, H, K) decay in (0,1) — converted to log here
+    u: jnp.ndarray,       # (H, K)
+    *,
+    initial_state: jnp.ndarray | None = None,  # (B, H, K, V)
+    chunk_size: int = 64,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,S,H,V), final_state (B,H,K,V) f32)."""
+    b, s, h, kk = r.shape
+    vv = v.shape[-1]
+    c = min(chunk_size, s)
+    assert s % c == 0, f"seq {s} not divisible by chunk {c}"
+    nchunks = s // c
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, kk, vv), jnp.float32)
+    logw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-30))
+
+    kernel = functools.partial(_wkv_chunk_kernel, num_chunks=nchunks)
+
+    y, s_out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, c, 1, kk), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, c, 1, kk), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, c, 1, vv), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, c, 1, kk), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, kk), lambda ib, ih, ic: (ih, 0)),
+            pl.BlockSpec((1, 1, kk, vv), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, 1, vv), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, 1, kk, vv), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, vv), r.dtype),
+            jax.ShapeDtypeStruct((b, h, kk, vv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((kk, vv), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.ARBITRARY,
+            ),
+        ),
+        interpret=interpret,
+        name="rwkv6_wkv",
+    )(r, k, v, logw, u, initial_state)
+    return y, s_out

@@ -1,0 +1,267 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape x mesh) this lowers + compiles the
+real step function — ``train_step`` for train shapes, forward for prefill,
+``serve_step`` (one token against the full KV cache) for decode shapes —
+against ShapeDtypeStruct inputs on the production mesh, then records:
+
+    * ``compiled.memory_analysis()``  (bytes per device — does it fit)
+    * ``compiled.cost_analysis()``    (FLOPs / bytes for the roofline)
+    * collective traffic parsed from the optimized HLO
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun.jsonl
+
+The 512-device XLA flag above MUST precede any jax import (jax locks the
+device count at first init); this module is the only place it is set.
+(No ``from __future__ import annotations`` here — the os.environ lines must
+stay the first statements in the file.)
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import sys
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, InputShape, get_config, input_specs
+from repro.launch import hlo as hlo_mod
+from repro.launch import roofline as roof_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models import decoding, layers as L, transformer
+from repro.models.config import ModelConfig
+from repro.models.registry import build_model
+from repro.optim.adamw import AdamWState
+from repro.train.sharding import ShardingPolicy, make_policy
+from repro.train.train_step import TrainState, make_train_step
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _param_structs(model):
+    return jax.tree.map(lambda s: _struct(s.shape, jnp.float32),
+                        model.param_specs(), is_leaf=L.is_spec)
+
+
+def _state_structs(model):
+    p = _param_structs(model)
+    f32 = lambda t: jax.tree.map(lambda s: _struct(s.shape, jnp.float32), t)
+    return TrainState(p, AdamWState(_struct((), jnp.int32), f32(p), f32(p)))
+
+
+def _state_shardings(model, policy: ShardingPolicy):
+    p = policy.param_sharding(model.param_specs())
+    return TrainState(p, AdamWState(policy.replicated(), p, p))
+
+
+def _tree_replicated(tree, policy):
+    return jax.tree.map(lambda _: policy.replicated(), tree)
+
+
+SHAPE_POLICY = {"train_4k": "train", "prefill_32k": "prefill",
+                "decode_32k": "decode", "long_500k": "decode_ring"}
+
+
+@dataclasses.dataclass
+class DryRunResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    error: str = ""
+    seconds: float = 0.0
+    flops_per_device: float = 0.0
+    bytes_per_device: float = 0.0
+    peak_memory_bytes: float = 0.0
+    argument_bytes: float = 0.0
+    output_bytes: float = 0.0
+    temp_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_summary: str = ""
+    model_flops: float = 0.0
+    num_devices: int = 0
+    policy_kind: str = ""
+    xla_flops_once: float = 0.0    # raw cost_analysis (loops counted once)
+    attn_bytes: float = 0.0        # HBM traffic inside attention inner loops
+    attn_flops: float = 0.0
+
+    def to_roofline(self) -> roof_mod.Roofline:
+        return roof_mod.Roofline(
+            arch=self.arch, shape=self.shape, mesh=self.mesh,
+            num_devices=self.num_devices,
+            flops_per_device=self.flops_per_device,
+            bytes_per_device=self.bytes_per_device,
+            collective_bytes=self.collective_bytes,
+            model_flops=self.model_flops,
+            peak_memory_bytes=self.peak_memory_bytes,
+            collective_summary=self.collective_summary)
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, policy: ShardingPolicy,
+               *, model=None):
+    """Returns (fn, arg_structs, in_shardings, out_shardings, donate)."""
+    model = model or build_model(cfg)
+    ctx = policy.ctx()
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        step = make_train_step(cfg, ctx=ctx, learning_rate=4e-5)
+        state_structs = _state_structs(model)
+        state_sh = _state_shardings(model, policy)
+        batch_structs = {k: v for k, v in specs.items()}
+        batch_sh = policy.batch_sharding(batch_structs,
+                                         seq_sharded=policy.ring_axis is not None)
+        return (step, (state_structs, batch_structs),
+                (state_sh, batch_sh), (state_sh, None), (0,))
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            extras = {k: batch[k] for k in ("vision_embeds", "encoder_frames")
+                      if k in batch}
+            logits, _ = transformer.forward(
+                cfg, params, batch["tokens"], positions=batch["positions"],
+                segment_ids=batch["segment_ids"], ctx=ctx, **extras)
+            return logits
+
+        p_structs = _param_structs(model)
+        p_sh = policy.param_sharding(model.param_specs())
+        batch_structs = {k: v for k, v in specs.items()
+                         if k not in ("labels", "loss_weights")}
+        batch_sh = policy.batch_sharding(batch_structs,
+                                         seq_sharded=policy.ring_axis is not None)
+        return (prefill_step, (p_structs, batch_structs),
+                (p_sh, batch_sh), None, ())
+
+    # decode shapes
+    def serve_step(params, caches, token, position):
+        return decoding.decode_step(cfg, params, token, caches, position,
+                                    ctx=ctx)
+
+    b, max_len = shape.global_batch, shape.seq_len
+    p_structs = _param_structs(model)
+    p_sh = policy.param_sharding(model.param_specs())
+    cache_structs = jax.eval_shape(
+        functools.partial(decoding.init_caches, cfg, b, max_len))
+    cache_sh = policy.cache_sharding(cache_structs, max_len=max_len, batch=b)
+    tok = specs["token"]
+    pos = specs["position"]
+    bsh = policy.batch_sharding({"token": tok})["token"]
+    psh = policy.batch_sharding({"position": pos})["position"]
+    return (serve_step, (p_structs, cache_structs, tok, pos),
+            (p_sh, cache_sh, bsh, psh), (None, cache_sh), (1,))
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str,
+            *, policy_kind: str | None = None, striped: bool = False,
+            verbose: bool = True, cfg_override=None,
+            policy_factory=None) -> DryRunResult:
+    t0 = time.time()
+    cfg = cfg_override or get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+    kind = policy_kind or SHAPE_POLICY[shape_name]
+    model = build_model(cfg)
+    res = DryRunResult(arch=arch, shape=shape_name, mesh=mesh_name, ok=False,
+                       num_devices=mesh.devices.size, policy_kind=kind)
+    try:
+        policy = (policy_factory(cfg, mesh, kind) if policy_factory
+                  else make_policy(cfg, mesh, kind,
+                                   global_batch=shape.global_batch,
+                                   striped=striped))
+        fn, args, in_sh, out_sh, donate = build_step(cfg, shape, policy,
+                                                     model=model)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+        xla_cost = compiled.cost_analysis()   # loop bodies counted ONCE
+        mem = compiled.memory_analysis()
+        text = compiled.as_text()
+        # Trip-count-aware walk over the optimized HLO (launch/hlo.py):
+        # XLA's cost_analysis does not multiply while-loop bodies, which
+        # under-counts scan-over-layers models by ~num_layers.
+        cost = hlo_mod.full_cost(text, num_devices=mesh.devices.size)
+
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                       else 1)
+        res.model_flops = roof_mod.model_flops(
+            model.param_count(), model.active_param_count(), tokens,
+            kind=shape.kind, backward=(shape.kind == "train"))
+        res.flops_per_device = float(cost.flops)
+        res.bytes_per_device = float(cost.bytes_accessed)
+        res.xla_flops_once = float(xla_cost.get("flops", 0.0))
+        res.attn_bytes = float(cost.attn_bytes)
+        res.attn_flops = float(cost.attn_flops)
+        res.peak_memory_bytes = float(
+            getattr(mem, "peak_memory_in_bytes", 0) or
+            (mem.temp_size_in_bytes + mem.argument_size_in_bytes))
+        res.argument_bytes = float(mem.argument_size_in_bytes)
+        res.output_bytes = float(mem.output_size_in_bytes)
+        res.temp_bytes = float(mem.temp_size_in_bytes)
+        res.collective_bytes = float(cost.collective_bytes)
+        res.collective_summary = cost.summary()
+        res.ok = True
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        res.error = f"{type(e).__name__}: {e}"[:500]
+    res.seconds = time.time() - t0
+    if verbose:
+        status = "OK " if res.ok else "FAIL"
+        print(f"[{status}] {arch:18s} {shape_name:12s} {mesh_name:5s} "
+              f"{res.seconds:6.1f}s "
+              + (f"flops/dev={res.flops_per_device:.2e} "
+                 f"mem={res.peak_memory_bytes/1e9:.2f}GB "
+                 f"coll={res.collective_bytes/1e6:.1f}MB"
+                 if res.ok else res.error), flush=True)
+    return res
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--policy", default=None,
+                    help="override policy kind (train_ring etc.)")
+    ap.add_argument("--striped", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS[:10] if args.all or not args.arch else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = ["pod1", "pod2"] if args.mesh == "both" else [args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                r = run_one(arch, shape, mesh_name, policy_kind=args.policy,
+                            striped=args.striped)
+                results.append(r)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(dataclasses.asdict(r)) + "\n")
+
+    n_ok = sum(r.ok for r in results)
+    print(f"\n{n_ok}/{len(results)} dry-runs compiled successfully")
+    if n_ok < len(results):
+        for r in results:
+            if not r.ok:
+                print(f"  FAILED {r.arch} {r.shape} {r.mesh}: {r.error}")
+    return 0 if n_ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,30 @@
+"""Production mesh builders.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run must set
+XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e-style production mesh: 16x16 per pod, optionally 2 pods.
+
+    Axes: "data" carries FSDP and/or the RingAttention sequence ring,
+    "model" carries tensor parallelism, "pod" is the outer axis across pods.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape: tuple[int, ...] = (), axes: tuple[str, ...] = ()):
+    """Small CPU mesh for tests/examples, e.g. (4, 2) ("data", "model")."""
+    if not shape:
+        n = len(jax.devices())
+        shape, axes = (n,), ("data",)
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

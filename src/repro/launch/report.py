@@ -1,0 +1,77 @@
+"""Render EXPERIMENTS.md tables from dry-run JSONL results.
+
+    python -m repro.launch.report results/dryrun_baseline.jsonl [--mesh pod1]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.launch.roofline import Roofline, markdown_table
+
+
+def load(path: str) -> list[dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                rows.append(json.loads(line))
+    return rows
+
+
+def to_roofline(r: dict) -> Roofline:
+    return Roofline(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        num_devices=r["num_devices"],
+        flops_per_device=r["flops_per_device"],
+        bytes_per_device=r["bytes_per_device"],
+        collective_bytes=r["collective_bytes"],
+        model_flops=r["model_flops"],
+        peak_memory_bytes=r["peak_memory_bytes"],
+        collective_summary=r.get("collective_summary", ""))
+
+
+def dryrun_table(rows: list[dict]) -> str:
+    out = []
+    for r in rows:
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "ok": "✅" if r["ok"] else f"❌ {r['error'][:60]}",
+            "compile_s": round(r["seconds"], 1),
+            "peak_GB/dev": round(r["peak_memory_bytes"] / 1e9, 2),
+            "HLO_GFLOP/dev": round(r["flops_per_device"] / 1e9, 1),
+            "coll_GB/dev": round(r["collective_bytes"] / 1e9, 2),
+        })
+    return markdown_table(out)
+
+
+def roofline_table(rows: list[dict]) -> str:
+    out = []
+    for r in rows:
+        if not r["ok"]:
+            continue
+        rf = to_roofline(r)
+        row = rf.row()
+        row["attn_byte_frac"] = round(
+            r.get("attn_bytes", 0.0) / max(r["bytes_per_device"], 1), 2)
+        out.append(row)
+    return markdown_table(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--table", default="roofline",
+                    choices=["roofline", "dryrun"])
+    args = ap.parse_args(argv)
+    rows = load(args.path)
+    if args.mesh:
+        rows = [r for r in rows if r["mesh"] == args.mesh]
+    print(dryrun_table(rows) if args.table == "dryrun"
+          else roofline_table(rows))
+
+
+if __name__ == "__main__":
+    main()

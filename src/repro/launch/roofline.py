@@ -1,0 +1,99 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+Per (architecture x input shape x mesh):
+
+    compute term    = FLOPs_per_device / peak_FLOPs_per_chip
+    memory term     = bytes_per_device / HBM_bandwidth
+    collective term = collective_bytes_per_device / ICI_bandwidth
+
+``compiled.cost_analysis()`` reports the *partitioned* per-device program,
+so terms use per-chip peaks directly (equivalent to the global
+HLO/(chips x peak) form). Hardware constants: TPU v5e-class.
+
+Also derives MODEL_FLOPS = 6*N*D (N = params, active params for MoE; D =
+tokens per step) and the usefulness ratio MODEL_FLOPS / HLO_FLOPs, which
+catches remat recompute and redundant work.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per-device effective)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    num_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    model_flops: float                 # global, 6*N*D (or decode variant)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0          # MODEL_FLOPS / global HLO FLOPs
+    peak_memory_bytes: float = 0.0     # from memory_analysis
+    collective_summary: str = ""
+
+    def __post_init__(self):
+        self.compute_s = self.flops_per_device / PEAK_FLOPS
+        self.memory_s = self.bytes_per_device / HBM_BW
+        self.collective_s = self.collective_bytes / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        global_flops = self.flops_per_device * self.num_devices
+        self.useful_ratio = (self.model_flops / global_flops
+                             if global_flops else 0.0)
+
+    @property
+    def step_time_lb(self) -> float:
+        """Lower-bound step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def mfu_bound(self) -> float:
+        """MFU upper bound implied by the roofline terms."""
+        denom = self.step_time_lb * self.num_devices * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "devices": self.num_devices,
+            "compute_s": round(self.compute_s, 6),
+            "memory_s": round(self.memory_s, 6),
+            "collective_s": round(self.collective_s, 6),
+            "bottleneck": self.bottleneck,
+            "model_flops": f"{self.model_flops:.3e}",
+            "hlo_flops_global": f"{self.flops_per_device * self.num_devices:.3e}",
+            "useful_ratio": round(self.useful_ratio, 4),
+            "mfu_bound": round(self.mfu_bound, 4),
+            "peak_mem_GB": round(self.peak_memory_bytes / 1e9, 3),
+            "collectives": self.collective_summary,
+        }
+
+
+def model_flops(param_count: int, active_param_count: int, tokens: int,
+                *, kind: str, backward: bool) -> float:
+    """6*N*D rule. decode: D = batch tokens (1 step); train: x3 for backward."""
+    n = active_param_count
+    per_token = 2 * n * (3 if backward else 1)
+    return float(per_token * tokens)
+
+
+def markdown_table(rows: list[dict]) -> str:
+    if not rows:
+        return "(empty)"
+    cols = list(rows[0].keys())
+    lines = ["| " + " | ".join(cols) + " |",
+             "|" + "|".join("---" for _ in cols) + "|"]
+    for r in rows:
+        lines.append("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
+    return "\n".join(lines)

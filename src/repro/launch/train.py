@@ -1,0 +1,73 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the progressive-context trainer for any registered architecture at an
+optionally reduced scale. On real TPU hardware this is the entry point a
+cluster job would invoke (one process per host; jax.distributed handles the
+rest); on this CPU container it runs the reduced configs end-to-end.
+
+Examples:
+    python -m repro.launch.train --arch lwm-7b --reduced \
+        --stages 256:10,512:10 --rows 2
+    python -m repro.launch.train --arch rwkv6-3b --reduced --vision
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.data.pipeline import LWM_1K, TEXT_STAGE
+from repro.models.registry import build_model
+from repro.train import StageSpec, Trainer
+
+
+def parse_stages(spec: str, rows: int, vision: bool) -> list[StageSpec]:
+    """"256:10,512:10" -> two stages (seq_len:steps), theta ladder applied."""
+    thetas = [1e6, 1e7, 1e7, 2.5e7, 5e7]
+    out = []
+    for i, part in enumerate(spec.split(",")):
+        seq, steps = part.split(":")
+        out.append(StageSpec(
+            name=f"s{seq}", seq_len=int(seq),
+            rope_theta=thetas[min(i, len(thetas) - 1)], steps=int(steps),
+            batch_rows=rows, mixture=LWM_1K if vision else TEXT_STAGE,
+            lr=3e-4, warmup=max(int(steps) // 10, 1)))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU-runnable)")
+    ap.add_argument("--stages", default="256:10,512:10",
+                    help="comma list of seq_len:steps")
+    ap.add_argument("--rows", type=int, default=2)
+    ap.add_argument("--vision", action="store_true",
+                    help="train on the text-image mixture (paper stage II)")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    model = build_model(cfg)
+    print(f"arch={cfg.name} family={cfg.family} "
+          f"params={model.param_count():,} "
+          f"(active {model.active_param_count():,})")
+    if not args.reduced:
+        print("WARNING: full-scale config on CPU — expect this to be "
+              "unrunnably slow; use --reduced locally, full scale on TPU.")
+
+    stages = parse_stages(args.stages, args.rows, args.vision)
+    tr = Trainer(cfg, stages, seed=args.seed,
+                 checkpoint_dir=args.checkpoint_dir)
+    history = tr.run()
+    print("\nstage results:")
+    for h in history:
+        print(f"  {h['stage']}: loss {h['first_loss']:.3f} -> "
+              f"{h['final_loss']:.3f} ({h['tokens']:,} tokens, "
+              f"{h['tokens']/h['wall_s']:,.0f} tok/s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

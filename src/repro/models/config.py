@@ -1,0 +1,130 @@
+"""Unified model configuration covering all assigned architecture families."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    expert_d_ff: int
+    num_shared_experts: int = 0
+    shared_d_ff: int | None = None       # defaults to expert_d_ff * shared count
+    first_dense_layers: int = 0          # deepseek-v3: first k layers are dense
+    dense_d_ff: int | None = None        # d_ff of those dense layers
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    router_z_coef: float = 1e-3
+    norm_top_k_probs: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    latent_ring: bool = False            # beyond-paper: rotate the KV latent
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    state_dim: int = 64                  # N
+    head_dim: int = 64                   # P
+    expand: int = 2                      # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk_size: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64
+    chunk_size: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """zamba2-style: Mamba2 backbone + a shared attention block every k layers."""
+    attn_every: int = 6                  # shared attn block after every k mamba blocks
+    shared_attn_blocks: int = 1          # number of distinct shared-block weight sets
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    num_encoder_layers: int = 12
+    encoder_seq_len: int = 1500          # whisper: 30s audio -> 1500 frames
+    frontend: str = "stub"               # conv/mel frontend stubbed per task rules
+
+
+@dataclasses.dataclass(frozen=True)
+class VLMConfig:
+    num_patches: int = 1024              # stubbed ViT output length
+    vision_embed_dim: int = 1024         # InternViT hidden (pre-projector)
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionTokenConfig:
+    """LWM-style discrete vision tokens (paper §4.1)."""
+    codebook_size: int = 8192            # VQGAN codes
+    tokens_per_frame: int = 256          # 16x16 codes per 256x256 frame
+    # special tokens appended after the text vocab + codebook:
+    #   <vision>, </vision>, <eof>, <eov>
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                          # dense | moe | vlm | audio | hybrid | ssm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None          # default d_model // num_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 1e4
+    max_context: int = 4096
+    norm_eps: float = 1e-5
+    activation: str = "swiglu"           # swiglu | gelu
+    logits_soft_cap: float | None = None
+
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    mamba: Optional[MambaConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    vlm: Optional[VLMConfig] = None
+    vision_tokens: Optional[VisionTokenConfig] = None
+    mtp: bool = False                    # deepseek multi-token prediction head
+
+    # runtime knobs
+    dtype: str = "bfloat16"
+    attn_impl: str = "blockwise"         # full | blockwise | pallas | interpret
+    q_block: int = 512
+    kv_block: int = 512
+    remat: bool = True
+    remat_policy: str = "nothing"        # "nothing" | "dots" (§Perf C-iter3)
+    scan_layers: bool = True
+    source: str = ""                     # citation for the config numbers
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // self.num_heads
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)

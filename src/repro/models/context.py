@@ -1,0 +1,66 @@
+"""Runtime distribution context threaded through model ``apply`` functions.
+
+Models never import mesh details; they call ``ctx.constrain(x, logical_axes)``
+for GSPMD sharding hints and consult ``ctx.ring_axis`` / ``ctx.striped`` to
+decide whether attention should run as a shard_map ring. ``NULL_CTX`` (single
+device / smoke tests) makes every hook a no-op.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeCtx:
+    mesh: Any = None                       # jax.sharding.Mesh | None
+    rules: Mapping[str, Any] | None = None  # logical axis -> mesh axis (or tuple)
+    ring_axis: Any = None                  # mesh axis name(s) carrying the sequence
+    striped: bool = False                  # striped ring layout in effect
+    batch_axes: Any = None                 # mesh axis name(s) sharding batch
+    attn_impl: str | None = None           # overrides cfg.attn_impl when set
+    decode_ring: bool = False              # ring-sharded KV cache at decode
+
+    def spec(self, logical: tuple) -> P:
+        if self.rules is None:
+            return P()
+        used: set = set()
+        out = []
+        for ax in logical:
+            m = self.rules.get(ax) if ax is not None else None
+            names = (tuple(m) if isinstance(m, (tuple, list))
+                     else (m,) if m is not None else ())
+            if any(n in used for n in names):
+                out.append(None)       # axis already consumed by an earlier dim
+                continue
+            used.update(names)
+            out.append(m)
+        return P(*out)
+
+    def constrain(self, x, logical: tuple):
+        if self.mesh is None or self.rules is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, self.spec(logical)))
+
+    @property
+    def sequence_parallel(self) -> bool:
+        return self.ring_axis is not None
+
+    @property
+    def num_data_shards(self) -> int:
+        """Size of the batch-sharding axes (1 on a single device)."""
+        if self.mesh is None or self.batch_axes is None:
+            return 1
+        axes = (self.batch_axes if isinstance(self.batch_axes, (tuple, list))
+                else (self.batch_axes,))
+        n = 1
+        for ax in axes:
+            n *= self.mesh.shape[ax]
+        return n
+
+
+NULL_CTX = RuntimeCtx()

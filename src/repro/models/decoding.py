@@ -1,0 +1,357 @@
+"""Autoregressive decoding with per-family caches (paper §5 inference).
+
+Cache layouts (stacked over layers so decode_step scans):
+  attention  — k/v (L, B, max_len, Hkv, hd) + positions (L, B, max_len)
+               (MLA: compressed latent + rope key instead — deepseek-v3)
+  mamba      — conv tail (L, B, W-1, C) + ssm state (L, B, H, P, N)
+  rwkv       — shifted-token pair + wkv state
+  whisper    — decoder self-attn cache + precomputed cross-attn K/V
+
+Ring-sharded decode (ctx.decode_ring): the KV cache's ``max_len`` axis is
+sequence-sharded over ctx.ring_axis; each step computes local partial
+attention and merges with the log-sum-exp combine
+(``core.ring_attention.ring_decode_attention``). The cache write lowers to a
+masked update that only the owning shard applies.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import decode as dec_mod
+from repro.core import ring_attention as ring_mod
+from repro.core import rope as rope_mod
+from repro.models import layers as L
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.models.context import NULL_CTX, RuntimeCtx
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+def _attn_cache(cfg: ModelConfig, count: int, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((count, batch, max_len, cfg.num_kv_heads, hd),
+                       cfg.compute_dtype),
+        "v": jnp.zeros((count, batch, max_len, cfg.num_kv_heads, hd),
+                       cfg.compute_dtype),
+        "positions": jnp.full((count, batch, max_len), -1, jnp.int32),
+    }
+
+
+def _stacked(fn, count):
+    leaves = fn()
+    return jax.tree.map(lambda a: jnp.tile(a[None], (count,) + (1,) * a.ndim),
+                        leaves)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                ctx: RuntimeCtx = NULL_CTX) -> dict:
+    caches: dict[str, Any] = {}
+    for i, (kind, count) in enumerate(tfm.layer_groups(cfg)):
+        if count == 0:
+            continue
+        key = f"layers_{i}_{kind}"
+        if kind in ("attn_dense", "attn_moe", "dec_attn"):
+            caches[key] = _attn_cache(cfg, count, batch, max_len)
+        elif kind.startswith("mla"):
+            caches[key] = _stacked(
+                lambda: mla_mod.mla_init_cache(cfg, batch, max_len), count)
+        elif kind == "mamba":
+            caches[key] = _stacked(lambda: ssm_mod.mamba_init_cache(cfg, batch),
+                                   count)
+        elif kind == "rwkv":
+            caches[key] = _stacked(lambda: rwkv_mod.rwkv_init_cache(cfg, batch),
+                                   count)
+    if cfg.family == "hybrid":
+        hy = cfg.hybrid
+        n_shared = (cfg.num_layers // hy.attn_every)
+        caches["shared_attn"] = _attn_cache(cfg, max(n_shared, 1), batch, max_len)
+    if cfg.family == "audio":
+        e = cfg.encdec
+        hd = cfg.resolved_head_dim
+        caches["cross"] = {
+            "k": jnp.zeros((cfg.num_layers, batch, e.encoder_seq_len,
+                            cfg.num_kv_heads, hd), cfg.compute_dtype),
+            "v": jnp.zeros((cfg.num_layers, batch, e.encoder_seq_len,
+                            cfg.num_kv_heads, hd), cfg.compute_dtype),
+        }
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single token vs cache)
+# ---------------------------------------------------------------------------
+
+def _decode_attend(cfg: ModelConfig, q, cache_k, cache_v, cache_pos,
+                   position, ctx: RuntimeCtx):
+    """q: (B,1,H,hd); cache (B,L,Hkv,hd). Dispatch ring vs local."""
+    if ctx.decode_ring:
+        seq = ctx.rules.get("seq") if ctx.rules else None
+
+        def fn(q, ck, cv, cp):
+            return ring_mod.ring_decode_attention(
+                q, ck, cv, axis_name=ctx.ring_axis, kv_positions=cp,
+                q_position=position, logits_soft_cap=cfg.logits_soft_cap)
+
+        return jax.shard_map(
+            fn, mesh=ctx.mesh,
+            in_specs=(P(), P(None, seq, None, None), P(None, seq, None, None),
+                      P(None, seq)),
+            out_specs=P(), check_vma=False,
+        )(q, cache_k, cache_v, cache_pos)
+    return dec_mod.decode_attention_unsharded(
+        q, cache_k, cache_v, kv_positions=cache_pos, q_position=position,
+        logits_soft_cap=cfg.logits_soft_cap)
+
+
+def _attn_decode_block(cfg: ModelConfig, p, x, cache, position,
+                       ctx: RuntimeCtx, cross_kv=None):
+    """One attention block decode step. x: (B,1,D)."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    is_encdec = cross_kv is not None
+    if is_encdec:
+        norm1 = lambda t: L.layer_norm(t, p["ln1"], p["ln1b"], cfg.norm_eps)
+        norm2 = lambda t: L.layer_norm(t, p["ln2"], p["ln2b"], cfg.norm_eps)
+    else:
+        norm1 = lambda t: L.rms_norm(t, p["ln1"], cfg.norm_eps)
+        norm2 = lambda t: L.rms_norm(t, p["ln2"], cfg.norm_eps)
+
+    h = norm1(x)
+    pos2d = position[:, None]
+    q, k_new, v_new = tfm._project_qkv(cfg, p["attn"], h, pos2d)
+    k_c, v_c, pos_c = dec_mod.cache_update(
+        cache["k"], cache["v"], cache["positions"], k_new, v_new, position)
+    att = _decode_attend(cfg, q, k_c, v_c, pos_c, position, ctx)
+    x = x + L.linear(att.reshape(b, 1, -1), p["attn"]["wo"])
+
+    if is_encdec:
+        hc = L.layer_norm(x, p["ln_cross"], p["ln_crossb"], cfg.norm_eps)
+        qc = L.linear(hc, p["cross"]["wq"]).reshape(b, 1, cfg.num_heads, hd)
+        ck, cv = cross_kv
+        se = ck.shape[1]
+        att_c = dec_mod.decode_attention_unsharded(
+            qc, ck, cv,
+            kv_positions=jnp.zeros((b, se), jnp.int32),
+            q_position=jnp.zeros((b,), jnp.int32))
+        x = x + L.linear(att_c.reshape(b, 1, -1), p["cross"]["wo"])
+
+    h = norm2(x)
+    if "moe" in p:
+        ffn, _ = moe_mod.moe_apply(cfg, p["moe"], h, ctx)
+    else:
+        ffn = tfm.mlp_apply(cfg, p["mlp"], h)
+    new_cache = {"k": k_c, "v": v_c, "positions": pos_c}
+    return x + ffn, new_cache
+
+
+def _mla_decode_block(cfg, p, x, cache, position, ctx):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    att, new_cache = mla_mod.mla_decode_step(cfg, p["attn"], h, cache, position,
+                                             ctx)
+    x = x + att
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        ffn, _ = moe_mod.moe_apply(cfg, p["moe"], h, ctx)
+    else:
+        ffn = tfm.mlp_apply(cfg, p["mlp"], h)
+    return x + ffn, new_cache
+
+
+def _mamba_decode_block(cfg, p, x, cache):
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    y, new_cache = ssm_mod.mamba_decode_step(cfg, p["mamba"], h, cache)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full decode step
+# ---------------------------------------------------------------------------
+
+def decode_step(
+    cfg: ModelConfig,
+    params,
+    token: jnp.ndarray,        # (B, 1) int32
+    caches: dict,
+    position: jnp.ndarray,     # (B,) absolute position of this token
+    *,
+    ctx: RuntimeCtx = NULL_CTX,
+) -> tuple[jnp.ndarray, dict]:
+    """One autoregressive step. Returns (logits (B,1,V), new caches)."""
+    x = L.embed_lookup(params["embed"], token, cfg.compute_dtype)
+    new_caches = dict(caches)
+
+    if cfg.family == "hybrid":
+        x, new_caches = _hybrid_decode(cfg, params, x, caches, position, ctx)
+    else:
+        for i, (kind, count) in enumerate(tfm.layer_groups(cfg)):
+            if count == 0:
+                continue
+            key = f"layers_{i}_{kind}"
+            stacked_p = params[key]
+            stacked_c = caches[key]
+
+            if kind in ("attn_dense", "attn_moe"):
+                def body(x, pc):
+                    lp, lc = pc
+                    x, nc = _attn_decode_block(cfg, lp, x, lc, position, ctx)
+                    return x, nc
+            elif kind == "dec_attn":
+                cross = caches["cross"]
+
+                def body(x, pc, cross=cross):
+                    lp, lc, idx = pc
+                    ck = cross["k"][idx]
+                    cv = cross["v"][idx]
+                    x, nc = _attn_decode_block(cfg, lp, x, lc, position, ctx,
+                                               cross_kv=(ck, cv))
+                    return x, nc
+            elif kind.startswith("mla"):
+                def body(x, pc):
+                    lp, lc = pc
+                    return _mla_decode_block(cfg, lp, x, lc, position, ctx)
+            elif kind == "mamba":
+                def body(x, pc):
+                    lp, lc = pc
+                    return _mamba_decode_block(cfg, lp, x, lc)
+            elif kind == "rwkv":
+                def body(x, pc):
+                    lp, lc = pc
+                    return rwkv_mod.rwkv_block_decode(cfg, lp, x, lc)
+            else:
+                raise ValueError(kind)
+
+            xs = (stacked_p, stacked_c)
+            if kind == "dec_attn":
+                xs = (stacked_p, stacked_c, jnp.arange(count))
+            x, new_stacked_c = jax.lax.scan(lambda c, i_: body(c, i_), x, xs)
+            new_caches[key] = new_stacked_c
+
+    if cfg.family == "audio":
+        x = L.layer_norm(x, params["final_norm"], params["final_norm_bias"],
+                         cfg.norm_eps)
+    else:
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    else:
+        logits = L.linear(x, params["lm_head"])
+    return logits, new_caches
+
+
+def _hybrid_decode(cfg, params, x, caches, position, ctx):
+    """zamba2 decode: scan over (mamba-group + shared-attn) super-blocks."""
+    hy = cfg.hybrid
+    k = hy.attn_every
+    n = cfg.num_layers
+    n_groups, rem = divmod(n, k)
+    mamba_p = params["layers_0_mamba"]
+    mamba_c = caches["layers_0_mamba"]
+    shared_p = params["shared_attn"]
+    shared_c = caches["shared_attn"]
+    w_in = params["shared_in_proj"]
+    x0 = x
+
+    def take(t, lo, hi):
+        return jax.tree.map(lambda a: a[lo:hi], t)
+
+    def group_shape(t):
+        return jax.tree.map(
+            lambda a: a[: n_groups * k].reshape((n_groups, k) + a.shape[1:]), t)
+
+    def mamba_scan(x, ps, cs):
+        def body(x, pc):
+            lp, lc = pc
+            return _mamba_decode_block(cfg, lp, x, lc)
+        return jax.lax.scan(body, x, (ps, cs))
+
+    def group_body(x, xs):
+        gp, gc, sc = xs           # mamba params (k,...), mamba caches, shared cache
+        x, new_gc = mamba_scan(x, gp, gc)
+        h = L.linear(jnp.concatenate([x, x0], axis=-1), w_in)
+        y, new_sc = _attn_decode_block(cfg, shared_p, h, sc, position, ctx)
+        x = x + (y - h)
+        return x, (new_gc, new_sc)
+
+    new_caches = dict(caches)
+    new_head_c = None
+    if n_groups > 0:
+        x, (new_head_c, new_shared_c) = jax.lax.scan(
+            group_body, x, (group_shape(mamba_p), group_shape(mamba_c),
+                            shared_c))
+        new_head_c = jax.tree.map(
+            lambda a: a.reshape((n_groups * k,) + a.shape[2:]), new_head_c)
+        new_caches["shared_attn"] = new_shared_c
+    if rem:
+        x, new_tail_c = mamba_scan(x, take(mamba_p, n_groups * k, n),
+                                   take(mamba_c, n_groups * k, n))
+        if new_head_c is not None:
+            new_head_c = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0),
+                new_head_c, new_tail_c)
+        else:
+            new_head_c = new_tail_c
+    new_caches["layers_0_mamba"] = new_head_c
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Prefill (build caches from a full prompt)
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params, tokens, *, ctx: RuntimeCtx = NULL_CTX,
+            max_len: int | None = None, encoder_frames=None,
+            vision_embeds=None):
+    """Run the prompt through the model step-by-step-free (full forward) and
+    populate caches for subsequent decode_step calls.
+
+    For attention families this recomputes K/V per layer via a scan that
+    mirrors ``transformer.forward`` but collects cache entries.
+    """
+    b, s = tokens.shape
+    max_len = max_len or s
+    caches = init_caches(cfg, b, max_len, ctx)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    # Simple, correct approach: feed the prompt through decode_step one token
+    # at a time via lax.scan. O(S) steps of O(L) work — used by tests and the
+    # serve engine at example scale; the fused forward covers batch scoring.
+    logits0 = jnp.zeros((b, 1, cfg.vocab_size), cfg.compute_dtype)
+
+    def step(carry, t):
+        caches, _ = carry
+        tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+        pos = jnp.full((b,), 0, jnp.int32) + t
+        lg, caches = decode_step(cfg, params, tok, caches, pos, ctx=ctx)
+        return (caches, lg), None
+
+    if cfg.family == "audio":
+        enc_out = tfm.encode(cfg, params, encoder_frames, ctx)
+        hd = cfg.resolved_head_dim
+        se = enc_out.shape[1]
+        dec_p = params["layers_0_dec_attn"]
+
+        def cross_kv(lp):
+            ck = L.linear(enc_out, lp["cross"]["wk"]).reshape(
+                b, se, cfg.num_kv_heads, hd)
+            cv = L.linear(enc_out, lp["cross"]["wv"]).reshape(
+                b, se, cfg.num_kv_heads, hd)
+            return ck, cv
+
+        ck, cv = jax.lax.map(cross_kv, dec_p)
+        caches["cross"] = {"k": ck, "v": cv}
+
+    (caches, last_logits), _ = jax.lax.scan(step, (caches, logits0),
+                                            jnp.arange(s))
+    return last_logits, caches

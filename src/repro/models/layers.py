@@ -1,0 +1,139 @@
+"""Minimal functional parameter system + common layers.
+
+No flax/haiku in this environment, so models are plain functions over pytrees
+of arrays. Parameters are *declared* as ``ParamSpec`` trees (shape + init +
+logical sharding axes); ``init_params`` materializes them and
+``logical_axes`` extracts the sharding annotation tree consumed by
+``train.sharding``.
+
+Logical axis names used across the repo:
+  "embed"   — d_model dims                (FSDP: sharded over "data")
+  "ffn"     — d_ff / expert-ff dims       (TP: sharded over "model")
+  "heads"   — attention head dims         (TP over "model" when divisible)
+  "kv"      — kv-head dims
+  "vocab"   — vocabulary dim              (TP over "model")
+  "experts" — expert dim of MoE stacks    (EP over "model" when divisible)
+  "layers"  — stacked-layer leading dim   (never sharded)
+  None      — replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    init: str = "normal"           # "normal" | "zeros" | "ones" | "embed" | "uniform"
+    axes: tuple[str | None, ...] = ()
+    scale: float | None = None     # override init scale
+
+    def materialize(self, key: jax.Array, dtype=jnp.float32) -> jnp.ndarray:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        fan_in = self.shape[0] if len(self.shape) >= 2 else self.shape[-1]
+        scale = self.scale if self.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        if self.init == "embed":
+            scale = self.scale if self.scale is not None else 0.02
+        if self.init == "uniform":
+            return jax.random.uniform(key, self.shape, dtype, -scale, scale)
+        return (jax.random.normal(key, self.shape, jnp.float32) * scale).astype(dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs: Any, rng: jax.Array, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [leaf.materialize(k, dtype) for leaf, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def logical_axes(specs: Any):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def stack_specs(spec: Any, n: int, axis_name: str = "layers"):
+    """Prefix every spec with a stacked-layer dim (for scan-over-layers)."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, s.init, (axis_name,) + s.axes, s.scale),
+        spec, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Functional layers
+# ---------------------------------------------------------------------------
+
+def linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None) -> jnp.ndarray:
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    g = jax.nn.silu(linear(x, w_gate))
+    u = linear(x, w_up)
+    return linear(g * u, w_down)
+
+
+def gelu_mlp(x: jnp.ndarray, w_up: jnp.ndarray, b_up: jnp.ndarray,
+             w_down: jnp.ndarray, b_down: jnp.ndarray) -> jnp.ndarray:
+    return linear(jax.nn.gelu(linear(x, w_up, b_up)), w_down, b_down)
+
+
+def embed_lookup(table: jnp.ndarray, ids: jnp.ndarray, dtype) -> jnp.ndarray:
+    return jnp.take(table, ids, axis=0).astype(dtype)
+
+
+def sinusoidal_positions(seq_len: int, dim: int) -> jnp.ndarray:
+    pos = jnp.arange(seq_len)[:, None].astype(jnp.float32)
+    div = jnp.exp(jnp.arange(0, dim, 2).astype(jnp.float32) *
+                  (-math.log(10000.0) / dim))
+    pe = jnp.zeros((seq_len, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# Spec helpers ---------------------------------------------------------------
+
+def dense_spec(d_in: int, d_out: int, in_axis: str | None, out_axis: str | None,
+               scale: float | None = None) -> ParamSpec:
+    return ParamSpec((d_in, d_out), "normal", (in_axis, out_axis), scale)
+
+
+def norm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), "ones", (None,))
+
+
+def bias_spec(d: int, axis: str | None = None) -> ParamSpec:
+    return ParamSpec((d,), "zeros", (axis,))

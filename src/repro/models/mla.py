@@ -1,0 +1,273 @@
+"""Multi-head Latent Attention (deepseek-v3, arXiv:2412.19437).
+
+Q and KV pass through low-rank bottlenecks; the KV cache stores only the
+compressed latent (kv_lora_rank) plus a shared RoPE key (qk_rope_head_dim) —
+~(512+64) floats per position instead of 128 heads x (128+128).
+
+Ring interaction (DESIGN.md §4): the baseline ring rotates materialized K/V.
+The beyond-paper ``latent_ring`` path instead rotates the latent + rope key
+(9x smaller than even GQA-8 K/V at these dims) and expands K/V per ring step
+on the receiving device — trading a per-step (kv_lora -> H*(nope+v)) matmul
+for a ~36x cut in ring traffic. Decode always uses the weight-absorbed form
+(scores in latent space; no K/V expansion at all).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blockwise, rope as rope_mod
+from repro.core import ring_attention as ring_mod
+from repro.models.config import ModelConfig
+from repro.models.context import NULL_CTX, RuntimeCtx
+from repro.models import layers as L
+
+
+def mla_specs(cfg: ModelConfig):
+    m = cfg.mla
+    h = cfg.num_heads
+    d = cfg.d_model
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": L.dense_spec(d, m.q_lora_rank, "embed", None),
+        "q_norm": L.norm_spec(m.q_lora_rank),
+        "wq_b": L.dense_spec(m.q_lora_rank, h * qk_dim, None, "heads"),
+        "wkv_a": L.dense_spec(d, m.kv_lora_rank + m.qk_rope_head_dim, "embed", None),
+        "kv_norm": L.norm_spec(m.kv_lora_rank),
+        "wkv_b": L.dense_spec(m.kv_lora_rank,
+                              h * (m.qk_nope_head_dim + m.v_head_dim), None, "heads"),
+        "wo": L.dense_spec(h * m.v_head_dim, d, "heads", "embed"),
+    }
+
+
+def _project_q(cfg: ModelConfig, p, x, positions):
+    m = cfg.mla
+    h = cfg.num_heads
+    b, s, _ = x.shape
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = L.linear(L.rms_norm(L.linear(x, p["wq_a"]), p["q_norm"], cfg.norm_eps),
+                 p["wq_b"]).reshape(b, s, h, qk_dim)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = rope_mod.apply_rope(q[..., m.qk_nope_head_dim:], positions,
+                                 cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(cfg: ModelConfig, p, x, positions):
+    m = cfg.mla
+    kv_a = L.linear(x, p["wkv_a"])
+    latent = L.rms_norm(kv_a[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., m.kv_lora_rank:][:, :, None, :]       # (B,S,1,rope)
+    k_rope = rope_mod.apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return latent, k_rope
+
+
+def _expand_kv(cfg: ModelConfig, p, latent):
+    m = cfg.mla
+    h = cfg.num_heads
+    b, s, _ = latent.shape
+    kv = L.linear(latent, p["wkv_b"]).reshape(
+        b, s, h, m.qk_nope_head_dim + m.v_head_dim)
+    return kv[..., : m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim:]
+
+
+def mla_attention(cfg: ModelConfig, p, x: jnp.ndarray, positions, segment_ids,
+                  ctx: RuntimeCtx = NULL_CTX) -> jnp.ndarray:
+    """Training/prefill MLA attention. x: (B, S, D)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q_nope, q_rope = _project_q(cfg, p, x, positions)
+    latent, k_rope = _project_kv_latent(cfg, p, x, positions)
+
+    if ctx.sequence_parallel and m.latent_ring:
+        out = _latent_ring_attention(cfg, p, q_nope, q_rope, latent, k_rope,
+                                     positions, segment_ids, ctx)
+    else:
+        k_nope, v = _expand_kv(cfg, p, latent)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], q_rope.shape[:2] + (h, m.qk_rope_head_dim))],
+            axis=-1)
+        if ctx.sequence_parallel:
+            out = _ring(cfg, q, k, v, positions, segment_ids, ctx)
+        else:
+            out = blockwise.blockwise_attention(
+                q, k, v, causal=True,
+                q_positions=positions, kv_positions=positions,
+                q_segment_ids=segment_ids, kv_segment_ids=segment_ids,
+                q_block_size=cfg.q_block, kv_block_size=cfg.kv_block)
+    return L.linear(out.reshape(b, s, h * m.v_head_dim), p["wo"])
+
+
+def _ring(cfg, q, k, v, positions, segment_ids, ctx):
+    def fn(q, k, v, pos, seg):
+        return ring_mod.ring_attention(
+            q, k, v, axis_name=ctx.ring_axis,
+            q_positions=pos, kv_positions=pos,
+            q_segment_ids=seg, kv_segment_ids=seg,
+            causal=True, kv_block_size=cfg.kv_block,
+            skip_masked_blocks=not ctx.striped)
+    return _shard_mapped(cfg, ctx, fn, q, k, v, positions, segment_ids)
+
+
+def _shard_mapped(cfg, ctx, fn, q, k, v, positions, segment_ids):
+    from jax.sharding import PartitionSpec as P
+    seq = ctx.rules.get("seq") if ctx.rules else None
+    spec4 = P(None, seq, None, None)
+    spec2 = P(None, seq)
+    return jax.shard_map(
+        fn, mesh=ctx.mesh,
+        in_specs=(spec4, spec4, spec4, spec2, spec2),
+        out_specs=spec4, check_vma=False,
+    )(q, k, v, positions, segment_ids)
+
+
+def _latent_ring_attention(cfg, p, q_nope, q_rope, latent, k_rope,
+                           positions, segment_ids, ctx):
+    """Beyond-paper: ring-rotate (latent, k_rope) and expand per step."""
+    from jax.sharding import PartitionSpec as P
+    m = cfg.mla
+    h = cfg.num_heads
+    wkv_b = p["wkv_b"]
+
+    def fn(q_nope, q_rope, latent, k_rope, pos, seg):
+        b, s_loc = pos.shape
+        n = ring_mod.ring_size(ctx.ring_axis)
+        carry = blockwise.init_carry(b, s_loc, h, m.v_head_dim)
+        carry = jax.tree.map(
+            lambda x: jax.lax.pcast(x, ring_mod._axis_tuple(ctx.ring_axis),
+                                    to="varying"), carry)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+        def step(i, state):
+            carry, lat, kr, kvp, kvseg = state
+            lat_n, kr_n, kvp_n, kvseg_n = ring_mod._rotate(
+                (lat, kr, kvp, kvseg), ctx.ring_axis)
+            # expand this shard's K/V from the latent (the extra matmul that
+            # buys the 36x smaller ring payload)
+            kv = L.linear(lat, wkv_b).reshape(
+                b, s_loc, h, m.qk_nope_head_dim + m.v_head_dim)
+            k_nope, v = kv[..., : m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim:]
+            k = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(kr[:, :, None, :],
+                                          (b, s_loc, h, m.qk_rope_head_dim))], axis=-1)
+            carry = blockwise.attend_shard(
+                q, k, v, carry, q_positions=pos, kv_positions=kvp,
+                q_segment_ids=seg, kv_segment_ids=kvseg, causal=True,
+                kv_block_size=cfg.kv_block,
+                skip_masked_blocks=not ctx.striped)
+            return carry, lat_n, kr_n, kvp_n, kvseg_n
+
+        state = (carry, latent, k_rope, pos, seg)
+        state = jax.lax.fori_loop(0, n, step, state)
+        return blockwise.finalize_carry(state[0], dtype=q.dtype)
+
+    seq = ctx.rules.get("seq") if ctx.rules else None
+    s4 = P(None, seq, None, None)
+    s3 = P(None, seq, None)
+    s2 = P(None, seq)
+    return jax.shard_map(
+        fn, mesh=ctx.mesh,
+        in_specs=(s4, s4, s3, s3, s2, s2), out_specs=s4, check_vma=False,
+    )(q_nope, q_rope, latent, k_rope, positions, segment_ids)
+
+
+# ---------------------------------------------------------------------------
+# Decode (weight-absorbed, latent cache)
+# ---------------------------------------------------------------------------
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    m = cfg.mla
+    return {
+        "latent": jnp.zeros((batch, max_len, m.kv_lora_rank), cfg.compute_dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), cfg.compute_dtype),
+        "positions": jnp.full((batch, max_len), -1, jnp.int32),
+    }
+
+
+def _mla_local_scores_attend(m, q_lat, q_rope, lat, kr, kvpos, position):
+    """Partial weight-absorbed attention vs a latent-cache shard.
+
+    Returns un-normalized (acc (B,1,H,R), m (B,1,H), l (B,1,H)) — the
+    flash-style partials an LSE combine merges across shards.
+    """
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = (jnp.einsum("bqhr,bkr->bqhk", q_lat, lat.astype(jnp.float32)) +
+         jnp.einsum("bqhr,bkr->bqhk", q_rope.astype(jnp.float32),
+                    kr.astype(jnp.float32))) * scale
+    valid = (kvpos >= 0) & (kvpos <= position[:, None])
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    m_loc = jnp.max(s, axis=-1)                               # (B,1,H)
+    p_ = jnp.where(valid[:, None, None, :],
+                   jnp.exp(s - m_loc[..., None]), 0.0)
+    l_loc = jnp.sum(p_, axis=-1)
+    acc = jnp.einsum("bqhk,bkr->bqhr", p_, lat.astype(jnp.float32))
+    return acc, m_loc, l_loc
+
+
+def mla_decode_step(cfg: ModelConfig, p, x: jnp.ndarray, cache: dict,
+                    position: jnp.ndarray, ctx: RuntimeCtx = NULL_CTX):
+    """x: (B, 1, D); returns (out (B,1,D), new cache). Weight-absorbed MLA.
+
+    Under ``ctx.decode_ring`` the latent cache is sequence-sharded over the
+    ring axes: each shard computes partial scores against its local latent
+    slice and the partials merge with a log-sum-exp combine (paper §5 ring
+    decode, in latent space — no (B,1,H,L) score tensor is ever global).
+    """
+    m = cfg.mla
+    h = cfg.num_heads
+    b = x.shape[0]
+    pos2d = position[:, None]
+    q_nope, q_rope = _project_q(cfg, p, x, pos2d)
+    latent_new, k_rope_new = _project_kv_latent(cfg, p, x, pos2d)
+
+    # absorb W_uk into q: scores = q_nope . k_nope = (q_nope W_uk^T) . latent
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = wkv_b[..., : m.qk_nope_head_dim]       # (R, H, nope)
+    w_uv = wkv_b[..., m.qk_nope_head_dim:]        # (R, H, v)
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))  # (B,1,H,R)
+
+    # write the new latent into the cache (position-owned shard writes)
+    lat_cache, kr_cache, kvpos = cache["latent"], cache["k_rope"], cache["positions"]
+    one_hot = jax.nn.one_hot(position, lat_cache.shape[1], dtype=lat_cache.dtype)
+    lat_cache = lat_cache * (1 - one_hot[..., None]) + one_hot[..., None] * latent_new
+    kr_cache = kr_cache * (1 - one_hot[..., None]) + one_hot[..., None] * k_rope_new
+    kvpos = jnp.where(one_hot > 0, position[:, None], kvpos)
+
+    if ctx.decode_ring and ctx.mesh is not None:
+        from jax.sharding import PartitionSpec as P
+        from repro.core.ring_attention import _axis_tuple
+        seq = ctx.rules.get("seq") if ctx.rules else None
+        axes = _axis_tuple(ctx.ring_axis)
+
+        def fn(q_lat, q_rope, lat, kr, kvpos):
+            acc, m_loc, l_loc = _mla_local_scores_attend(
+                m, q_lat, q_rope, lat, kr, kvpos, position)
+            m_glob = m_loc
+            for ax in axes:
+                m_glob = jax.lax.pmax(m_glob, ax)
+            corr = jnp.exp(m_loc - m_glob)
+            acc = acc * corr[..., None]
+            l = l_loc * corr
+            for ax in axes:
+                acc = jax.lax.psum(acc, ax)
+                l = jax.lax.psum(l, ax)
+            return acc / jnp.maximum(l, 1e-30)[..., None]
+
+        out_lat = jax.shard_map(
+            fn, mesh=ctx.mesh,
+            in_specs=(P(), P(), P(None, seq, None), P(None, seq, None),
+                      P(None, seq)),
+            out_specs=P(), check_vma=False,
+        )(q_lat, q_rope, lat_cache, kr_cache, kvpos)
+    else:
+        acc, m_loc, l_loc = _mla_local_scores_attend(
+            m, q_lat, q_rope, lat_cache, kr_cache, kvpos, position)
+        out_lat = acc / jnp.maximum(l_loc, 1e-30)[..., None]
+
+    out = jnp.einsum("bqhr,rhv->bqhv", out_lat, w_uv.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(b, 1, h * m.v_head_dim)
+    out = L.linear(out, p["wo"])
+    return out, {"latent": lat_cache, "k_rope": kr_cache, "positions": kvpos}

@@ -1,0 +1,166 @@
+"""Mixture-of-Experts FFN: top-k router, capacity-based sort dispatch,
+shared experts, load-balance + router-z aux losses.
+
+Dispatch is the sort/gather formulation (no (T, E*C) one-hots) applied to
+**local token groups** (GShard-style): tokens are reshaped to (G, T/G)
+with G aligned to the data-sharding axis, and each group runs an
+independent sort-dispatch with per-group capacity. This keeps the dispatch
+buffers group-local under GSPMD — the global-buffer variant forced the
+partitioner to materialize a replicated (E, 1.25*T*k/E, D) buffer and move
+terabytes of all-gather/all-reduce per step (EXPERIMENTS.md §Perf B).
+
+The expert dim carries the "experts" logical axis — sharded over the
+"model" mesh axis when divisible (expert parallelism via GSPMD; deepseek's
+256/16 fits exactly). Over-capacity tokens are dropped per group (standard
+GShard semantics); the router aux loss keeps loads balanced so drops stay
+rare.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.context import NULL_CTX, RuntimeCtx
+from repro.models import layers as L
+
+
+def router_spec(cfg: ModelConfig):
+    moe = cfg.moe
+    return L.ParamSpec((cfg.d_model, moe.num_experts), "normal", ("embed", None))
+
+
+def experts_spec(cfg: ModelConfig):
+    moe = cfg.moe
+    e, d, f = moe.num_experts, cfg.d_model, moe.expert_d_ff
+    return {
+        "w_gate": L.ParamSpec((e, d, f), "normal", ("experts", "embed", "ffn")),
+        "w_up": L.ParamSpec((e, d, f), "normal", ("experts", "embed", "ffn")),
+        "w_down": L.ParamSpec((e, f, d), "normal", ("experts", "ffn", "embed")),
+    }
+
+
+def shared_expert_spec(cfg: ModelConfig):
+    moe = cfg.moe
+    if moe.num_shared_experts == 0:
+        return None
+    f = moe.shared_d_ff or moe.expert_d_ff * moe.num_shared_experts
+    return {
+        "w_gate": L.dense_spec(cfg.d_model, f, "embed", "ffn"),
+        "w_up": L.dense_spec(cfg.d_model, f, "embed", "ffn"),
+        "w_down": L.dense_spec(f, cfg.d_model, "ffn", "embed"),
+    }
+
+
+def moe_specs(cfg: ModelConfig):
+    spec = {"router": router_spec(cfg), "experts": experts_spec(cfg)}
+    shared = shared_expert_spec(cfg)
+    if shared is not None:
+        spec["shared"] = shared
+    return spec
+
+
+def _capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    moe = cfg.moe
+    c = int(moe.capacity_factor * tokens_per_group * moe.top_k
+            / moe.num_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def moe_apply(cfg: ModelConfig, p, x: jnp.ndarray,
+              ctx: RuntimeCtx = NULL_CTX) -> tuple[jnp.ndarray, dict]:
+    """x: (B, S, D) -> (y, aux) with aux = {"moe_aux_loss", "moe_z_loss", ...}."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = moe.num_experts, moe.top_k
+
+    # Token groups aligned with the data-sharding axis: all dispatch arrays
+    # carry a leading G dim sharded like the batch, so sort/gather/scatter
+    # stay device-local.
+    g = ctx.num_data_shards
+    if t % g != 0 or (t // g) < 8:
+        g = 1
+    tg = t // g
+    cap = _capacity(tg, cfg)
+    xg = x.reshape(g, tg, d)
+    xg = ctx.constrain(xg, ("batch", None, None))
+
+    # --- routing ---
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))       # (G, Tg, E)
+    logits = ctx.constrain(logits, ("batch", None, None))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                     # (G, Tg, k)
+    if moe.norm_top_k_probs:
+        top_w = top_w / jnp.maximum(jnp.sum(top_w, axis=-1, keepdims=True),
+                                    1e-9)
+
+    # --- aux losses (computed before dropping) ---
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    assign_counts = jnp.zeros((e,), jnp.float32).at[
+        top_i.reshape(-1)].add(1.0)
+    ce_frac = assign_counts / (t * k)
+    aux_loss = moe.aux_loss_coef * e * jnp.sum(ce_frac * me)
+    z_loss = moe.router_z_coef * jnp.mean(
+        jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # --- per-group sort-based dispatch ---
+    flat_e = top_i.reshape(g, tg * k)                          # (G, Tg*k)
+    flat_w = top_w.reshape(g, tg * k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    counts = jnp.zeros((g, e), jnp.int32).at[
+        jnp.arange(g)[:, None], flat_e].add(1)
+    starts = jnp.concatenate(
+        [jnp.zeros((g, 1), jnp.int32), jnp.cumsum(counts, axis=-1)[:, :-1]],
+        axis=-1)
+    pos_in_e = (jnp.arange(tg * k, dtype=jnp.int32)[None]
+                - jnp.take_along_axis(starts, sorted_e, axis=-1))
+    valid = pos_in_e < cap
+    slot = jnp.where(valid, sorted_e * cap + pos_in_e, e * cap)  # sentinel OOB
+    token_of = (order // k).astype(jnp.int32)
+
+    g_idx = jnp.arange(g)[:, None]
+    slot_token = jnp.full((g, e * cap), tg, jnp.int32).at[g_idx, slot].set(
+        jnp.where(valid, token_of, tg), mode="drop")
+    slot_w = jnp.zeros((g, e * cap), jnp.float32).at[g_idx, slot].set(
+        jnp.where(valid, jnp.take_along_axis(flat_w, order, axis=-1), 0.0),
+        mode="drop")
+
+    # gather with OOB fill (no pad row — keeps the token axis divisible)
+    x_disp = jnp.take_along_axis(
+        xg, jnp.minimum(slot_token, tg - 1)[..., None], axis=1)
+    x_disp = jnp.where((slot_token < tg)[..., None], x_disp, 0.0)
+    x_disp = x_disp.reshape(g, e, cap, d)                      # (G, E, C, D)
+    x_disp = ctx.constrain(x_disp, ("batch", "experts", None, None))
+
+    # --- expert computation (SwiGLU), vmapped over groups via einsum ---
+    we_g, we_u, we_d = (p["experts"]["w_gate"], p["experts"]["w_up"],
+                        p["experts"]["w_down"])
+    gate = jnp.einsum("gecd,edf->gecf", x_disp, we_g.astype(x.dtype))
+    up = jnp.einsum("gecd,edf->gecf", x_disp, we_u.astype(x.dtype))
+    h = jax.nn.silu(gate) * up
+    y_disp = jnp.einsum("gecf,efd->gecd", h, we_d.astype(x.dtype))
+    y_disp = ctx.constrain(y_disp, ("batch", "experts", None, None))
+
+    # --- combine (per group; OOB slot_token rows dropped) ---
+    y_flat = jnp.zeros((g, tg, d), jnp.float32).at[
+        g_idx[..., None], slot_token[..., None],
+        jnp.arange(d)[None, None, :]].add(
+        y_disp.reshape(g, e * cap, d).astype(jnp.float32)
+        * slot_w[..., None], mode="drop")
+    y_flat = ctx.constrain(y_flat, ("batch", None, None))
+    y = y_flat.reshape(b, s, d).astype(x.dtype)
+
+    # --- shared experts (always-on dense path) ---
+    if "shared" in p:
+        sh = p["shared"]
+        y = y + L.swiglu(x, sh["w_gate"], sh["w_up"], sh["w_down"])
+
+    aux = {
+        "moe_aux_loss": aux_loss,
+        "moe_z_loss": z_loss,
+        "moe_drop_frac": jnp.mean(1.0 - valid.astype(jnp.float32)),
+    }
+    return y, aux

@@ -1,0 +1,96 @@
+"""Model registry: config -> (init, forward, decode_step, input builders)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decoding, transformer
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.context import NULL_CTX, RuntimeCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    def init(self, rng: jax.Array):
+        return transformer.init(self.cfg, rng)
+
+    def param_specs(self):
+        return transformer.param_specs(self.cfg)
+
+    def logical_axes(self):
+        return L.logical_axes(transformer.param_specs(self.cfg))
+
+    def forward(self, params, tokens, **kw):
+        return transformer.forward(self.cfg, params, tokens, **kw)
+
+    def init_caches(self, batch: int, max_len: int, ctx: RuntimeCtx = NULL_CTX):
+        return decoding.init_caches(self.cfg, batch, max_len, ctx)
+
+    def decode_step(self, params, token, caches, position, *, ctx=NULL_CTX):
+        return decoding.decode_step(self.cfg, params, token, caches, position,
+                                    ctx=ctx)
+
+    def prefill(self, params, tokens, **kw):
+        return decoding.prefill(self.cfg, params, tokens, **kw)
+
+    def extra_inputs(self, batch: int, seq_len: int, *, abstract: bool = False):
+        """Modality-stub inputs (VLM patch embeds / audio frames).
+
+        abstract=True returns ShapeDtypeStructs (dry-run input_specs)."""
+        cfg = self.cfg
+        extras: dict[str, Any] = {}
+        if cfg.family == "vlm":
+            v = cfg.vlm
+            npatch = min(v.num_patches, seq_len)
+            shape = (batch, npatch, v.vision_embed_dim)
+            extras["vision_embeds"] = (
+                jax.ShapeDtypeStruct(shape, jnp.bfloat16) if abstract
+                else jnp.zeros(shape, jnp.bfloat16))
+        if cfg.family == "audio":
+            e = cfg.encdec
+            shape = (batch, e.encoder_seq_len, cfg.d_model)
+            extras["encoder_frames"] = (
+                jax.ShapeDtypeStruct(shape, jnp.bfloat16) if abstract
+                else jnp.zeros(shape, jnp.bfloat16))
+        return extras
+
+    def param_count(self) -> int:
+        def size(spec):
+            n = 1
+            for d in spec.shape:
+                n *= d
+            return n
+        leaves = jax.tree.leaves(self.param_specs(),
+                                 is_leaf=L.is_spec)
+        return sum(size(s) for s in leaves)
+
+    def active_param_count(self) -> int:
+        """MoE: params touched per token (routed top_k of experts)."""
+        cfg = self.cfg
+        total = self.param_count()
+        if cfg.moe is None:
+            return total
+        moe = cfg.moe
+        specs = self.param_specs()
+        inactive = 0
+        for key, spec in specs.items():
+            if not key.startswith("layers_"):
+                continue
+            flat = jax.tree.leaves(spec, is_leaf=L.is_spec)
+            for s in flat:
+                if "experts" in (s.axes or ()):
+                    n = 1
+                    for d in s.shape:
+                        n *= d
+                    inactive += n * (1 - moe.top_k / moe.num_experts)
+        return int(total - inactive)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,201 @@
+"""RWKV6 "Finch" block (arXiv:2404.05892) — attention-free, data-dependent decay.
+
+Per block: time-mix (the WKV linear-attention-like recurrence with per-channel
+data-dependent decay w_t, via the Pallas kernel) + channel-mix (token-shifted
+squared-relu MLP). Token shift uses the previous token — a 1-token halo under
+sequence parallelism, and a 1-token cache at decode.
+
+The paper's RingAttention is inapplicable here (no attention); sequence
+parallelism is the state-handoff scan (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import seq_parallel
+from repro.kernels import ops as kops
+from repro.models.config import ModelConfig
+from repro.models.context import NULL_CTX, RuntimeCtx
+from repro.models import layers as L
+
+
+def _dims(cfg: ModelConfig):
+    k = cfg.rwkv.head_dim
+    n_heads = cfg.d_model // k
+    return n_heads, k
+
+
+def rwkv_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    n_heads, k = _dims(cfg)
+    lora = cfg.rwkv.decay_lora
+    return {
+        "tm": {  # time mix
+            "mu_r": L.ParamSpec((d,), "uniform", (None,), scale=0.5),
+            "mu_k": L.ParamSpec((d,), "uniform", (None,), scale=0.5),
+            "mu_v": L.ParamSpec((d,), "uniform", (None,), scale=0.5),
+            "mu_w": L.ParamSpec((d,), "uniform", (None,), scale=0.5),
+            "mu_g": L.ParamSpec((d,), "uniform", (None,), scale=0.5),
+            "w_r": L.dense_spec(d, d, "embed", "heads"),
+            "w_k": L.dense_spec(d, d, "embed", "heads"),
+            "w_v": L.dense_spec(d, d, "embed", "heads"),
+            "w_g": L.dense_spec(d, d, "embed", "heads"),
+            "w0": L.ParamSpec((d,), "zeros", (None,)),
+            "wA": L.dense_spec(d, lora, "embed", None, scale=0.01),
+            "wB": L.dense_spec(lora, d, None, "embed", scale=0.01),
+            "u": L.ParamSpec((n_heads, k), "uniform", (None, None), scale=0.5),
+            "gn_scale": L.norm_spec(d),
+            "w_o": L.dense_spec(d, d, "heads", "embed"),
+        },
+        "cm": {  # channel mix
+            "mu_k": L.ParamSpec((d,), "uniform", (None,), scale=0.5),
+            "w_k": L.dense_spec(d, cfg.d_ff, "embed", "ffn"),
+            "w_v": L.dense_spec(cfg.d_ff, d, "ffn", "embed"),
+        },
+    }
+
+
+def _token_shift(x, prev_token=None):
+    """shifted[t] = x[t-1]; position 0 gets prev_token (zeros if None)."""
+    if prev_token is None:
+        prev_token = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev_token, x[:, :-1]], axis=1)
+
+
+def _lerp(x, x_shift, mu):
+    return x + (x_shift - x) * mu.astype(x.dtype)
+
+
+def _decay(tm, xw):
+    """w in (0,1): w = exp(-exp(w0 + lora(xw))), clamped for kernel stability."""
+    loglog = tm["w0"].astype(jnp.float32) + \
+        L.linear(jnp.tanh(L.linear(xw, tm["wA"])), tm["wB"]).astype(jnp.float32)
+    logw = -jnp.exp(jnp.clip(loglog, -8.0, 4.0))        # <= 0
+    return jnp.exp(jnp.maximum(logw, -8.0))             # per-step decay floor
+
+
+def time_mix(cfg: ModelConfig, tm, x, *, prev_token=None, wkv_state=None,
+             axis_name=None, impl=None):
+    """Returns (out, (last_token, new_wkv_state))."""
+    n_heads, k = _dims(cfg)
+    b, s, d = x.shape
+    xs = _token_shift(x, prev_token)
+    xr = _lerp(x, xs, tm["mu_r"])
+    xk = _lerp(x, xs, tm["mu_k"])
+    xv = _lerp(x, xs, tm["mu_v"])
+    xw = _lerp(x, xs, tm["mu_w"])
+    xg = _lerp(x, xs, tm["mu_g"])
+
+    r = L.linear(xr, tm["w_r"]).reshape(b, s, n_heads, k)
+    kk = L.linear(xk, tm["w_k"]).reshape(b, s, n_heads, k)
+    v = L.linear(xv, tm["w_v"]).reshape(b, s, n_heads, k)
+    g = jax.nn.silu(L.linear(xg, tm["w_g"]))
+    w = _decay(tm, xw).reshape(b, s, n_heads, k).astype(jnp.float32)
+
+    impl = impl or ("auto" if cfg.attn_impl not in ("interpret", "ref") else cfg.attn_impl)
+    if axis_name is None:
+        y, state = kops.rwkv6(r, kk, v, w, tm["u"], initial_state=wkv_state,
+                              chunk_size=cfg.rwkv.chunk_size, impl=impl)
+    else:
+        # sequence-parallel state handoff
+        y_zero, state_incr = kops.rwkv6(r, kk, v, w, tm["u"],
+                                        chunk_size=cfg.rwkv.chunk_size, impl=impl)
+        logw = jnp.log(jnp.maximum(w, 1e-30))
+        decay_total = jnp.exp(jnp.sum(logw, axis=1))            # (B,H,K)
+        decay_total = jnp.broadcast_to(decay_total[..., None], state_incr.shape)
+        s_in = seq_parallel.exclusive_state_prefix(
+            decay_total, state_incr, axis_name=axis_name)       # (B,H,K,V)
+        clog_prev = jnp.cumsum(logw, axis=1) - logw             # (B,S,H,K) exclusive
+        r_dec = r.astype(jnp.float32) * jnp.exp(clog_prev)
+        corr = jnp.einsum("bshk,bhkv->bshv", r_dec, s_in)
+        y = y_zero + corr.astype(y_zero.dtype)
+        state = None  # recomputable; not needed in training path
+
+    # per-head group norm then gate
+    y = y.reshape(b, s, d)
+    yh = y.reshape(b, s, n_heads, k).astype(jnp.float32)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = (yh.reshape(b, s, d) * tm["gn_scale"].astype(jnp.float32)).astype(x.dtype)
+    out = L.linear(y * g, tm["w_o"])
+    return out, (x[:, -1:], state)
+
+
+def channel_mix(cfg: ModelConfig, cm, x, *, prev_token=None):
+    xs = _token_shift(x, prev_token)
+    xk = _lerp(x, xs, cm["mu_k"])
+    h = jnp.square(jax.nn.relu(L.linear(xk, cm["w_k"])))
+    return L.linear(h, cm["w_v"]), x[:, -1:]
+
+
+def rwkv_block_specs(cfg: ModelConfig):
+    return {
+        "ln1": {"scale": L.norm_spec(cfg.d_model), "bias": L.bias_spec(cfg.d_model)},
+        "ln2": {"scale": L.norm_spec(cfg.d_model), "bias": L.bias_spec(cfg.d_model)},
+        **rwkv_specs(cfg),
+    }
+
+
+def rwkv_block_apply(cfg: ModelConfig, p, x, ctx: RuntimeCtx = NULL_CTX):
+    axis = ctx.ring_axis if ctx.sequence_parallel else None
+    if axis is not None:
+        from jax.sharding import PartitionSpec as P
+        seq = ctx.rules.get("seq") if ctx.rules else None
+
+        def fn(x):
+            return _rwkv_block_local(cfg, p, x, axis_name=axis)
+
+        return jax.shard_map(fn, mesh=ctx.mesh, in_specs=P(None, seq, None),
+                             out_specs=P(None, seq, None), check_vma=False)(x)
+    return _rwkv_block_local(cfg, p, x, axis_name=None)
+
+
+def _halo_prev_token(x, axis_name):
+    ax = axis_name if isinstance(axis_name, str) else axis_name[0]
+    n = jax.lax.psum(1, ax)
+    perm = [(j, j + 1) for j in range(n - 1)]
+    return jax.lax.ppermute(x[:, -1:], ax, perm)
+
+
+def _rwkv_block_local(cfg, p, x, axis_name):
+    prev = None if axis_name is None else _halo_prev_token(x, axis_name)
+    h = L.layer_norm(x, p["ln1"]["scale"], p["ln1"]["bias"], cfg.norm_eps)
+    prev_ln = None if prev is None else L.layer_norm(
+        prev, p["ln1"]["scale"], p["ln1"]["bias"], cfg.norm_eps)
+    att, _ = time_mix(cfg, p["tm"], h, prev_token=prev_ln, axis_name=axis_name)
+    x = x + att
+    # channel-mix shift needs the *post-attention* neighbor token
+    prev2 = None if axis_name is None else _halo_prev_token(x, axis_name)
+    h2 = L.layer_norm(x, p["ln2"]["scale"], p["ln2"]["bias"], cfg.norm_eps)
+    prev_ln2 = None if prev2 is None else L.layer_norm(
+        prev2, p["ln2"]["scale"], p["ln2"]["bias"], cfg.norm_eps)
+    ffn, _ = channel_mix(cfg, p["cm"], h2, prev_token=prev_ln2)
+    return x + ffn
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def rwkv_init_cache(cfg: ModelConfig, batch: int):
+    n_heads, k = _dims(cfg)
+    return {
+        "tm_prev": jnp.zeros((batch, 1, cfg.d_model), cfg.compute_dtype),
+        "cm_prev": jnp.zeros((batch, 1, cfg.d_model), cfg.compute_dtype),
+        "wkv": jnp.zeros((batch, n_heads, k, k), jnp.float32),
+    }
+
+
+def rwkv_block_decode(cfg: ModelConfig, p, x, cache):
+    """x: (B,1,D). O(1) per-token update via the 1-length kernel ref path."""
+    h = L.layer_norm(x, p["ln1"]["scale"], p["ln1"]["bias"], cfg.norm_eps)
+    att, (last, wkv) = time_mix(cfg, p["tm"], h, prev_token=cache["tm_prev"],
+                                wkv_state=cache["wkv"], impl="ref")
+    x = x + att
+    h2 = L.layer_norm(x, p["ln2"]["scale"], p["ln2"]["bias"], cfg.norm_eps)
+    ffn, last_cm = channel_mix(cfg, p["cm"], h2, prev_token=cache["cm_prev"])
+    x = x + ffn
+    new_cache = {"tm_prev": last, "cm_prev": last_cm, "wkv": wkv}
+    return x, new_cache

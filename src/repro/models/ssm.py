@@ -1,0 +1,203 @@
+"""Mamba2 block (SSD), used by zamba2-7b (arXiv:2411.15242 backbone blocks).
+
+Layer structure (Mamba2, simplified to ngroups=1):
+  in_proj -> [z | xBC | dt];  xBC -> depthwise causal conv -> silu
+  x -> (B,S,H,P) heads;  SSD scan (Pallas kernel / ref);  +D skip
+  gated RMSNorm with z;  out_proj.
+
+Sequence parallelism (DESIGN.md §4): the scan state is carried across
+devices with ``core.seq_parallel`` (all_gather of per-chunk (decay, state)
+maps + local prefix fold); the causal conv needs a (conv_width-1)-token halo
+from the previous shard, fetched with one ppermute.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import seq_parallel
+from repro.kernels import ops as kops
+from repro.models.config import ModelConfig
+from repro.models.context import NULL_CTX, RuntimeCtx
+from repro.models import layers as L
+
+
+def _dims(cfg: ModelConfig):
+    mb = cfg.mamba
+    d_inner = mb.expand * cfg.d_model
+    n_heads = d_inner // mb.head_dim
+    return d_inner, n_heads, mb.state_dim
+
+
+def mamba_specs(cfg: ModelConfig):
+    mb = cfg.mamba
+    d_inner, n_heads, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        "in_proj": L.dense_spec(cfg.d_model, 2 * d_inner + 2 * n + n_heads,
+                                "embed", "ffn"),
+        "conv_w": L.ParamSpec((mb.conv_width, conv_dim), "normal", (None, "ffn"),
+                              scale=0.5),
+        "conv_b": L.bias_spec(conv_dim, "ffn"),
+        "dt_bias": L.ParamSpec((n_heads,), "zeros", (None,)),
+        "A_log": L.ParamSpec((n_heads,), "zeros", (None,)),     # A = -exp(A_log)
+        "D": L.ParamSpec((n_heads,), "ones", (None,)),
+        "norm": L.norm_spec(d_inner),
+        "out_proj": L.dense_spec(d_inner, cfg.d_model, "ffn", "embed"),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_inner, n_heads, n = _dims(cfg)
+    z = proj[..., :d_inner]
+    xBC = proj[..., d_inner: 2 * d_inner + 2 * n]
+    dt = proj[..., 2 * d_inner + 2 * n:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w, conv_b, halo=None):
+    """Depthwise causal conv along seq. halo: (B, W-1, C) from prev shard."""
+    w = conv_w.astype(xBC.dtype)         # (W, C)
+    width = w.shape[0]
+    if halo is None:
+        halo = jnp.zeros(xBC.shape[:1] + (width - 1,) + xBC.shape[2:], xBC.dtype)
+    xp = jnp.concatenate([halo, xBC], axis=1)
+    out = sum(xp[:, i: i + xBC.shape[1]] * w[i] for i in range(width))
+    return out + conv_b.astype(xBC.dtype)
+
+
+def _halo_exchange(x, width, axis_name):
+    """Fetch the previous shard's trailing (width-1) tokens (zeros on shard 0)."""
+    axes = (axis_name,) if not isinstance(axis_name, (tuple, list)) else tuple(axis_name)
+    tail = x[:, -(width - 1):]
+    if len(axes) != 1:
+        raise NotImplementedError("multi-axis halo uses linearized single axis")
+    ax = axes[0]
+    n = jax.lax.psum(1, ax)
+    perm = [(j, j + 1) for j in range(n - 1)]
+    halo = jax.lax.ppermute(tail, ax, perm)  # shard 0 receives zeros
+    return halo
+
+
+def mamba_apply(cfg: ModelConfig, p, x: jnp.ndarray,
+                ctx: RuntimeCtx = NULL_CTX) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D). Sequence-parallel when ctx.ring_axis set."""
+    if ctx.sequence_parallel:
+        from jax.sharding import PartitionSpec as P
+        seq = ctx.rules.get("seq") if ctx.rules else None
+
+        def fn(x):
+            return _mamba_local(cfg, p, x, axis_name=ctx.ring_axis)
+
+        return jax.shard_map(
+            fn, mesh=ctx.mesh, in_specs=P(None, seq, None),
+            out_specs=P(None, seq, None), check_vma=False)(x)
+    y, _ = _mamba_core(cfg, p, x, halo=None, initial_state=None)
+    return y
+
+
+def _mamba_local(cfg, p, x, axis_name):
+    mb = cfg.mamba
+    proj = L.linear(x, p["in_proj"])
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    halo = _halo_exchange(xBC, mb.conv_width, axis_name)
+    return _mamba_post_proj(cfg, p, x, z, xBC, dt_raw, halo,
+                            axis_name=axis_name)
+
+
+def _mamba_core(cfg, p, x, halo, initial_state):
+    proj = L.linear(x, p["in_proj"])
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    y = _mamba_post_proj(cfg, p, x, z, xBC, dt_raw, halo, axis_name=None,
+                         initial_state=initial_state)
+    return y, None
+
+
+def _mamba_post_proj(cfg, p, x, z, xBC, dt_raw, halo, *, axis_name,
+                     initial_state=None):
+    mb = cfg.mamba
+    d_inner, n_heads, n = _dims(cfg)
+    b, s, _ = x.shape
+
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"], halo))
+    xs = xBC[..., :d_inner].reshape(b, s, n_heads, mb.head_dim)
+    Bm = xBC[..., d_inner: d_inner + n]
+    Cm = xBC[..., d_inner + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    impl = cfg.attn_impl if cfg.attn_impl in ("interpret", "ref") else "auto"
+    if axis_name is None:
+        y, _ = kops.mamba2_scan(xs, dt, A, Bm, Cm, initial_state=initial_state,
+                                chunk_size=mb.chunk_size, impl=impl)
+    else:
+        # Sequence-parallel: local scan, then cross-device state handoff.
+        y_zero, state_incr = kops.mamba2_scan(
+            xs, dt, A, Bm, Cm, chunk_size=mb.chunk_size, impl=impl)
+        # total decay over the local chunk, per (head,) broadcast to state dims
+        logdec_total = jnp.sum(A[None, None, :] * dt, axis=1)      # (B, H)
+        decay_total = jnp.exp(logdec_total)[..., None, None]       # (B,H,1,1)
+        decay_total = jnp.broadcast_to(decay_total, state_incr.shape)
+        s_in = seq_parallel.exclusive_state_prefix(
+            decay_total, state_incr, axis_name=axis_name)          # (B,H,P,N)
+        # correction: y_t += exp(clog_t) * (C_t . S_in)
+        clog = jnp.cumsum(A[None, None, :] * dt, axis=1)           # (B,S,H)
+        corr = jnp.einsum("bhpn,bsn,bsh->bshp", s_in,
+                          Cm.astype(jnp.float32), jnp.exp(clog))
+        y = y_zero + corr.astype(y_zero.dtype)
+
+    y = y + (p["D"].astype(jnp.float32)[None, None, :, None] *
+             xs.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(b, s, d_inner)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                   p["norm"], cfg.norm_eps)
+    return L.linear(y, p["out_proj"])
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def mamba_init_cache(cfg: ModelConfig, batch: int):
+    mb = cfg.mamba
+    d_inner, n_heads, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        "conv": jnp.zeros((batch, mb.conv_width - 1, conv_dim), cfg.compute_dtype),
+        "ssm": jnp.zeros((batch, n_heads, mb.head_dim, n), jnp.float32),
+    }
+
+
+def mamba_decode_step(cfg: ModelConfig, p, x: jnp.ndarray, cache: dict):
+    """x: (B, 1, D) -> (out, new_cache). O(1) state update."""
+    mb = cfg.mamba
+    d_inner, n_heads, n = _dims(cfg)
+    b = x.shape[0]
+    proj = L.linear(x, p["in_proj"])
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([cache["conv"], xBC], axis=1)   # (B, W, C)
+    w = p["conv_w"].astype(xBC.dtype)
+    xBC_t = jnp.sum(conv_in * w[None], axis=1, keepdims=True) + \
+        p["conv_b"].astype(xBC.dtype)
+    xBC_t = jax.nn.silu(xBC_t)
+    new_conv = conv_in[:, 1:]
+
+    xs = xBC_t[..., :d_inner].reshape(b, 1, n_heads, mb.head_dim)
+    Bm = xBC_t[..., d_inner: d_inner + n]                     # (B,1,N)
+    Cm = xBC_t[..., d_inner + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))[:, 0]   # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dec = jnp.exp(A[None] * dt)                               # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", xs[:, 0].astype(jnp.float32) * dt[..., None],
+                     Bm[:, 0].astype(jnp.float32))
+    ssm = cache["ssm"] * dec[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm, Cm[:, 0].astype(jnp.float32))[:, None]
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                   p["norm"], cfg.norm_eps)
+    out = L.linear(y, p["out_proj"])
+    return out, {"conv": new_conv, "ssm": ssm}

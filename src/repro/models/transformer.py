@@ -1,0 +1,472 @@
+"""Unified autoregressive transformer covering all assigned families.
+
+One parameterized decoder implementation with per-family block kinds:
+
+  attn_dense  — GQA attention (RoPE, optional QKV bias) + SwiGLU/GELU MLP
+  attn_moe    — GQA attention + MoE FFN (qwen2-moe)
+  mla_dense   — deepseek-v3 MLA attention + dense FFN (first k layers)
+  mla_moe     — MLA + MoE (deepseek-v3)
+  mamba       — Mamba2 SSD block (zamba2 backbone)
+  rwkv        — RWKV6 block
+  enc_attn    — bidirectional encoder block (whisper)
+  dec_attn    — causal decoder block with cross attention (whisper)
+
+Layers of the same kind are *stacked* and scanned (``jax.lax.scan``) so the
+HLO contains one block body regardless of depth — essential for compiling
+61-81-layer configs in the 512-device dry-run. zamba2's shared attention
+block (single weight set applied every k layers) composes scan over mamba
+groups with the shared block in between.
+
+Attention dispatch honors (ctx, cfg): full / blockwise (BPT) / pallas flash
+kernel on one device; Blockwise RingAttention via shard_map when
+ctx.ring_axis is set (the paper's core technique).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import blockwise, decode as decode_mod, ring_attention as ring_mod
+from repro.core import rope as rope_mod
+from repro.core.attention import full_attention
+from repro.kernels import ops as kops
+from repro.models import layers as L
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.context import NULL_CTX, RuntimeCtx
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA)
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg: ModelConfig, cross: bool = False):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    spec = {
+        "wq": L.dense_spec(d, cfg.num_heads * hd, "embed", "heads"),
+        "wk": L.dense_spec(d, cfg.num_kv_heads * hd, "embed", "kv"),
+        "wv": L.dense_spec(d, cfg.num_kv_heads * hd, "embed", "kv"),
+        "wo": L.dense_spec(cfg.num_heads * hd, d, "heads", "embed"),
+    }
+    if cfg.qkv_bias and not cross:
+        spec["bq"] = L.bias_spec(cfg.num_heads * hd, "heads")
+        spec["bk"] = L.bias_spec(cfg.num_kv_heads * hd, "kv")
+        spec["bv"] = L.bias_spec(cfg.num_kv_heads * hd, "kv")
+    return spec
+
+
+def _project_qkv(cfg: ModelConfig, p, x, positions, *, rope: bool = True,
+                 rope_cache=None):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = L.linear(x, p["wq"], p.get("bq")).reshape(b, s, cfg.num_heads, hd)
+    k = L.linear(x, p["wk"], p.get("bk")).reshape(b, s, cfg.num_kv_heads, hd)
+    v = L.linear(x, p["wv"], p.get("bv")).reshape(b, s, cfg.num_kv_heads, hd)
+    if rope:
+        q = rope_mod.apply_rope(q, positions, cfg.rope_theta, cache=rope_cache)
+        k = rope_mod.apply_rope(k, positions, cfg.rope_theta, cache=rope_cache)
+    return q, k, v
+
+
+def _attend(cfg: ModelConfig, q, k, v, positions, segment_ids, ctx: RuntimeCtx,
+            *, causal: bool):
+    """Dispatch attention impl; q/k/v are (B, S, H[kv], D) global views."""
+    if ctx.sequence_parallel:
+        return _ring_attend(cfg, q, k, v, positions, segment_ids, ctx,
+                            causal=causal)
+    impl = ctx.attn_impl or cfg.attn_impl
+    if impl == "full":
+        return full_attention(q, k, v, causal=causal,
+                              q_positions=positions, kv_positions=positions,
+                              q_segment_ids=segment_ids,
+                              kv_segment_ids=segment_ids,
+                              logits_soft_cap=cfg.logits_soft_cap)
+    if impl in ("pallas", "interpret", "auto"):
+        return kops.flash_attention(
+            q, k, v, causal=causal,
+            q_positions=positions, kv_positions=positions,
+            q_segment_ids=segment_ids, kv_segment_ids=segment_ids,
+            q_block=cfg.q_block, kv_block=cfg.kv_block, impl=impl)
+    # default: blockwise (BPT) — also the dry-run path
+    return blockwise.blockwise_attention(
+        q, k, v, causal=causal,
+        q_positions=positions, kv_positions=positions,
+        q_segment_ids=segment_ids, kv_segment_ids=segment_ids,
+        q_block_size=cfg.q_block, kv_block_size=cfg.kv_block,
+        logits_soft_cap=cfg.logits_soft_cap)
+
+
+def _ring_attend(cfg, q, k, v, positions, segment_ids, ctx, *, causal):
+    seq = ctx.rules.get("seq") if ctx.rules else None
+    heads_ax = None
+    if ctx.rules and ctx.mesh is not None:
+        tp = ctx.rules.get("heads")
+        if tp is not None:
+            tp_size = ctx.mesh.shape[tp] if isinstance(tp, str) else 1
+            if cfg.num_kv_heads % tp_size == 0 and cfg.num_heads % tp_size == 0:
+                heads_ax = tp
+    spec_q = P(None, seq, heads_ax, None)
+    spec_pos = P(None, seq)
+
+    def fn(q, k, v, pos, seg):
+        return ring_mod.ring_attention(
+            q, k, v, axis_name=ctx.ring_axis,
+            q_positions=pos, kv_positions=pos,
+            q_segment_ids=seg, kv_segment_ids=seg,
+            causal=causal, kv_block_size=cfg.kv_block,
+            logits_soft_cap=cfg.logits_soft_cap,
+            skip_masked_blocks=not ctx.striped)
+
+    return jax.shard_map(
+        fn, mesh=ctx.mesh,
+        in_specs=(spec_q, spec_q, spec_q, spec_pos, spec_pos),
+        out_specs=spec_q, check_vma=False,
+    )(q, k, v, positions, segment_ids)
+
+
+def attention_apply(cfg: ModelConfig, p, x, positions, segment_ids,
+                    ctx: RuntimeCtx, *, causal: bool = True, rope_cache=None):
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, positions, rope_cache=rope_cache)
+    out = _attend(cfg, q, k, v, positions, segment_ids, ctx, causal=causal)
+    return L.linear(out.reshape(b, s, -1), p["wo"])
+
+
+def cross_attention_apply(cfg: ModelConfig, p, x, enc_out, ctx: RuntimeCtx):
+    """Decoder cross-attention (whisper): queries from x, K/V from encoder."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    se = enc_out.shape[1]
+    q = L.linear(x, p["wq"]).reshape(b, s, cfg.num_heads, hd)
+    k = L.linear(enc_out, p["wk"]).reshape(b, se, cfg.num_kv_heads, hd)
+    v = L.linear(enc_out, p["wv"]).reshape(b, se, cfg.num_kv_heads, hd)
+    out = full_attention(q, k, v, causal=False,
+                         q_positions=jnp.zeros((b, s), jnp.int32),
+                         kv_positions=jnp.zeros((b, se), jnp.int32))
+    return L.linear(out.reshape(b, s, -1), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLP / blocks
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    if cfg.activation == "gelu":
+        return {
+            "w_up": L.dense_spec(cfg.d_model, d_ff, "embed", "ffn"),
+            "b_up": L.bias_spec(d_ff, "ffn"),
+            "w_down": L.dense_spec(d_ff, cfg.d_model, "ffn", "embed"),
+            "b_down": L.bias_spec(cfg.d_model),
+        }
+    return {
+        "w_gate": L.dense_spec(cfg.d_model, d_ff, "embed", "ffn"),
+        "w_up": L.dense_spec(cfg.d_model, d_ff, "embed", "ffn"),
+        "w_down": L.dense_spec(d_ff, cfg.d_model, "ffn", "embed"),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, p, x):
+    if cfg.activation == "gelu":
+        fn = lambda c: L.gelu_mlp(c, p["w_up"], p["b_up"], p["w_down"], p["b_down"])
+    else:
+        fn = lambda c: L.swiglu(c, p["w_gate"], p["w_up"], p["w_down"])
+    return blockwise.blockwise_ffn(fn, x, chunk_size=max(cfg.q_block, 512))
+
+
+def block_specs(cfg: ModelConfig, kind: str):
+    d = cfg.d_model
+    if kind == "mamba":
+        return {"ln": L.norm_spec(d), "mamba": ssm_mod.mamba_specs(cfg)}
+    if kind == "rwkv":
+        return rwkv_mod.rwkv_block_specs(cfg)
+    spec: dict[str, Any] = {"ln1": L.norm_spec(d), "ln2": L.norm_spec(d)}
+    if kind.startswith("mla"):
+        spec["attn"] = mla_mod.mla_specs(cfg)
+    else:
+        spec["attn"] = attn_specs(cfg)
+    if kind.endswith("moe"):
+        spec["moe"] = moe_mod.moe_specs(cfg)
+    else:
+        d_ff = None
+        if kind == "mla_dense" and cfg.moe and cfg.moe.dense_d_ff:
+            d_ff = cfg.moe.dense_d_ff
+        spec["mlp"] = mlp_specs(cfg, d_ff)
+    if kind == "dec_attn":
+        spec["ln_cross"] = L.norm_spec(d)
+        spec["cross"] = attn_specs(cfg, cross=True)
+    if kind == "enc_attn" or kind == "dec_attn":
+        # whisper uses LayerNorm with bias
+        spec["ln1b"] = L.bias_spec(d)
+        spec["ln2b"] = L.bias_spec(d)
+        if kind == "dec_attn":
+            spec["ln_crossb"] = L.bias_spec(d)
+    return spec
+
+
+def block_apply(cfg: ModelConfig, kind: str, p, x, positions, segment_ids,
+                ctx: RuntimeCtx, enc_out=None, rope_cache=None):
+    """Pre-norm residual block. Returns (x, aux_dict)."""
+    aux = {}
+    if kind == "mamba":
+        h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+        return x + ssm_mod.mamba_apply(cfg, p["mamba"], h, ctx), aux
+    if kind == "rwkv":
+        return rwkv_mod.rwkv_block_apply(cfg, p, x, ctx), aux
+
+    if kind in ("enc_attn", "dec_attn"):
+        norm1 = lambda t: L.layer_norm(t, p["ln1"], p["ln1b"], cfg.norm_eps)
+        norm2 = lambda t: L.layer_norm(t, p["ln2"], p["ln2b"], cfg.norm_eps)
+    else:
+        norm1 = lambda t: L.rms_norm(t, p["ln1"], cfg.norm_eps)
+        norm2 = lambda t: L.rms_norm(t, p["ln2"], cfg.norm_eps)
+
+    h = norm1(x)
+    causal = kind != "enc_attn"
+    if kind.startswith("mla"):
+        att = mla_mod.mla_attention(cfg, p["attn"], h, positions, segment_ids, ctx)
+    else:
+        att = attention_apply(cfg, p["attn"], h, positions, segment_ids, ctx,
+                              causal=causal, rope_cache=rope_cache)
+    x = x + att
+
+    if kind == "dec_attn":
+        hc = L.layer_norm(x, p["ln_cross"], p["ln_crossb"], cfg.norm_eps)
+        x = x + cross_attention_apply(cfg, p["cross"], hc, enc_out, ctx)
+
+    h = norm2(x)
+    if "moe" in p:
+        ffn, aux = moe_mod.moe_apply(cfg, p["moe"], h, ctx)
+    else:
+        ffn = mlp_apply(cfg, p["mlp"], h)
+    return x + ffn, aux
+
+
+# ---------------------------------------------------------------------------
+# Layer stack layouts
+# ---------------------------------------------------------------------------
+
+def layer_groups(cfg: ModelConfig) -> list[tuple[str, int]]:
+    """(block kind, count) groups, scanned per group."""
+    if cfg.family == "ssm":
+        return [("rwkv", cfg.num_layers)]
+    if cfg.family == "hybrid":
+        return [("mamba", cfg.num_layers)]   # shared attn handled separately
+    if cfg.family == "audio":
+        return [("dec_attn", cfg.num_layers)]  # decoder; encoder separate
+    if cfg.moe is not None and cfg.mla is not None:
+        k = cfg.moe.first_dense_layers
+        return [("mla_dense", k), ("mla_moe", cfg.num_layers - k)]
+    if cfg.moe is not None:
+        return [("attn_moe", cfg.num_layers)]
+    return [("attn_dense", cfg.num_layers)]
+
+
+def _scan_group(cfg: ModelConfig, kind: str, stacked_params, x, positions,
+                segment_ids, ctx, enc_out=None, rope_cache=None):
+    """Scan a stacked-parameter group; accumulate scalar aux sums.
+
+    ``rope_cache`` is a loop-invariant (cos, sin) pair — computed once per
+    forward instead of per layer per remat pass (EXPERIMENTS §Perf)."""
+
+    def body(carry, layer_params):
+        x, aux_sum = carry
+        y, aux = block_apply(cfg, kind, layer_params, x, positions,
+                             segment_ids, ctx, enc_out=enc_out,
+                             rope_cache=rope_cache)
+        for name, val in aux.items():
+            aux_sum[name] = aux_sum.get(name, 0.0) + val
+        return (y, aux_sum), None
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+
+    aux0 = {}
+    if kind.endswith("moe"):
+        aux0 = {"moe_aux_loss": jnp.float32(0.0), "moe_z_loss": jnp.float32(0.0),
+                "moe_drop_frac": jnp.float32(0.0)}
+    (x, aux), _ = jax.lax.scan(body, (x, aux0), stacked_params)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig):
+    specs: dict[str, Any] = {
+        "embed": L.ParamSpec((cfg.vocab_size, cfg.d_model), "embed",
+                             ("vocab", "embed")),
+        "final_norm": L.norm_spec(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = L.dense_spec(cfg.d_model, cfg.vocab_size,
+                                        "embed", "vocab")
+    for i, (kind, count) in enumerate(layer_groups(cfg)):
+        if count > 0:
+            specs[f"layers_{i}_{kind}"] = L.stack_specs(
+                block_specs(cfg, kind), count)
+    if cfg.family == "hybrid":
+        specs["shared_attn"] = block_specs(cfg, "attn_dense")
+        # zamba2 concatenates [hidden, original-embedding] into the shared block
+        specs["shared_in_proj"] = L.dense_spec(2 * cfg.d_model, cfg.d_model,
+                                               "embed", None)
+    if cfg.family == "audio":
+        e = cfg.encdec
+        specs["enc_layers"] = L.stack_specs(
+            block_specs(cfg, "enc_attn"), e.num_encoder_layers)
+        specs["enc_final_norm"] = L.norm_spec(cfg.d_model)
+        specs["enc_final_bias"] = L.bias_spec(cfg.d_model)
+        specs["final_norm_bias"] = L.bias_spec(cfg.d_model)
+    if cfg.family == "vlm":
+        v = cfg.vlm
+        specs["vision_proj"] = {
+            "w1": L.dense_spec(v.vision_embed_dim, cfg.d_model, None, "embed"),
+            "b1": L.bias_spec(cfg.d_model),
+            "w2": L.dense_spec(cfg.d_model, cfg.d_model, "embed", "embed"),
+            "b2": L.bias_spec(cfg.d_model),
+        }
+    if cfg.mtp:
+        specs["mtp_proj"] = L.dense_spec(2 * cfg.d_model, cfg.d_model,
+                                         "embed", None)
+        specs["mtp_norm"] = L.norm_spec(cfg.d_model)
+    return specs
+
+
+def init(cfg: ModelConfig, rng: jax.Array):
+    return L.init_params(param_specs(cfg), rng)
+
+
+def _embed_inputs(cfg: ModelConfig, params, tokens, vision_embeds, ctx):
+    x = L.embed_lookup(params["embed"], tokens, cfg.compute_dtype)
+    if cfg.family == "vlm" and vision_embeds is not None:
+        vp = params["vision_proj"]
+        ve = L.linear(jax.nn.gelu(L.linear(
+            vision_embeds.astype(cfg.compute_dtype), vp["w1"], vp["b1"])),
+            vp["w2"], vp["b2"])
+        npatch = ve.shape[1]
+        x = jnp.concatenate([ve, x[:, npatch:]], axis=1)
+    return x
+
+
+def _hybrid_stack(cfg: ModelConfig, params, x, positions, segment_ids, ctx,
+                  rope_cache=None):
+    """zamba2: groups of Mamba2 blocks with a shared attention block between."""
+    hy = cfg.hybrid
+    n = cfg.num_layers
+    k = hy.attn_every
+    mamba_params = params[f"layers_0_mamba"]
+    x0 = x  # original embedding, concatenated into every shared-attn input
+    n_groups, rem = divmod(n, k)
+
+    def reshaped(t, count, offset):
+        return jax.tree.map(lambda a: a[offset:offset + count], t)
+
+    def group_reshape(t):  # (n_groups*k, ...) -> (n_groups, k, ...)
+        return jax.tree.map(
+            lambda a: a[: n_groups * k].reshape((n_groups, k) + a.shape[1:]), t)
+
+    shared = params["shared_attn"]
+    w_in = params["shared_in_proj"]
+
+    def shared_block(x):
+        h = jnp.concatenate([x, x0], axis=-1)
+        h = L.linear(h, w_in)
+        y, _ = block_apply(cfg, "attn_dense", shared, h, positions,
+                           segment_ids, ctx, rope_cache=rope_cache)
+        return x + (y - h)  # residual on the projected stream
+
+    def group_body(x, group_params):
+        x, _ = _scan_group(cfg, "mamba", group_params, x, positions,
+                           segment_ids, ctx)
+        x = shared_block(x)
+        return x, None
+
+    if n_groups > 0:
+        x, _ = jax.lax.scan(group_body, x, group_reshape(mamba_params))
+    if rem > 0:
+        tail = reshaped(mamba_params, rem, n_groups * k)
+        x, _ = _scan_group(cfg, "mamba", tail, x, positions, segment_ids, ctx)
+    return x, {}
+
+
+def encode(cfg: ModelConfig, params, frames, ctx: RuntimeCtx = NULL_CTX):
+    """Whisper encoder over stubbed frame embeddings (B, T, D)."""
+    x = frames.astype(cfg.compute_dtype)
+    x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    b, t, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    seg = jnp.ones((b, t), jnp.int32)
+    x, _ = _scan_group(cfg, "enc_attn", params["enc_layers"], x, pos, seg, ctx)
+    return L.layer_norm(x, params["enc_final_norm"], params["enc_final_bias"],
+                        cfg.norm_eps)
+
+
+def forward(
+    cfg: ModelConfig,
+    params,
+    tokens: jnp.ndarray,                 # (B, S) int32
+    *,
+    positions: jnp.ndarray | None = None,
+    segment_ids: jnp.ndarray | None = None,
+    ctx: RuntimeCtx = NULL_CTX,
+    vision_embeds: jnp.ndarray | None = None,   # (B, P, Dv) VLM stub
+    encoder_frames: jnp.ndarray | None = None,  # (B, T, D) audio stub
+) -> tuple[jnp.ndarray, dict]:
+    """Returns (logits (B,S,V), aux losses dict)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if segment_ids is None:
+        segment_ids = jnp.ones((b, s), jnp.int32)
+
+    x = _embed_inputs(cfg, params, tokens, vision_embeds, ctx)
+    x = ctx.constrain(x, ("batch", "seq", None))
+    aux: dict[str, jnp.ndarray] = {}
+    # rope tables once per forward (loop-invariant under the layer scans)
+    rope_cache = None
+    if cfg.family != "ssm":
+        rope_cache = rope_mod.rope_cache(positions, cfg.resolved_head_dim,
+                                         cfg.rope_theta)
+
+    enc_out = None
+    if cfg.family == "audio":
+        assert encoder_frames is not None, "audio arch needs encoder frames"
+        enc_out = encode(cfg, params, encoder_frames, ctx)
+
+    if cfg.family == "hybrid":
+        x, aux = _hybrid_stack(cfg, params, x, positions, segment_ids, ctx,
+                               rope_cache=rope_cache)
+    else:
+        for i, (kind, count) in enumerate(layer_groups(cfg)):
+            if count == 0:
+                continue
+            x, g_aux = _scan_group(cfg, kind, params[f"layers_{i}_{kind}"], x,
+                                   positions, segment_ids, ctx,
+                                   enc_out=enc_out, rope_cache=rope_cache)
+            for name, val in g_aux.items():
+                aux[name] = aux.get(name, 0.0) + val
+
+    if cfg.family == "audio":
+        x = L.layer_norm(x, params["final_norm"], params["final_norm_bias"],
+                         cfg.norm_eps)
+    else:
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    x = ctx.constrain(x, ("batch", "seq", None))
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    else:
+        logits = L.linear(x, params["lm_head"])
+    logits = ctx.constrain(logits, ("batch", "seq", "vocab"))
+    return logits, aux

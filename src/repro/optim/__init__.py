@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedules import (  # noqa: F401
+    constant_with_warmup, cosine_with_warmup, paper_stage_schedule)

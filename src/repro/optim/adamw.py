@@ -1,0 +1,71 @@
+"""AdamW with decoupled weight decay and global-norm clipping (no optax here).
+
+Matches the paper's training setup (Appendix F): AdamW, constant or cosine
+LR with warmup, f32 optimizer state regardless of param dtype.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray     # () int32
+    mu: Any               # first moment, f32 pytree
+    nu: Any               # second moment, f32 pytree
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    learning_rate,                 # float or callable(step) -> float
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float | None = 1.0,
+):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    lr = learning_rate(step) if callable(learning_rate) else learning_rate
+
+    gnorm = global_norm(grads)
+    if clip_norm is not None:
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, AdamWState(step, mu, nu), metrics

@@ -1,0 +1,66 @@
+"""LR schedules matching the paper's Appendix F tables."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+def constant_with_warmup(lr: float, warmup_steps: int):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        return lr * warm
+    return fn
+
+
+def cosine_with_warmup(max_lr: float, min_lr: float, warmup_steps: int,
+                       total_steps: int):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        frac = jnp.clip((step - warmup_steps) /
+                        jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_lr + 0.5 * (max_lr - min_lr) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, max_lr * warm, cos)
+    return fn
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """One row of paper Table 11/13 (scaled-down knobs for local runs)."""
+    name: str
+    seq_len: int
+    rope_theta: float
+    total_steps: int
+    warmup_steps: int
+    lr: float
+    schedule: str = "constant"    # paper: constant for text, cosine for vision
+    min_lr: float | None = None
+    tokens_per_batch: int | None = None
+
+
+# Paper Table 11 — LWM-Text stages (full-scale reference values).
+LWM_TEXT_STAGES = [
+    StageSpec("32K", 2**15, 1e6, 1200, 100, 4e-5, tokens_per_batch=4_000_000),
+    StageSpec("128K", 2**17, 1e7, 3000, 200, 4e-5, tokens_per_batch=4_000_000),
+    StageSpec("256K", 2**18, 1e7, 3000, 200, 4e-5, tokens_per_batch=4_000_000),
+    StageSpec("512K", 2**19, 2.5e7, 720, 50, 4e-5, tokens_per_batch=4_000_000),
+    StageSpec("1M", 2**20, 5e7, 450, 25, 4e-5, tokens_per_batch=4_000_000),
+]
+
+# Paper Table 13 — LWM / LWM-Chat vision-language stages.
+LWM_VISION_STAGES = [
+    StageSpec("1K", 2**10, 5e7, 45000, 1000, 6e-4, "cosine", 6e-5, 8_000_000),
+    StageSpec("8K", 2**13, 5e7, 14000, 500, 6e-4, "cosine", 6e-5, 8_000_000),
+    StageSpec("32K", 2**15, 5e7, 1200, 100, 8e-5, "cosine", 8e-5, 8_000_000),
+    StageSpec("128K", 2**17, 5e7, 450, 50, 8e-5, "cosine", 8e-5, 8_000_000),
+    StageSpec("1M", 2**20, 5e7, 50, 5, 8e-5, "cosine", 8e-5, 8_000_000),
+]
+
+
+def paper_stage_schedule(stage: StageSpec):
+    if stage.schedule == "cosine":
+        return cosine_with_warmup(stage.lr, stage.min_lr or stage.lr,
+                                  stage.warmup_steps, stage.total_steps)
+    return constant_with_warmup(stage.lr, stage.warmup_steps)

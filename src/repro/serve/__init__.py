@@ -1,0 +1,2 @@
+from repro.serve.engine import ServeEngine, Request, Result
+from repro.serve.sampling import greedy, temperature_sample, cfg_logits

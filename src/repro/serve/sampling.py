@@ -1,0 +1,45 @@
+"""Token sampling + classifier-free guidance (paper §4.3.3).
+
+The paper samples vision tokens with classifier-free guidance "on the logits
+for autoregressive sampling": the model is run twice per step — a
+conditional branch (full context) and an unconditional branch (context
+replaced by <bos>) — and the sampled logits are
+
+    logits = uncond + scale * (cond - uncond).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jnp.ndarray) -> jnp.ndarray:
+    """(B, 1, V) -> (B, 1) int32."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(logits: jnp.ndarray, rng: jax.Array,
+                       temperature: float = 1.0,
+                       top_k: int | None = None) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32) / max(temperature, 1e-6)
+    if top_k is not None:
+        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    flat = logits.reshape(-1, logits.shape[-1])
+    toks = jax.random.categorical(rng, flat, axis=-1)
+    return toks.reshape(logits.shape[:-1]).astype(jnp.int32)
+
+
+def cfg_logits(cond: jnp.ndarray, uncond: jnp.ndarray,
+               scale: float = 5.0) -> jnp.ndarray:
+    """Classifier-free guidance combine [HS22], as used by LWM generation."""
+    return uncond + scale * (cond - uncond)
+
+
+def mask_to_vision_range(logits: jnp.ndarray, vision_start: int,
+                         vision_end: int) -> jnp.ndarray:
+    """Constrain sampling to vision-token ids (generation inside <vision>)."""
+    v = logits.shape[-1]
+    ids = jnp.arange(v)
+    ok = (ids >= vision_start) & (ids < vision_end)
+    return jnp.where(ok, logits, -1e30)

@@ -1,0 +1,3 @@
+from repro.train.sharding import ShardingPolicy, make_policy
+from repro.train.train_step import make_train_step, make_eval_step, TrainState
+from repro.train.trainer import Trainer, StageSpec

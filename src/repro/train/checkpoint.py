@@ -1,0 +1,54 @@
+"""Checkpointing: flat-key npz save/restore (no orbax in this environment).
+
+Pytrees are flattened with '/'-joined key paths; the AdamW step counter and a
+small JSON metadata blob ride along. Restores verify shape/dtype agreement so
+progressive-stage re-initialization (32K model -> 128K run) is explicit, not
+accidental.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
+    flat = {}
+    items = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in items:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree: Any, *, metadata: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    flat["__metadata__"] = np.frombuffer(
+        json.dumps(metadata or {}).encode(), dtype=np.uint8)
+    np.savez(path, **flat)
+
+
+def load_checkpoint(path: str, target: Any) -> tuple[Any, dict]:
+    """Restore into the structure of ``target`` (shapes must match)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    meta = json.loads(bytes(data["__metadata__"]).decode()) if "__metadata__" in data else {}
+    paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+    leaves = []
+    for path_elems, old in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_elems)
+        if key not in data:
+            raise KeyError(f"checkpoint missing param {key}")
+        new = data[key]
+        if tuple(new.shape) != tuple(np.shape(old)):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {new.shape} vs target "
+                f"{np.shape(old)} — progressive stages must share the model")
+        leaves.append(new)
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta

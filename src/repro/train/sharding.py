@@ -1,0 +1,246 @@
+"""Sharding policies: logical axes -> mesh axes per (input shape, mesh).
+
+The paper trains with "FSDP, Blockwise Transformer, and RingAttention" on a
+``(dp, fsdp, tp, sp)`` mesh (Appendix F mesh shardings like ``1,-1,16,4`` at
+1M). We map that onto the fixed production mesh axes:
+
+    "data"  — FSDP *and/or* the ring (sequence-parallel) axis
+    "model" — tensor parallel
+    "pod"   — outer data parallel (multi-pod), or an outer ring segment
+
+Policies (cf. DESIGN.md §5):
+    train_4k     batch over ("pod","data"); params FSDP over "data", TP "model"
+    train_ring   batch over "pod"; ring over "data" (paper's long-context
+                 training regime: sequence sharded, used when
+                 global_batch < data-axis size or seq is very long)
+    prefill_32k  batch over ("pod","data"); ring attention off (32k fits)
+    decode_32k   batch over ("pod","data"); KV cache batch-sharded
+    long_500k    batch replicated; KV cache *sequence*-sharded over
+                 ("pod","data") — ring decode with LSE combine (paper §5)
+
+Uneven dims (e.g. starcoder2's 36 heads on a 16-way "model" axis) fall back
+to replication for that axis — recorded so the roofline can call it out.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.context import RuntimeCtx
+
+# Priority when two logical axes of one param want the same mesh axis: the
+# higher-priority one wins, the other is replicated.
+_PRIORITY = ["experts", "ffn", "heads", "kv", "vocab", "embed", "layers"]
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in ax]))
+    return mesh.shape[ax]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh
+    rules: Mapping[str, Any]          # logical axis -> mesh axis (or tuple)
+    batch_axes: Any                   # mesh axes sharding the batch dim
+    ring_axis: Any = None             # sequence/ring axes (train or decode)
+    decode_ring: bool = False
+    striped: bool = False
+    attn_impl: str | None = None
+    replicated_fallbacks: tuple = ()  # (param_path, logical_axis) replicated
+
+    def ctx(self) -> RuntimeCtx:
+        return RuntimeCtx(
+            mesh=self.mesh, rules=dict(self.rules), ring_axis=self.ring_axis,
+            striped=self.striped, batch_axes=self.batch_axes,
+            attn_impl=self.attn_impl, decode_ring=self.decode_ring)
+
+    # -- parameter shardings --------------------------------------------------
+
+    def param_spec(self, shape: tuple[int, ...], axes: tuple) -> P:
+        """PartitionSpec for one param, honoring divisibility + conflicts."""
+        mesh_axes: list = [None] * len(axes)
+        used: set = set()
+        is_expert = "experts" in axes
+        order = sorted(range(len(axes)),
+                       key=lambda i: _PRIORITY.index(axes[i])
+                       if axes[i] in _PRIORITY else 99)
+        for i in order:
+            lax = axes[i]
+            if lax is None or lax == "layers":
+                continue
+            if is_expert and lax == "embed":
+                # Expert weights: FSDP-sharding the contracting (embed) dim
+                # makes every expert einsum a partial-sum -> all-reduce of
+                # the (E, C, F) outputs (measured 1.7 TB/device on
+                # qwen2-moe; EXPERIMENTS §Perf B). When the experts fit
+                # TP-sharded ("experts_embed" rule = None), keep their
+                # embed dim replicated; huge MoEs (deepseek-v3) keep 2D
+                # sharding for memory.
+                lax = "experts_embed"
+            max_ = self.rules.get(lax)
+            if max_ is None:
+                continue
+            names = tuple(max_) if isinstance(max_, (tuple, list)) else (max_,)
+            if any(n in used for n in names):
+                continue
+            if shape[i] % _axis_size(self.mesh, max_) != 0:
+                continue
+            mesh_axes[i] = max_
+            used.update(names)
+        return P(*mesh_axes)
+
+    def param_sharding(self, spec_tree) -> Any:
+        """ParamSpec tree -> NamedSharding tree."""
+        from repro.models import layers as L
+
+        def one(s):
+            return NamedSharding(self.mesh, self.param_spec(s.shape, s.axes))
+
+        return jax.tree.map(one, spec_tree, is_leaf=L.is_spec)
+
+    # -- batch shardings -------------------------------------------------------
+
+    def batch_spec(self, *, seq_sharded: bool = False) -> P:
+        seq_ax = self.ring_axis if seq_sharded else None
+        return P(self.batch_axes, seq_ax)
+
+    def batch_sharding(self, batch_tree, *, seq_sharded: bool = False) -> Any:
+        """dict of (B, S, ...) arrays -> NamedShardings (rank-aware)."""
+
+        def one(x):
+            nd = len(x.shape)
+            if nd == 1:
+                return NamedSharding(self.mesh, P(self.batch_axes))
+            spec = [self.batch_axes,
+                    self.ring_axis if seq_sharded else None]
+            spec += [None] * (nd - 2)
+            return NamedSharding(self.mesh, P(*spec))
+
+        return jax.tree.map(one, batch_tree)
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    # -- KV-cache shardings ----------------------------------------------------
+
+    def cache_sharding(self, cache_tree, *, max_len: int, batch: int) -> Any:
+        """Shardings for decode caches (paper §5 ring-sharded KV cache).
+
+        Cache layout convention: dim0 = stacked layers, dim1 = batch. Any
+        later dim of size ``max_len`` is the cache sequence — sharded over
+        the ring axes when decode_ring (LSE-combine distributed decode),
+        else left local. A rank-5 attention cache's head dim (index 3) is
+        tensor-sharded over "model" when divisible.
+        """
+        tp = self.rules.get("heads")
+
+        def one(x):
+            shape = x.shape
+            spec: list = [None] * len(shape)
+            if len(shape) >= 2 and shape[1] == batch and self.batch_axes:
+                if batch % _axis_size(self.mesh, self.batch_axes) == 0:
+                    spec[1] = self.batch_axes
+            for i in range(2, len(shape)):
+                if shape[i] == max_len and self.decode_ring and self.ring_axis:
+                    if shape[i] % _axis_size(self.mesh, self.ring_axis) == 0:
+                        spec[i] = self.ring_axis
+                        break
+            if (len(shape) == 5 and len(shape) > 3 and tp is not None
+                    and shape[2] == max_len
+                    and shape[3] % _axis_size(self.mesh, tp) == 0):
+                spec[3] = tp
+            return NamedSharding(self.mesh, P(*spec))
+
+        return jax.tree.map(one, cache_tree)
+
+
+def make_policy(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    shape_kind: str,               # "train" | "train_ring" | "prefill" | "decode" | "decode_ring"
+    *,
+    global_batch: int | None = None,
+    striped: bool = False,
+    attn_impl: str | None = None,
+) -> ShardingPolicy:
+    multi_pod = "pod" in mesh.shape
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+
+    # Parameter rules shared by all policies: FSDP over "data", TP over
+    # "model". The ring occupying "data" (train_ring / decode_ring) does NOT
+    # preclude FSDP-sharding params over it: the ring shard_map touches only
+    # activations; per-layer param all-gathers over "data" are standard FSDP
+    # (without it, deepseek-v3 decode leaves 167GB of params per device).
+    fsdp_rules = {"embed": "data", "ffn": "model", "heads": "model",
+                  "kv": "model", "vocab": "model", "experts": "model"}
+    # Expert-weight embed dim: replicate when experts fit TP-sharded (kills
+    # the partial-sum all-reduces, §Perf B); huge MoEs (deepseek-v3) instead
+    # shard the EXPERT dim over the whole mesh (ZeRO-3 style: weights
+    # gathered on use) so no einsum ever contracts a sharded dim.
+    fsdp_rules["experts_embed"] = None
+    if cfg.moe is not None:
+        all_axes = data_axes + ("model",)
+        full = _axis_size(mesh, all_axes)
+        tp = _axis_size(mesh, "model")
+        e_bytes = (3 * cfg.d_model * cfg.moe.expert_d_ff
+                   * cfg.moe.num_experts * 4
+                   * max(cfg.num_layers - cfg.moe.first_dense_layers, 1))
+        if cfg.moe.num_experts % tp == 0:
+            e_bytes //= tp
+        # NOTE: full expert sharding over data*model (ZeRO-3 weight gather)
+        # was measured WORSE on deepseek-v3 (all-gather of 45 GB/layer of
+        # expert weights x 58 layers ~= 5.2 TB/device; §Perf B iter 3,
+        # refuted) — keep 2D expert sharding for huge MoEs.
+        del all_axes, full
+        if e_bytes > 8e9:
+            fsdp_rules["experts_embed"] = "data"
+    tp_only_rules = dict(fsdp_rules)
+
+    if shape_kind == "train":
+        batch_axes = data_axes if multi_pod else "data"
+        bsz = _axis_size(mesh, batch_axes)
+        if global_batch is not None and global_batch % bsz != 0:
+            batch_axes = "data" if not multi_pod else ("pod", "data")
+        rules = dict(fsdp_rules, batch=batch_axes, seq=None,
+                     tokens=batch_axes)
+        return ShardingPolicy(mesh, rules, batch_axes, attn_impl=attn_impl)
+
+    if shape_kind == "train_ring":
+        # Paper's long-context training: sequence over "data" (+"pod"),
+        # batch replicated or over "pod" if it divides.
+        ring = ("pod", "data") if multi_pod else ("data",)
+        rules = dict(tp_only_rules, batch=None, seq=ring,
+                     heads="model", )
+        return ShardingPolicy(mesh, rules, None, ring_axis=ring,
+                              striped=striped, attn_impl=attn_impl)
+
+    if shape_kind == "prefill":
+        batch_axes = data_axes if multi_pod else "data"
+        rules = dict(fsdp_rules, batch=batch_axes, seq=None,
+                     tokens=batch_axes)
+        return ShardingPolicy(mesh, rules, batch_axes, attn_impl=attn_impl)
+
+    if shape_kind == "decode":
+        batch_axes = data_axes if multi_pod else "data"
+        rules = dict(fsdp_rules, batch=batch_axes, seq=None,
+                     tokens=batch_axes)
+        return ShardingPolicy(mesh, rules, batch_axes, attn_impl=attn_impl)
+
+    if shape_kind == "decode_ring":
+        # long_500k: gb=1 — KV cache sequence-sharded over the ring axes,
+        # params TP over "model" (paper §5: 32 TP x 4 SP on v4-128).
+        ring = ("pod", "data") if multi_pod else ("data",)
+        rules = dict(tp_only_rules, batch=None, seq=ring)
+        return ShardingPolicy(mesh, rules, None, ring_axis=ring,
+                              decode_ring=True, attn_impl=attn_impl)
+
+    raise ValueError(shape_kind)

@@ -1,0 +1,115 @@
+"""Train / eval steps: forward + weighted CE (+ MoE aux) + AdamW update.
+
+The step functions close over (cfg, ctx, hyperparams) and take pure pytrees,
+so they jit/pjit cleanly and are what ``launch.dryrun`` lowers against
+ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses
+from repro.models.config import ModelConfig
+from repro.models.context import NULL_CTX, RuntimeCtx
+from repro.models import transformer
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(model, rng: jax.Array) -> TrainState:
+    params = model.init(rng)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+@dataclasses.dataclass(frozen=True)
+class LossConfig:
+    z_loss_coef: float = 1e-4
+    text_weight: float = 1.0
+    vision_weight: float = 1.0      # paper: loss weighting to balance modalities
+    normalize_by: str = "weight_sum"
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params,
+    batch: dict,
+    *,
+    ctx: RuntimeCtx = NULL_CTX,
+    lcfg: LossConfig = LossConfig(),
+) -> tuple[jnp.ndarray, dict]:
+    extras = {}
+    for k in ("vision_embeds", "encoder_frames"):
+        if k in batch:
+            extras[k] = batch[k]
+    logits, aux = transformer.forward(
+        cfg, params, batch["tokens"],
+        positions=batch["positions"], segment_ids=batch["segment_ids"],
+        ctx=ctx, **extras)
+
+    weights = batch["loss_weights"]
+    if "modality_ids" in batch and (lcfg.text_weight != 1.0
+                                    or lcfg.vision_weight != 1.0):
+        weights = weights * losses.modality_weights(
+            batch["modality_ids"], text_weight=lcfg.text_weight,
+            vision_weight=lcfg.vision_weight)
+
+    loss, metrics = losses.weighted_cross_entropy(
+        logits, batch["labels"], weights, normalize_by=lcfg.normalize_by)
+    if lcfg.z_loss_coef:
+        zl = losses.z_loss(logits, weights, lcfg.z_loss_coef)
+        loss = loss + zl
+        metrics["z_loss"] = zl
+    for name, val in aux.items():
+        metrics[name] = val
+        if name in ("moe_aux_loss", "moe_z_loss"):
+            loss = loss + val
+    metrics["total_loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    *,
+    ctx: RuntimeCtx = NULL_CTX,
+    learning_rate: float | Callable = 3e-4,
+    weight_decay: float = 0.1,
+    clip_norm: float | None = 1.0,
+    lcfg: LossConfig = LossConfig(),
+):
+    """Returns train_step(state, batch) -> (state, metrics). Not yet jitted."""
+
+    def train_step(state: TrainState, batch: dict):
+        grad_fn = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, ctx=ctx, lcfg=lcfg), has_aux=True)
+        (_, metrics), grads = grad_fn(state.params)
+        params, opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params,
+            learning_rate=learning_rate, weight_decay=weight_decay,
+            clip_norm=clip_norm)
+        metrics.update(opt_metrics)
+        return TrainState(params, opt), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, *, ctx: RuntimeCtx = NULL_CTX,
+                   lcfg: LossConfig = LossConfig()):
+    def eval_step(params, batch: dict):
+        _, metrics = loss_fn(cfg, params, batch, ctx=ctx, lcfg=lcfg)
+        extras = {k: batch[k] for k in ("vision_embeds", "encoder_frames")
+                  if k in batch}
+        logits, _ = transformer.forward(
+            cfg, params, batch["tokens"], positions=batch["positions"],
+            segment_ids=batch["segment_ids"], ctx=ctx, **extras)
+        return logits, metrics
+
+    return eval_step

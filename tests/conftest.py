@@ -1,0 +1,24 @@
+"""Shared fixtures. Deliberately does NOT set any XLA device-count flags —
+tests run against the single real CPU device; multi-device behaviour is
+exercised in subprocesses (tests/test_ring.py) and by the dry-run driver.
+"""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def np_rng():
+    return np.random.default_rng(0)

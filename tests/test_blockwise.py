@@ -1,0 +1,139 @@
+"""BPT blockwise primitives: equivalence with full attention + carry algebra."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blockwise
+from repro.core.attention import full_attention
+
+
+def _inputs(rng, b=2, s=256, h=4, hkv=2, d=32):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    seg = jnp.concatenate([jnp.ones((b, s // 2), jnp.int32),
+                           jnp.full((b, s - s // 2), 2, jnp.int32)], axis=1)
+    return q, k, v, pos, seg
+
+
+@pytest.mark.parametrize("qb,kb", [(64, 64), (128, 32), (32, 128), (256, 256)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_blockwise_matches_full(rng, qb, kb, causal):
+    q, k, v, pos, seg = _inputs(rng)
+    out = blockwise.blockwise_attention(
+        q, k, v, causal=causal, q_positions=pos, kv_positions=pos,
+        q_segment_ids=seg, kv_segment_ids=seg, q_block_size=qb,
+        kv_block_size=kb)
+    ref = full_attention(q, k, v, causal=causal, q_positions=pos,
+                         kv_positions=pos, q_segment_ids=seg,
+                         kv_segment_ids=seg)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=1e-4)
+
+
+def test_blockwise_grads_match_full(rng):
+    q, k, v, pos, seg = _inputs(rng, s=128)
+
+    def mk(fn):
+        return lambda q: jnp.sum(jnp.tanh(fn(q)))
+
+    f_b = mk(lambda q: blockwise.blockwise_attention(
+        q, k, v, causal=True, q_positions=pos, kv_positions=pos,
+        q_segment_ids=seg, kv_segment_ids=seg, q_block_size=32,
+        kv_block_size=32))
+    f_f = mk(lambda q: full_attention(
+        q, k, v, causal=True, q_positions=pos, kv_positions=pos,
+        q_segment_ids=seg, kv_segment_ids=seg))
+    np.testing.assert_allclose(jax.grad(f_b)(q), jax.grad(f_f)(q),
+                               atol=5e-5, rtol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4), st.integers(1, 8))
+def test_combine_carries_associative(seed, heads, qlen):
+    """(a ⊕ b) ⊕ c == a ⊕ (b ⊕ c): required for ring/tree decode combines."""
+    r = np.random.default_rng(seed)
+
+    def carry():
+        return blockwise.AttnCarry(
+            acc=jnp.asarray(r.normal(size=(1, qlen, heads, 8)), jnp.float32),
+            m=jnp.asarray(r.normal(size=(1, qlen, heads)), jnp.float32),
+            l=jnp.asarray(np.abs(r.normal(size=(1, qlen, heads))) + 0.1,
+                          jnp.float32))
+
+    a, b, c = carry(), carry(), carry()
+    lhs = blockwise.combine_carries(blockwise.combine_carries(a, b), c)
+    rhs = blockwise.combine_carries(a, blockwise.combine_carries(b, c))
+    for x, y in zip(lhs, rhs):
+        np.testing.assert_allclose(x, y, atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_combine_carries_commutative(seed):
+    r = np.random.default_rng(seed)
+
+    def carry():
+        return blockwise.AttnCarry(
+            acc=jnp.asarray(r.normal(size=(1, 4, 2, 8)), jnp.float32),
+            m=jnp.asarray(r.normal(size=(1, 4, 2)), jnp.float32),
+            l=jnp.asarray(np.abs(r.normal(size=(1, 4, 2))) + 0.1, jnp.float32))
+
+    a, b = carry(), carry()
+    for x, y in zip(blockwise.combine_carries(a, b),
+                    blockwise.combine_carries(b, a)):
+        np.testing.assert_allclose(x, y, atol=1e-5, rtol=1e-5)
+
+
+def test_split_kv_equals_single_pass(rng):
+    """Folding K/V in two chunks == one pass (the ring-step invariant)."""
+    q, k, v, pos, seg = _inputs(rng, s=128)
+    b, s, h, d = q.shape
+    carry = blockwise.init_carry(b, s, h, d)
+    one = blockwise.attend_shard(q, k, v, carry, q_positions=pos,
+                                 kv_positions=pos, causal=True,
+                                 kv_block_size=32)
+    half = s // 2
+    c2 = blockwise.init_carry(b, s, h, d)
+    c2 = blockwise.attend_shard(q, k[:, :half], v[:, :half], c2,
+                                q_positions=pos, kv_positions=pos[:, :half],
+                                causal=True, kv_block_size=32)
+    c2 = blockwise.attend_shard(q, k[:, half:], v[:, half:], c2,
+                                q_positions=pos, kv_positions=pos[:, half:],
+                                causal=True, kv_block_size=32)
+    np.testing.assert_allclose(blockwise.finalize_carry(one, jnp.float32),
+                               blockwise.finalize_carry(c2, jnp.float32),
+                               atol=2e-5, rtol=1e-4)
+    # order independence (shards arrive in any rotation order)
+    c3 = blockwise.init_carry(b, s, h, d)
+    c3 = blockwise.attend_shard(q, k[:, half:], v[:, half:], c3,
+                                q_positions=pos, kv_positions=pos[:, half:],
+                                causal=True, kv_block_size=32)
+    c3 = blockwise.attend_shard(q, k[:, :half], v[:, :half], c3,
+                                q_positions=pos, kv_positions=pos[:, :half],
+                                causal=True, kv_block_size=32)
+    np.testing.assert_allclose(blockwise.finalize_carry(c2, jnp.float32),
+                               blockwise.finalize_carry(c3, jnp.float32),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_blockwise_ffn_equivalence(rng):
+    x = jax.random.normal(rng, (2, 256, 64))
+    w = jax.random.normal(jax.random.fold_in(rng, 1), (64, 64))
+    fn = lambda c: jnp.tanh(c @ w)
+    np.testing.assert_allclose(blockwise.blockwise_ffn(fn, x, chunk_size=64),
+                               fn(x), atol=1e-6)
+
+
+def test_fully_masked_rows_zero(rng):
+    """Rows whose every key is masked produce zeros, not NaN."""
+    q, k, v, pos, seg = _inputs(rng, s=64)
+    seg_q = jnp.full_like(seg, 3)        # no kv shares segment 3
+    out = blockwise.blockwise_attention(
+        q, k, v, causal=True, q_positions=pos, kv_positions=pos,
+        q_segment_ids=seg_q, kv_segment_ids=seg, q_block_size=32,
+        kv_block_size=32)
+    assert bool(jnp.all(out == 0.0))

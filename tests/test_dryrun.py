@@ -1,0 +1,36 @@
+"""One end-to-end dry-run compile in a subprocess (512 fake devices).
+
+The full 10-arch x 4-shape x 2-mesh sweep runs via
+``python -m repro.launch.dryrun --all --mesh both`` and is recorded in
+EXPERIMENTS.md; this test just proves the machinery stays green.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.mark.slow
+def test_dryrun_single_combo():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "granite-3-2b", "--shape", "train_4k", "--mesh", "pod1"],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
+    assert "1/1 dry-runs compiled successfully" in r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_decode_ring_multipod():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "lwm-7b", "--shape", "long_500k", "--mesh", "pod2"],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"

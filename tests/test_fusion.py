@@ -1,0 +1,43 @@
+"""Pallas-fusion accounting (launch/fusion.py): analytic IO model sanity +
+the measured XLA attention traffic scaling."""
+import pytest
+
+from repro.configs import get_config
+from repro.launch.fusion import (flash_attention_io_bytes,
+                                 measure_xla_attention_bytes)
+
+
+def test_flash_io_scales_linearly_in_skv():
+    kw = dict(s_local=4096, num_q_heads=8, num_kv_heads=8, head_dim=128,
+              batch_per_device=1, backward=False)
+    b1 = flash_attention_io_bytes(s_kv=32768, **kw)
+    b2 = flash_attention_io_bytes(s_kv=65536, **kw)
+    # K/V streaming dominates at s_kv >> s_local: doubling s_kv ~doubles IO
+    assert 1.8 < b2 / b1 < 2.1
+
+
+def test_flash_io_reread_factor():
+    kw = dict(s_kv=8192, num_q_heads=8, num_kv_heads=8, head_dim=128,
+              batch_per_device=1, backward=False)
+    b1 = flash_attention_io_bytes(s_local=4096, **kw)   # 1 q tile
+    b2 = flash_attention_io_bytes(s_local=8192, **kw)   # 2 q tiles
+    assert b2 > 1.8 * b1                                # kv read twice
+
+
+def test_backward_costs_more():
+    kw = dict(s_local=4096, s_kv=4096, num_q_heads=8, num_kv_heads=8,
+              head_dim=128, batch_per_device=1)
+    assert (flash_attention_io_bytes(backward=True, **kw)
+            > 2 * flash_attention_io_bytes(backward=False, **kw))
+
+
+@pytest.mark.slow
+def test_measured_xla_attention_quadratic():
+    """The XLA-lowered blockwise attention's traffic grows ~quadratically
+    with sequence length — the §3.1 motivation for Pallas fusion."""
+    cfg = get_config("granite-3-2b")
+    b1 = measure_xla_attention_bytes(cfg, s_local=1024, batch_per_device=1,
+                                     backward=False)["bytes"]
+    b2 = measure_xla_attention_bytes(cfg, s_local=2048, batch_per_device=1,
+                                     backward=False)["bytes"]
+    assert b2 / b1 > 3.0    # quadratic => ~4x (minus linear edges)

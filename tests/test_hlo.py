@@ -1,0 +1,68 @@
+"""HLO cost walker: trip-count scaling, dot flops, collective traffic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo as H
+
+
+def compile_text(f, *structs):
+    return jax.jit(f).lower(*structs).compile().as_text()
+
+
+def test_scan_flops_scaled():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    s = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    cost = H.full_cost(compile_text(f, s, s), num_devices=1)
+    expected = 2 * 256 ** 3 * 10
+    assert abs(cost.flops - expected) / expected < 0.02
+
+
+def test_nested_scan_flops():
+    def f(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=4)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    s = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    cost = H.full_cost(compile_text(f, s, s), num_devices=1)
+    expected = 2 * 128 ** 3 * 12
+    assert abs(cost.flops - expected) / expected < 0.05
+
+
+def test_dot_general_contracting_dims():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+
+    a = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)
+    cost = H.full_cost(compile_text(f, a, b), num_devices=1)
+    expected = 2 * 4 * 32 * 16 * 64
+    assert abs(cost.flops - expected) / expected < 0.05
+
+
+def test_shape_bytes():
+    assert H.shape_bytes("f32[16,4]{1,0}") == 256
+    assert H.shape_bytes("bf16[8]") == 16
+    assert H.shape_bytes("(f32[4], s32[2])") == 24
+    assert H.shape_bytes("pred[10]") == 10
+
+
+def test_memory_bytes_reasonable():
+    def f(x, w):
+        return x @ w
+
+    s = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    cost = H.full_cost(compile_text(f, s, s), num_devices=1)
+    # one dot: 2 operands + result = 3 MB
+    assert 2.5e6 < cost.bytes_accessed < 5e6

@@ -1,0 +1,135 @@
+"""Masked sequence packing: property tests on weights + packer invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.packing import (PAD_SEGMENT_ID, num_examples,
+                                packed_loss_weights, segment_token_counts)
+from repro.data.packing import Example, pack_examples
+from repro.data.vocab import build_vocab
+
+VOCAB = build_vocab(512, codebook_size=64)
+
+
+def random_batch(r, b=2, s=128, max_seg=6):
+    """Contiguous-segment layout like the packer produces."""
+    seg = np.zeros((b, s), np.int32)
+    loss = np.zeros((b, s), bool)
+    next_seg = 1
+    for i in range(b):
+        cur = 0
+        while cur < s and next_seg < max_seg:
+            n = int(r.integers(4, s // 2))
+            seg[i, cur:cur + n] = next_seg
+            loss[i, cur:cur + n] = r.random(min(n, s - cur)) < 0.5
+            next_seg += 1
+            cur += n
+    return jnp.asarray(seg), jnp.asarray(loss), next_seg
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_masked_weights_sum_to_one_per_segment(seed):
+    """Paper §4.2: each packed example contributes exactly 1.0 total weight
+    (== the non-packed + padded regime)."""
+    r = np.random.default_rng(seed)
+    seg, loss, max_seg = random_batch(r)
+    w = packed_loss_weights(seg, loss, max_segments=max_seg + 1)
+    w = np.asarray(w)
+    for sid in range(1, max_seg):
+        m = np.asarray(seg) == sid
+        has_loss = bool((np.asarray(loss) & m).any())
+        total = w[m].sum() if m.any() else 0.0
+        if has_loss:
+            np.testing.assert_allclose(total, 1.0, atol=1e-5)
+        else:
+            assert total == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_weights_zero_on_pad_and_nonloss(seed):
+    r = np.random.default_rng(seed)
+    seg, loss, max_seg = random_batch(r)
+    for mode in ("masked", "naive"):
+        w = np.asarray(packed_loss_weights(seg, loss, max_segments=max_seg + 1,
+                                           mode=mode))
+        assert (w[np.asarray(seg) == PAD_SEGMENT_ID] == 0).all()
+        assert (w[~np.asarray(loss)] == 0).all()
+        assert (w >= 0).all()
+
+
+def test_naive_weights_are_loss_mask():
+    r = np.random.default_rng(0)
+    seg, loss, max_seg = random_batch(r)
+    w = np.asarray(packed_loss_weights(seg, loss, max_segments=max_seg + 1,
+                                       mode="naive"))
+    expected = np.asarray(loss) & (np.asarray(seg) != PAD_SEGMENT_ID)
+    np.testing.assert_array_equal(w > 0, expected)
+    np.testing.assert_allclose(w[expected], 1.0)
+
+
+def test_segment_token_counts():
+    seg = jnp.asarray([[1, 1, 2, 2, 2, 0]])
+    loss = jnp.asarray([[True, False, True, True, False, True]])
+    counts = segment_token_counts(seg, loss, max_segments=3)
+    np.testing.assert_array_equal(np.asarray(counts), [[1, 1, 2]])
+
+
+def test_num_examples():
+    seg = jnp.asarray([[1, 1, 2, 2, 0, 0],
+                       [3, 3, 3, 4, 4, 5]])
+    assert float(num_examples(seg)) == 5.0
+
+
+# -- packer invariants ---------------------------------------------------------
+
+def _examples(r, n=20):
+    out = []
+    for _ in range(n):
+        ln = int(r.integers(4, 64))
+        toks = r.integers(0, VOCAB.text_size, ln).astype(np.int32)
+        mask = r.random(ln) < 0.5
+        out.append(Example(toks, mask))
+    return out
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_packer_invariants(seed):
+    r = np.random.default_rng(seed)
+    batch = pack_examples(_examples(r), vocab=VOCAB, seq_len=128, batch_rows=3)
+    seg = batch.segment_ids
+    toks = batch.tokens
+    # tokens in range; pad rows use vocab.pad
+    assert toks.max() < VOCAB.size
+    assert (toks[seg == 0] == VOCAB.pad).all()
+    for i in range(seg.shape[0]):
+        row = seg[i]
+        nz = row[row != 0]
+        # segments are contiguous, increasing
+        changes = np.flatnonzero(np.diff(row) != 0)
+        assert (np.diff(nz) >= 0).all()
+        # positions restart at 0 per segment
+        for sid in np.unique(nz):
+            p = batch.positions[i][row == sid]
+            np.testing.assert_array_equal(p, np.arange(len(p)))
+        # labels are next-token within segment: tokens[j+1] where same segment
+        for j in range(127):
+            if row[j] != 0 and row[j] == row[j + 1]:
+                assert batch.labels[i, j] == toks[i, j + 1]
+    # no loss on last token of a segment (predicts nothing)
+    for i in range(seg.shape[0]):
+        row = seg[i]
+        for sid in np.unique(row[row != 0]):
+            idx = np.flatnonzero(row == sid)
+            assert not batch.loss_mask[i, idx[-1]]
+
+
+def test_packer_truncates_long_examples():
+    r = np.random.default_rng(0)
+    long = Example(r.integers(0, 100, 500).astype(np.int32))
+    batch = pack_examples([long] * 3, vocab=VOCAB, seq_len=128, batch_rows=2)
+    assert batch.tokens.shape == (2, 128)
+    assert batch.num_segments >= 1

@@ -1,0 +1,83 @@
+"""Serving engine behaviour: determinism, eos, batching, sampling, CFG."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models.registry import build_model
+from repro.serve import Request, ServeEngine
+from repro.serve.sampling import cfg_logits, greedy, mask_to_vision_range
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_reduced("lwm-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return ServeEngine(cfg, params, max_len=96), cfg
+
+
+def test_greedy_deterministic(engine):
+    eng, cfg = engine
+    req = [Request(prompt=np.arange(10, 20, dtype=np.int32),
+                   max_new_tokens=6)]
+    a = eng.generate(req)[0].tokens
+    b = eng.generate(req)[0].tokens
+    np.testing.assert_array_equal(a, b)
+
+
+def test_batch_matches_single(engine):
+    """Batched generation must equal per-request generation (greedy)."""
+    eng, cfg = engine
+    p1 = np.arange(10, 25, dtype=np.int32)
+    p2 = np.arange(30, 40, dtype=np.int32)
+    single1 = eng.generate([Request(prompt=p1, max_new_tokens=5)])[0].tokens
+    single2 = eng.generate([Request(prompt=p2, max_new_tokens=5)])[0].tokens
+    both = eng.generate([Request(prompt=p1, max_new_tokens=5),
+                         Request(prompt=p2, max_new_tokens=5)])
+    np.testing.assert_array_equal(both[0].tokens, single1)
+    np.testing.assert_array_equal(both[1].tokens, single2)
+
+
+def test_eos_stops(engine):
+    eng, cfg = engine
+    req = [Request(prompt=np.arange(5, 15, dtype=np.int32),
+                   max_new_tokens=20)]
+    free = eng.generate(req)[0]
+    # force eos = the first generated token => stops after 1 step
+    req_eos = [Request(prompt=np.arange(5, 15, dtype=np.int32),
+                       max_new_tokens=20, eos_id=int(free.tokens[0]))]
+    res = eng.generate(req_eos)[0]
+    assert res.steps == 1
+
+
+def test_temperature_sampling_runs(engine):
+    eng, cfg = engine
+    req = [Request(prompt=np.arange(5, 15, dtype=np.int32),
+                   max_new_tokens=5, temperature=1.0, top_k=16)]
+    res = eng.generate(req)[0]
+    assert res.tokens.shape == (5,)
+    assert (res.tokens < cfg.vocab_size).all()
+
+
+def test_cfg_guidance_runs(engine):
+    eng, cfg = engine
+    req = [Request(prompt=np.arange(5, 15, dtype=np.int32),
+                   max_new_tokens=4, cfg_scale=3.0)]
+    res = eng.generate(req)[0]
+    assert res.tokens.shape == (4,)
+
+
+def test_cfg_logits_identity():
+    c = jnp.asarray([1.0, 2.0])
+    u = jnp.asarray([0.5, 0.5])
+    np.testing.assert_allclose(np.asarray(cfg_logits(c, u, 1.0)),
+                               np.asarray(c))
+
+
+def test_vision_range_mask():
+    logits = jnp.zeros((1, 1, 10))
+    masked = mask_to_vision_range(logits, 4, 8)
+    tok = greedy(masked)
+    assert 4 <= int(tok[0, 0]) < 8

@@ -1,0 +1,138 @@
+"""Trainer: loss decreases, progressive stages carry params, checkpoints
+roundtrip, schedules and optimizer behave."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.data.needle import NeedleTask
+from repro.data.vocab import build_vocab
+from repro.models.registry import build_model
+from repro.optim import schedules
+from repro.optim.adamw import adamw_init, adamw_update, global_norm
+from repro.train import StageSpec, Trainer
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def test_loss_decreases_overfit():
+    """30 steps on a fixed tiny batch must cut loss substantially."""
+    cfg = get_reduced("granite-3-2b")
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, learning_rate=3e-3))
+    rng = np.random.default_rng(0)
+    b, s = 2, 64
+    batch = {
+        "tokens": rng.integers(0, cfg.vocab_size, (b, s)).astype(np.int32),
+        "segment_ids": np.ones((b, s), np.int32),
+        "positions": np.tile(np.arange(s, dtype=np.int32), (b, 1)),
+        "loss_weights": np.ones((b, s), np.float32),
+    }
+    batch["labels"] = np.roll(batch["tokens"], -1, axis=1)
+    first = None
+    for i in range(30):
+        state, m = step(state, batch)
+        if first is None:
+            first = float(m["loss"])
+    last = float(m["loss"])
+    assert last < first * 0.5, (first, last)
+
+
+def test_progressive_stages_share_params(tmp_path):
+    cfg = get_reduced("lwm-7b")
+    stages = [StageSpec("a", 128, 1e4, 3, 2), StageSpec("b", 256, 5e4, 3, 2)]
+    tr = Trainer(cfg, stages, seed=0, log_every=100,
+                 checkpoint_dir=str(tmp_path), log_fn=lambda *_: None)
+    hist = tr.run()
+    assert len(hist) == 2
+    assert hist[1]["rope_theta"] == 5e4
+    assert os.path.exists(tmp_path / "a.npz")
+    assert os.path.exists(tmp_path / "b.npz")
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_reduced("granite-3-2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, params, metadata={"step": 7})
+    restored, meta = load_checkpoint(path, params)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    cfg = get_reduced("granite-3-2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, params)
+    bigger = build_model(cfg.replace(d_ff=cfg.d_ff * 2)).init(
+        jax.random.PRNGKey(0))
+    with pytest.raises((ValueError, KeyError)):
+        load_checkpoint(path, bigger)
+
+
+def test_schedules():
+    c = schedules.constant_with_warmup(1e-3, 10)
+    assert float(c(1)) < 1e-3 and abs(float(c(10)) - 1e-3) < 1e-9
+    assert abs(float(c(100)) - 1e-3) < 1e-9
+    cos = schedules.cosine_with_warmup(1e-3, 1e-4, 10, 100)
+    assert float(cos(50)) < 1e-3
+    assert abs(float(cos(100)) - 1e-4) < 1e-6
+
+
+def test_adamw_matches_reference_step():
+    """One AdamW step vs hand-computed reference."""
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    g = {"w": jnp.asarray([0.1, 0.2])}
+    st = adamw_init(p)
+    lr, b1, b2, eps, wd = 1e-2, 0.9, 0.95, 1e-8, 0.1
+    newp, st2, m = adamw_update(g, st, p, learning_rate=lr, b1=b1, b2=b2,
+                                eps=eps, weight_decay=wd, clip_norm=None)
+    mu = 0.1 * np.asarray([0.1, 0.2])
+    nu = 0.05 * np.asarray([0.1, 0.2]) ** 2
+    mhat = mu / (1 - b1)
+    vhat = nu / (1 - b2)
+    ref = np.asarray([1.0, -2.0]) - lr * (
+        mhat / (np.sqrt(vhat) + eps) + wd * np.asarray([1.0, -2.0]))
+    np.testing.assert_allclose(np.asarray(newp["w"]), ref, rtol=1e-6)
+    assert int(st2.step) == 1
+
+
+def test_grad_clipping():
+    p = {"w": jnp.ones(4)}
+    g = {"w": jnp.full(4, 100.0)}
+    st = adamw_init(p)
+    _, _, m = adamw_update(g, st, p, learning_rate=0.0, clip_norm=1.0)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_needle_finetune_learns_retrieval():
+    """End-to-end: a tiny model fine-tuned on the needle task beats chance."""
+    cfg = get_reduced("granite-3-2b")
+    vocab = build_vocab(cfg.vocab_size)
+    nt = NeedleTask(vocab, seed=0)
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, learning_rate=1e-3))
+    s = 128
+    batch_np = nt.batch(4, s, num_needles=1, num_retrieve=1)
+    batch = {
+        "tokens": batch_np["tokens"],
+        "labels": np.roll(batch_np["tokens"], -1, axis=1),
+        "segment_ids": np.ones((4, s), np.int32),
+        "positions": np.tile(np.arange(s, dtype=np.int32), (4, 1)),
+        "loss_weights": np.roll(batch_np["loss_mask"], -1,
+                                axis=1).astype(np.float32),
+    }
+    losses = []
+    for i in range(60):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.6, (losses[0], losses[-1])
