@@ -23,7 +23,8 @@ TOKENS_PER_BATCH = 4 * 2 ** 20          # paper: 4M tokens per batch
 
 
 def main():
-    from repro.launch.fusion import stage_fusion_adjustment
+    from repro.launch.fusion import (FusionAdjustment, ring_flash_io_bytes,
+                                     stage_fusion_adjustment)
     from repro.launch.roofline import PEAK_FLOPS
 
     quick = "--quick" in sys.argv
@@ -59,6 +60,24 @@ def main():
             step_lb = max(terms.values())
             row["mfu_bound_fused"] = round(
                 float(row_model_flops(r)) / (step_lb * 256 * PEAK_FLOPS), 4)
+            # Fused-ring engine (carry-in/carry-out kernel per arriving
+            # shard): per-step carry round-trips included, vs the
+            # single-sweep flash model above.
+            b_local = max(gb // bsh, 1)
+            ring_fused_total = ring_flash_io_bytes(
+                s_local=seq // ring, ring_devices=ring,
+                num_q_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim,
+                batch_per_device=b_local) * cfg.num_layers
+            ring_adj = FusionAdjustment(
+                xla_attn_bytes=adj.xla_attn_bytes,
+                flash_attn_bytes=ring_fused_total, layers=cfg.num_layers)
+            mem_rf = ring_adj.fused_memory_s(roof.memory_s)
+            row["ring_fused_attn_TB"] = round(ring_fused_total / 1e12, 3)
+            row["memory_s_ring_fused"] = round(mem_rf, 3)
+            step_lb_rf = max(roof.compute_s, mem_rf, roof.collective_s)
+            row["mfu_bound_ring_fused"] = round(
+                float(row_model_flops(r)) / (step_lb_rf * 256 * PEAK_FLOPS), 4)
         print("STAGE_ROW " + json.dumps(row), flush=True)
 
 

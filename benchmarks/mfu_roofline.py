@@ -8,6 +8,11 @@ MFU stays high as context grows because RingAttention overlaps K/V exchange
 with blockwise compute — shows up as the collective term staying under the
 compute term across stages.
 
+Each row also carries the Pallas-fusion adjusted terms: ``mfu_bound_fused``
+(single-sweep flash model) and ``mfu_bound_ring_fused`` (the fused-ring
+carry-in/carry-out kernel, including per-step carry round-trips) — the
+"vs XLA compiler" delta of paper §3.1.
+
 Runs in a subprocess (needs the 512-device XLA flag before jax init).
 """
 from __future__ import annotations

@@ -20,7 +20,8 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import chat_mix, context_stages, mfu_roofline, needle, packing_ablation
+from benchmarks import (chat_mix, context_stages, mfu_roofline, needle,
+                        packing_ablation, ring_fused)
 
 BENCHES = {
     "context_stages": lambda q: context_stages.run(quick=q),
@@ -29,6 +30,8 @@ BENCHES = {
     "packing_ablation": lambda q: packing_ablation.run(quick=q),
     "chat_mix": lambda q: chat_mix.run(quick=q),
     "mfu_roofline": lambda q: mfu_roofline.run(quick=q),
+    # XLA-vs-fused RingAttention step accounting -> BENCH_ring_fused.json
+    "ring_fused": lambda q: ring_fused.run(quick=q),
 }
 
 

@@ -1,0 +1,42 @@
+"""Version compatibility for the jax SPMD API surface this repo uses.
+
+The code targets current jax (``jax.shard_map`` with ``check_vma``,
+``jax.lax.pcast`` for varying-manifest-axis casts, ``jax.make_mesh`` with
+``axis_types``); 0.4.x releases ship the same functionality as
+``jax.experimental.shard_map.shard_map(check_rep=...)`` and have neither
+pcast (no VMA system — the cast is a no-op there) nor mesh axis types.
+Everything multi-device goes through these wrappers so one import works on
+either line.
+"""
+from __future__ import annotations
+
+import jax
+
+_HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_PCAST = hasattr(jax.lax, "pcast")
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` on new jax, experimental shard_map on 0.4.x."""
+    if _HAS_NEW_SHARD_MAP:
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check)
+
+
+def pcast_varying(x, axis_names):
+    """Mark ``x`` varying over ``axis_names`` (identity pre-VMA jax)."""
+    if _HAS_PCAST:
+        return jax.lax.pcast(x, axis_names, to="varying")
+    return x
+
+
+def make_mesh(axis_shapes, axis_names):
+    """Mesh with Auto axis types where the installed jax supports them."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)

@@ -3,9 +3,23 @@
 Exact attention with the sequence sharded over a mesh axis. Each device holds
 its local Q/K/V shard; K/V shards rotate around the ring with
 ``jax.lax.ppermute`` while every device folds the arriving shard into its
-flash-attention running statistics (``blockwise.attend_shard``). After
-``ring_size`` steps every query has seen every key — exact, no approximation,
-per-device memory independent of total sequence length.
+flash-attention running statistics. After ``ring_size`` steps every query has
+seen every key — exact, no approximation, per-device memory independent of
+total sequence length.
+
+Two per-shard engines, selected by ``impl`` (see ``resolve_ring_impl``):
+
+  impl          engine                       backend     logits live in
+  "pallas"      carry-in/carry-out Pallas    TPU         VMEM (fused)
+                kernel (kernels/ops.py
+                ``ring_flash_attention``)
+  "interpret"   same kernel, interpreted     any (CPU)   VMEM-equivalent
+  "xla"/"ref"   ``blockwise.attend_shard``   any         HBM (materialized)
+  "auto"/None   pallas on TPU, xla else      —           —
+
+The single-device analogue is ``cfg.attn_impl`` (models/transformer.py
+``_attend``): full / blockwise / pallas / interpret for the local-sequence
+case; ``cfg.ring_impl`` / ``ctx.ring_impl`` govern the sharded ring here.
 
 Overlap: inside the loop the next-shard ``ppermute`` is issued *before* the
 block compute consumes the current shard, so the two have no data dependency
@@ -32,6 +46,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import jax_compat as jc
 
 from repro.core import blockwise
 from repro.core.blockwise import AttnCarry
@@ -85,6 +101,30 @@ def _rotate(xs, axis_name):
     raise ValueError(f"ring over >2 axes not supported: {axes}")
 
 
+def resolve_ring_impl(impl: str | None, *, logits_soft_cap=None) -> str:
+    """Normalize a ring impl request to "pallas" | "interpret" | "xla".
+
+    Dispatch matrix (mirrors kernels/ops.py):
+      "pallas"     fused carry-in/carry-out Pallas flash kernel — TPU
+      "interpret"  same fused kernel body via the Pallas interpreter — any
+                   backend (CPU parity tests)
+      "xla"/"ref"  blockwise einsum loop (materialized logits tiles) — the
+                   paper's XLA-compiler baseline, and the only path that
+                   supports ``logits_soft_cap``
+      "auto"/None  pallas on TPU, xla elsewhere
+    """
+    if impl not in (None, "auto", "ref", "xla", "pallas", "interpret"):
+        raise ValueError(f"unknown ring impl {impl!r}; expected one of "
+                         "auto|pallas|interpret|xla|ref")
+    if logits_soft_cap is not None:
+        return "xla"              # soft cap not implemented in the kernel
+    if impl in (None, "auto"):
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "ref":
+        return "xla"
+    return impl
+
+
 def ring_attention(
     q: jnp.ndarray,                 # (B, S_local, H, D)
     k: jnp.ndarray,                 # (B, S_local, Hkv, D)
@@ -97,18 +137,38 @@ def ring_attention(
     kv_segment_ids: jnp.ndarray | None = None,
     causal: bool = True,
     kv_block_size: int = 512,
+    q_block_size: int = 512,
     logits_soft_cap: float | None = None,
     skip_masked_blocks: bool = True,
+    impl: str | None = None,
 ) -> jnp.ndarray:
-    """Exact ring attention over the local query shard. Runs inside shard_map."""
+    """Exact ring attention over the local query shard. Runs inside shard_map.
+
+    ``impl`` selects the per-shard engine (see ``resolve_ring_impl``): the
+    fused Pallas flash kernel folds each arriving K/V shard into the carry
+    in VMEM; the "xla" path is the original blockwise einsum loop.
+    """
     b, s_local, h, d = q.shape
+    impl = resolve_ring_impl(impl, logits_soft_cap=logits_soft_cap)
+    if v.shape[-1] != d or k.shape[-1] != d:
+        # Asymmetric head dims (MLA: qk_nope+qk_rope vs v_head_dim) — the
+        # fused kernel tiles assume one head_dim; use the blockwise loop.
+        impl = "xla"
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import ops as kops  # lazy: avoids import cycle
+        return kops.ring_flash_attention(
+            q, k, v, axis_name=axis_name,
+            q_positions=q_positions, kv_positions=kv_positions,
+            q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
+            causal=causal, q_block=q_block_size, kv_block=kv_block_size,
+            impl=impl, block_skip=skip_masked_blocks)
     n = ring_size(axis_name)
     axes = _axis_tuple(axis_name)
 
     carry = blockwise.init_carry(b, s_local, h, v.shape[-1])
     # Mark the (constant) initial carry as varying over the ring axes so both
     # branches of the causal block-skip `cond` have matching vma types.
-    carry = jax.tree.map(lambda x: jax.lax.pcast(x, axes, to="varying"), carry)
+    carry = jax.tree.map(lambda x: jc.pcast_varying(x, axes), carry)
     seg_dummy = jnp.zeros_like(kv_positions) if kv_segment_ids is None else kv_segment_ids
 
     def step(i, state):

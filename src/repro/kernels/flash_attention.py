@@ -20,13 +20,29 @@ TPU mapping
   f32 in VMEM regardless of input dtype.
 * Masking: absolute positions + segment ids ride in SMEM-friendly int32
   blocks; causal and segment masks are applied on the logits tile. A
-  *static* causal block skip (iq, ik grid indices) applies when the caller
-  guarantees monotone contiguous positions (``static_causal=True``);
-  otherwise blocks are only masked dynamically (striped/ring layouts).
+  *dynamic* causal block skip — driven by the per-block position ranges,
+  not grid indices — drops the whole tile's matmuls when every key in the
+  block is strictly in the future of every query. Because it reads the
+  absolute positions it is correct for contiguous, striped, and ring
+  (rotating-shard) layouts alike.
+
+Carry-in/carry-out variant (``flash_attention_fwd_carry``): the forward
+takes and returns the running online-softmax statistics ``(acc, m, l)``
+instead of always initializing/finalizing. One invocation folds one
+arriving K/V shard into the ring carry entirely in VMEM — this is the
+"fuse Blockwise RingAttention with FlashAttention using Pallas" engine
+used by ``kernels.ops.ring_flash_attention``.
 
 Backward pass: standard two-kernel flash backward (dq, then dk/dv) using the
 saved logsumexp; delta = rowsum(dO * O) is computed outside (cheap, fused by
-XLA).
+XLA). The ring backward reuses these kernels per arriving shard with the
+*global* lse (see ops.py).
+
+Impl dispatch matrix (see also kernels/ops.py and core/ring_attention.py):
+  "pallas"     compiled Mosaic kernel — TPU only
+  "interpret"  same kernel body, Pallas interpreter — any backend (CPU tests)
+  "ref"        pure-jnp oracle / XLA blockwise path
+  "auto"       pallas on TPU, ref elsewhere
 """
 from __future__ import annotations
 
@@ -37,7 +53,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.kernels import pallas_compat as pc
+
+from repro.core.attention import NEG_INF  # single-sourced masking constant
 
 DEFAULT_Q_BLOCK = 512
 DEFAULT_KV_BLOCK = 512
@@ -51,57 +69,92 @@ def _fwd_kernel(
     qpos_ref, kpos_ref, qseg_ref, kseg_ref,   # (1, Bq) / (1, Bk) int32
     q_ref,                                    # (1, 1, Bq, D)
     k_ref, v_ref,                             # (1, 1, Bk, D)
-    out_ref,                                  # (1, 1, Bq, D)
-    lse_ref,                                  # (1, 1, Bq)
-    acc_ref, m_ref, l_ref,                    # VMEM scratch
-    *,
+    *refs,                                    # outputs (+ carry ins) + scratch
     causal: bool,
     sm_scale: float,
     num_kv_blocks: int,
+    has_carry: bool,
+    block_skip: bool,
 ):
+    """Online-softmax flash forward over one (q block, kv block) tile.
+
+    Without carry: outputs are (out, lse) — init at ik==0, normalize at the
+    last kv block. With carry: inputs gain (acc_in, m_in, l_in) and outputs
+    are the updated raw statistics (acc_out, m_out, l_out) — the caller
+    (the ring loop) chains them across shards and normalizes once at the end.
+    """
+    if has_carry:
+        (acc_in_ref, m_in_ref, l_in_ref,
+         acc_out_ref, m_out_ref, l_out_ref,
+         acc_ref, m_ref, l_ref) = refs
+    else:
+        out_ref, lse_ref, acc_ref, m_ref, l_ref = refs
+
     ik = pl.program_id(3)
 
     @pl.when(ik == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
+        if has_carry:
+            acc_ref[...] = acc_in_ref[0, 0].astype(jnp.float32)
+            m_ref[...] = m_in_ref[0, 0].astype(jnp.float32)[:, None]
+            l_ref[...] = l_in_ref[0, 0].astype(jnp.float32)[:, None]
+        else:
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)           # (Bq, D)
-    k = k_ref[0, 0].astype(jnp.float32)           # (Bk, D)
-    v = v_ref[0, 0].astype(jnp.float32)           # (Bk, D)
     qpos = qpos_ref[0]                            # (Bq,)
     kpos = kpos_ref[0]                            # (Bk,)
     qseg = qseg_ref[0]
     kseg = kseg_ref[0]
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * sm_scale  # (Bq,Bk)
-    mask = qseg[:, None] == kseg[None, :]
-    if causal:
-        mask &= qpos[:, None] >= kpos[None, :]
-    s = jnp.where(mask, s, NEG_INF)
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)           # (Bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (Bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)           # (Bk, D)
 
-    m_prev = m_ref[...]                            # (Bq, 1)
-    m_cur = jnp.max(s, axis=-1, keepdims=True)
-    m_new = jnp.maximum(m_prev, m_cur)
-    p = jnp.exp(s - m_new)                         # rows with all NEG_INF -> exp(0)=1? no: NEG_INF-m_new
-    # Fully-masked rows: m_new stays NEG_INF -> s - m_new = 0 -> p = 1 spuriously.
-    p = jnp.where(mask, p, 0.0)
-    corr = jnp.exp(m_prev - m_new)                 # (Bq, 1)
-    l_new = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
-    l_ref[...] = l_new
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale  # (Bq,Bk)
+        mask = qseg[:, None] == kseg[None, :]
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                            # (Bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                         # rows with all NEG_INF -> exp(0)=1? no: NEG_INF-m_new
+        # Fully-masked rows: m_new stays NEG_INF -> s - m_new = 0 -> p = 1 spuriously.
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)                 # (Bq, 1)
+        l_new = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    if causal and block_skip:
+        # Dynamic causal block skip: the whole tile is masked iff every key
+        # is strictly in the future of every query. Position-driven (not
+        # grid-index-driven), so it holds for contiguous AND striped/ring
+        # layouts where block order is not monotone in absolute position.
+        # A skipped tile is the identity update (masked p == 0, corr == 1).
+        pl.when(jnp.max(qpos) >= jnp.min(kpos))(_update)
+    else:
+        _update()
 
     @pl.when(ik == num_kv_blocks - 1)
     def _finalize():
-        l = l_ref[...]
-        out = acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
-        out_ref[0, 0] = out.astype(out_ref.dtype)
-        lse = m_ref[...] + jnp.log(jnp.where(l == 0.0, 1.0, l))
-        lse_ref[0, 0] = lse[:, 0]
+        if has_carry:
+            acc_out_ref[0, 0] = acc_ref[...].astype(acc_out_ref.dtype)
+            m_out_ref[0, 0] = m_ref[...][:, 0]
+            l_out_ref[0, 0] = l_ref[...][:, 0]
+        else:
+            l = l_ref[...]
+            out = acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+            out_ref[0, 0] = out.astype(out_ref.dtype)
+            lse = m_ref[...] + jnp.log(jnp.where(l == 0.0, 1.0, l))
+            lse_ref[0, 0] = lse[:, 0]
 
 
 def flash_attention_fwd(
@@ -117,6 +170,7 @@ def flash_attention_fwd(
     q_block: int = DEFAULT_Q_BLOCK,
     kv_block: int = DEFAULT_KV_BLOCK,
     interpret: bool = False,
+    block_skip: bool = True,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (out (B,H,Sq,D), lse (B,H,Sq))."""
     b, h, sq, d = q.shape
@@ -131,7 +185,8 @@ def flash_attention_fwd(
     grid = (b, h, nq, nkv)
 
     kernel = functools.partial(
-        _fwd_kernel, causal=causal, sm_scale=sm_scale, num_kv_blocks=nkv)
+        _fwd_kernel, causal=causal, sm_scale=sm_scale, num_kv_blocks=nkv,
+        has_carry=False, block_skip=block_skip)
 
     out, lse = pl.pallas_call(
         kernel,
@@ -160,18 +215,91 @@ def flash_attention_fwd(
             pltpu.VMEM((q_block, 1), jnp.float32),
             pltpu.VMEM((q_block, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.ARBITRARY,
-            ),
-        ),
+        compiler_params=pc.compiler_params(pc.PARALLEL, pc.PARALLEL, pc.PARALLEL, pc.ARBITRARY),
         interpret=interpret,
         name="lwm_flash_fwd",
     )(q_positions, kv_positions, q_segment_ids, kv_segment_ids, q, k, v)
     return out, lse
+
+
+def flash_attention_fwd_carry(
+    q: jnp.ndarray,            # (B, H, Sq, D)
+    k: jnp.ndarray,            # (B, Hkv, Skv, D) — one arriving K/V shard
+    v: jnp.ndarray,
+    q_positions: jnp.ndarray,  # (B, Sq) int32, absolute
+    kv_positions: jnp.ndarray, # (B, Skv) int32, absolute
+    q_segment_ids: jnp.ndarray,
+    kv_segment_ids: jnp.ndarray,
+    carry: tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+    *,
+    causal: bool = True,
+    q_block: int = DEFAULT_Q_BLOCK,
+    kv_block: int = DEFAULT_KV_BLOCK,
+    interpret: bool = False,
+    block_skip: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fold one K/V shard into running flash statistics, in VMEM.
+
+    ``carry`` is ``(acc (B,H,Sq,D) f32, m (B,H,Sq) f32, l (B,H,Sq) f32)`` —
+    the same online-softmax invariants as ``core.blockwise.AttnCarry`` (in
+    (B,H,S,·) layout). The kernel loads the carry once, streams the shard's
+    kv blocks against it, and writes the updated raw statistics back without
+    normalizing — one ring step per invocation. Initialize with
+    ``m = NEG_INF, acc = l = 0`` and normalize ``acc / l`` after the last
+    shard. Fully-future causal blocks are skipped in-kernel (``block_skip``).
+    """
+    acc_in, m_in, l_in = carry
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = h // hkv
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    nq = pl.cdiv(sq, q_block)
+    nkv = pl.cdiv(skv, kv_block)
+    sm_scale = d ** -0.5
+
+    kernel = functools.partial(
+        _fwd_kernel, causal=causal, sm_scale=sm_scale, num_kv_blocks=nkv,
+        has_carry=True, block_skip=block_skip)
+
+    acc_out, m_out, l_out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, q_block), lambda ib, ih, iq, ik: (ib, iq)),
+            pl.BlockSpec((1, kv_block), lambda ib, ih, iq, ik: (ib, ik)),
+            pl.BlockSpec((1, q_block), lambda ib, ih, iq, ik: (ib, iq)),
+            pl.BlockSpec((1, kv_block), lambda ib, ih, iq, ik: (ib, ik)),
+            pl.BlockSpec((1, 1, q_block, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, q_block, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, q_block), lambda ib, ih, iq, ik: (ib, ih, iq)),
+            pl.BlockSpec((1, 1, q_block), lambda ib, ih, iq, ik: (ib, ih, iq)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q_block, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, q_block), lambda ib, ih, iq, ik: (ib, ih, iq)),
+            pl.BlockSpec((1, 1, q_block), lambda ib, ih, iq, ik: (ib, ih, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, sq, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, sq), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((q_block, d), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+        ],
+        compiler_params=pc.compiler_params(pc.PARALLEL, pc.PARALLEL, pc.PARALLEL, pc.ARBITRARY),
+        interpret=interpret,
+        name="lwm_flash_fwd_carry",
+    )(q_positions, kv_positions, q_segment_ids, kv_segment_ids, q, k, v,
+      acc_in, m_in, l_in)
+    return acc_out, m_out, l_out
 
 
 # ---------------------------------------------------------------------------
@@ -307,14 +435,7 @@ def flash_attention_bwd(
         out_specs=pl.BlockSpec((1, 1, q_block, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
         scratch_shapes=[pltpu.VMEM((q_block, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.ARBITRARY,
-            ),
-        ),
+        compiler_params=pc.compiler_params(pc.PARALLEL, pc.PARALLEL, pc.PARALLEL, pc.ARBITRARY),
         interpret=interpret,
         name="lwm_flash_bwd_dq",
     )(q_positions, kv_positions, q_segment_ids, kv_segment_ids,
@@ -350,14 +471,7 @@ def flash_attention_bwd(
             pltpu.VMEM((kv_block, d), jnp.float32),
             pltpu.VMEM((kv_block, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.ARBITRARY,
-            ),
-        ),
+        compiler_params=pc.compiler_params(pc.PARALLEL, pc.PARALLEL, pc.PARALLEL, pc.ARBITRARY),
         interpret=interpret,
         name="lwm_flash_bwd_dkv",
     )(q_positions, kv_positions, q_segment_ids, kv_segment_ids,

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pallas_compat as pc
+
 
 def _mamba_chunk_kernel(
     x_ref,        # (1, C, 1, P)
@@ -123,13 +125,7 @@ def mamba2_chunk_scan(
             jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.ARBITRARY,
-            ),
-        ),
+        compiler_params=pc.compiler_params(pc.PARALLEL, pc.PARALLEL, pc.ARBITRARY),
         interpret=interpret,
         name="mamba2_chunk_scan",
     )(x, dt, A, Bmat, Cmat, initial_state)

@@ -7,11 +7,19 @@ Layout convention at this boundary matches the rest of the repo:
 ``impl`` dispatch:
   * "pallas"      — compiled Pallas TPU kernel (TPU target).
   * "interpret"   — same kernel body, Pallas interpret mode (CPU validation).
-  * "ref"         — pure-jnp oracle (kernels/ref.py).
+  * "ref"         — pure-jnp oracle (kernels/ref.py) / XLA blockwise path.
   * "auto"        — pallas on TPU, ref elsewhere (dry-run / CPU tests).
 
 The flash attention wrapper installs a custom_vjp pairing the Pallas forward
 with the two-kernel Pallas backward (dk/dv reduced over the GQA group).
+
+``ring_flash_attention`` is the fused Blockwise RingAttention engine (paper
+§3.1): the forward rotates K/V shards with ``ppermute`` while each arriving
+shard is folded into the running (acc, m, l) carry by ONE invocation of the
+carry-in/carry-out Pallas kernel — logits never leave VMEM. Its custom_vjp
+backward re-rotates the K/V shards around the ring and accumulates dk/dv
+(traveling with their shard) using the existing Pallas backward kernels and
+the globally-finalized logsumexp. Runs inside ``jax.shard_map``.
 """
 from __future__ import annotations
 
@@ -80,15 +88,9 @@ def _flash_core_bwd(causal, q_block, kv_block, interpret, res, do):
         q, k, v, out, lse, do, qpos, kpos, qseg, kseg,
         causal=causal, q_block=q_block, kv_block=kv_block, interpret=interpret)
     # dk/dv come back per query head; reduce over the GQA group.
-    h, hkv = q.shape[1], k.shape[1]
-    if h != hkv:
-        g = h // hkv
-        b, _, skv, d = dk.shape
-        dk = dk.reshape(b, hkv, g, skv, d).sum(axis=2).astype(k.dtype)
-        dv = dv.reshape(b, hkv, g, skv, d).sum(axis=2).astype(v.dtype)
-    else:
-        dk = dk.astype(k.dtype)
-        dv = dv.astype(v.dtype)
+    hkv = k.shape[1]
+    dk = _gqa_reduce(dk, hkv).astype(k.dtype)
+    dv = _gqa_reduce(dv, hkv).astype(v.dtype)
     return dq.astype(q.dtype), dk, dv, None, None, None, None
 
 
@@ -139,6 +141,173 @@ def flash_attention(
     out = _flash_core(qt, kt, vt, q_positions, kv_positions,
                       q_segment_ids, kv_segment_ids,
                       causal, q_block, kv_block, interpret)
+    return _bhsd_to_bshd(out)
+
+
+# ---------------------------------------------------------------------------
+# Fused Blockwise RingAttention (carry-in/carry-out flash kernel per shard)
+# ---------------------------------------------------------------------------
+
+def _gqa_reduce(dkv: jnp.ndarray, hkv: int) -> jnp.ndarray:
+    """(B, H, Skv, D) per-query-head grads -> (B, Hkv, Skv, D)."""
+    b, h, skv, d = dkv.shape
+    if h == hkv:
+        return dkv
+    return dkv.reshape(b, hkv, h // hkv, skv, d).sum(axis=2)
+
+
+def _ring_fwd_loop(q, k, v, qpos, kpos, qseg, kseg, *,
+                   axis_name, causal, q_block, kv_block, interpret,
+                   block_skip):
+    """Forward ring: returns (out (B,H,S,D), lse (B,H,S)). BHSD layout."""
+    from repro.core import ring_attention as ring_mod
+
+    b, h, s, d = q.shape
+    n = ring_mod.ring_size(axis_name)
+    acc = jnp.zeros((b, h, s, d), jnp.float32)
+    m = jnp.full((b, h, s), fa.NEG_INF, jnp.float32)
+    l = jnp.zeros((b, h, s), jnp.float32)
+
+    def step(_, state):
+        acc, m, l, k_cur, v_cur, kp_cur, ks_cur = state
+        # Issue the rotation first: no data dependency on this step's kernel,
+        # so the ppermute overlaps with the flash compute (paper §3.1).
+        k_nxt, v_nxt, kp_nxt, ks_nxt = ring_mod._rotate(
+            (k_cur, v_cur, kp_cur, ks_cur), axis_name)
+        acc, m, l = fa.flash_attention_fwd_carry(
+            q, k_cur, v_cur, qpos, kp_cur, qseg, ks_cur, (acc, m, l),
+            causal=causal, q_block=q_block, kv_block=kv_block,
+            interpret=interpret, block_skip=block_skip)
+        return acc, m, l, k_nxt, v_nxt, kp_nxt, ks_nxt
+
+    state = (acc, m, l, k, v, kpos, kseg)
+    if n == 1:
+        state = step(0, state)
+    else:
+        state = jax.lax.fori_loop(0, n, step, state)
+    acc, m, l = state[:3]
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l_safe[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11, 12))
+def _ring_flash_core(q, k, v, qpos, kpos, qseg, kseg,
+                     axis_name, causal, q_block, kv_block, interpret,
+                     block_skip):
+    out, _ = _ring_fwd_loop(
+        q, k, v, qpos, kpos, qseg, kseg, axis_name=axis_name, causal=causal,
+        q_block=q_block, kv_block=kv_block, interpret=interpret,
+        block_skip=block_skip)
+    return out
+
+
+def _ring_flash_core_fwd(q, k, v, qpos, kpos, qseg, kseg,
+                         axis_name, causal, q_block, kv_block, interpret,
+                         block_skip):
+    out, lse = _ring_fwd_loop(
+        q, k, v, qpos, kpos, qseg, kseg, axis_name=axis_name, causal=causal,
+        q_block=q_block, kv_block=kv_block, interpret=interpret,
+        block_skip=block_skip)
+    return out, (q, k, v, out, lse, qpos, kpos, qseg, kseg)
+
+
+def _ring_flash_core_bwd(axis_name, causal, q_block, kv_block, interpret,
+                         block_skip, res, do):
+    """Ring backward: K/V shards re-rotate; dk/dv travel with their shard.
+
+    Each step runs the two Pallas backward kernels against the currently
+    held shard with the *global* lse/out (standard ring flash backward:
+    p = exp(s - lse) is already globally normalized, so per-shard partials
+    sum exactly). After ``ring_size`` compute+rotate steps every dk/dv
+    shard has accumulated the contribution of every device's queries and
+    is back on its home device.
+    """
+    from repro.core import ring_attention as ring_mod
+
+    q, k, v, out, lse, qpos, kpos, qseg, kseg = res
+    hkv = k.shape[1]
+    n = ring_mod.ring_size(axis_name)
+
+    dq = jnp.zeros(q.shape, jnp.float32)
+    dk = jnp.zeros(k.shape, jnp.float32)
+    dv = jnp.zeros(v.shape, jnp.float32)
+
+    def step(_, state):
+        dq, dk, dv, k_cur, v_cur, kp_cur, ks_cur = state
+        dq_p, dk_p, dv_p = fa.flash_attention_bwd(
+            q, k_cur, v_cur, out, lse, do, qpos, kp_cur, qseg, ks_cur,
+            causal=causal, q_block=q_block, kv_block=kv_block,
+            interpret=interpret)
+        dq = dq + dq_p.astype(jnp.float32)
+        dk = dk + _gqa_reduce(dk_p, hkv).astype(jnp.float32)
+        dv = dv + _gqa_reduce(dv_p, hkv).astype(jnp.float32)
+        # dk/dv rotate WITH their K/V shard; after n rotations both are home.
+        k_cur, v_cur, kp_cur, ks_cur, dk, dv = ring_mod._rotate(
+            (k_cur, v_cur, kp_cur, ks_cur, dk, dv), axis_name)
+        return dq, dk, dv, k_cur, v_cur, kp_cur, ks_cur
+
+    state = (dq, dk, dv, k, v, kpos, kseg)
+    if n == 1:
+        state = step(0, state)
+    else:
+        state = jax.lax.fori_loop(0, n, step, state)
+    dq, dk, dv = state[:3]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None, None, None)
+
+
+_ring_flash_core.defvjp(_ring_flash_core_fwd, _ring_flash_core_bwd)
+
+
+def ring_flash_attention(
+    q: jnp.ndarray,            # (B, S_local, H, D) — device-local shard
+    k: jnp.ndarray,            # (B, S_local, Hkv, D)
+    v: jnp.ndarray,
+    *,
+    axis_name,                 # mesh axis (or tuple) carrying the sequence
+    q_positions: jnp.ndarray,  # (B, S_local) absolute
+    kv_positions: jnp.ndarray, # (B, S_local) absolute
+    q_segment_ids: jnp.ndarray | None = None,
+    kv_segment_ids: jnp.ndarray | None = None,
+    causal: bool = True,
+    q_block: int = fa.DEFAULT_Q_BLOCK,
+    kv_block: int = fa.DEFAULT_KV_BLOCK,
+    impl: str = "auto",
+    block_skip: bool = True,
+) -> jnp.ndarray:
+    """Differentiable fused RingAttention over the local query shard.
+
+    Runs inside ``jax.shard_map``; (B,S,H,D) in/out like
+    ``core.ring_attention.ring_attention``, which this replaces on the hot
+    path. ``impl="ref"`` (or "auto" off-TPU) falls back to the XLA blockwise
+    ring — same math, materialized logits.
+    """
+    b, s, h, d = q.shape
+    if q_segment_ids is None:
+        q_segment_ids = jnp.ones((b, s), jnp.int32)
+    if kv_segment_ids is None:
+        kv_segment_ids = jnp.ones((b, s), jnp.int32)
+    q_positions = q_positions.astype(jnp.int32)
+    kv_positions = kv_positions.astype(jnp.int32)
+    q_segment_ids = q_segment_ids.astype(jnp.int32)
+    kv_segment_ids = kv_segment_ids.astype(jnp.int32)
+
+    impl = _resolve(impl)
+    if impl == "ref":
+        from repro.core import ring_attention as ring_mod
+        return ring_mod.ring_attention(
+            q, k, v, axis_name=axis_name,
+            q_positions=q_positions, kv_positions=kv_positions,
+            q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
+            causal=causal, kv_block_size=kv_block, impl="xla",
+            skip_masked_blocks=block_skip)
+
+    qt, kt, vt = _bshd_to_bhsd(q), _bshd_to_bhsd(k), _bshd_to_bhsd(v)
+    out = _ring_flash_core(
+        qt, kt, vt, q_positions, kv_positions, q_segment_ids, kv_segment_ids,
+        axis_name, causal, q_block, kv_block, impl == "interpret", block_skip)
     return _bhsd_to_bshd(out)
 
 

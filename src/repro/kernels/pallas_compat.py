@@ -1,0 +1,30 @@
+"""Version compatibility shims for the Pallas TPU API.
+
+The kernels target the current Pallas naming (``pltpu.CompilerParams`` +
+``pltpu.GridDimensionSemantics``); older jax releases (<= 0.4.x) ship the
+same functionality as ``pltpu.TPUCompilerParams`` with string dimension
+semantics. ``compiler_params(*semantics)`` builds the right object for the
+installed jax so every kernel compiles (and interprets) on either API.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+PARALLEL = "parallel"
+ARBITRARY = "arbitrary"
+
+if hasattr(pltpu, "CompilerParams"):          # jax >= 0.5 naming
+    _CP = pltpu.CompilerParams
+    _SEM = {
+        PARALLEL: pltpu.GridDimensionSemantics.PARALLEL,
+        ARBITRARY: pltpu.GridDimensionSemantics.ARBITRARY,
+    } if hasattr(pltpu, "GridDimensionSemantics") else None
+else:                                          # jax <= 0.4 naming
+    _CP = pltpu.TPUCompilerParams
+    _SEM = None
+
+
+def compiler_params(*semantics: str, **kwargs):
+    """CompilerParams with per-grid-dim semantics ("parallel"/"arbitrary")."""
+    sems = tuple(_SEM[s] for s in semantics) if _SEM else tuple(semantics)
+    return _CP(dimension_semantics=sems, **kwargs)

@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -1e30
+from repro.core.attention import NEG_INF  # single-sourced masking constant
 
 
 def flash_attention_ref(

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pallas_compat as pc
+
 
 def _wkv_chunk_kernel(
     r_ref, k_ref, v_ref,     # (1, C, 1, K) / (1, C, 1, K) / (1, C, 1, V)
@@ -126,13 +128,7 @@ def rwkv6_wkv(
             jax.ShapeDtypeStruct((b, h, kk, vv), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((kk, vv), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.ARBITRARY,
-            ),
-        ),
+        compiler_params=pc.compiler_params(pc.PARALLEL, pc.PARALLEL, pc.ARBITRARY),
         interpret=interpret,
         name="rwkv6_wkv",
     )(r, k, v, logw, u, initial_state)

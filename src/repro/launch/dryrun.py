@@ -187,6 +187,8 @@ def run_one(arch: str, shape_name: str, mesh_name: str,
             lowered = jitted.lower(*args)
             compiled = lowered.compile()
         xla_cost = compiled.cost_analysis()   # loop bodies counted ONCE
+        if isinstance(xla_cost, (list, tuple)):  # jax<=0.4.x: list of dicts
+            xla_cost = xla_cost[0] if xla_cost else {}
         mem = compiled.memory_analysis()
         text = compiled.as_text()
         # Trip-count-aware walk over the optimized HLO (launch/hlo.py):

@@ -64,6 +64,48 @@ def flash_attention_io_bytes(
     return float(fwd + bwd + remat)
 
 
+def ring_flash_io_bytes(
+    *,
+    s_local: int,            # query rows per device (= K/V shard length)
+    ring_devices: int,
+    num_q_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    batch_per_device: int,
+    dtype_bytes: int = 2,
+    q_tile: int = FLASH_Q_TILE,
+    backward: bool = True,
+) -> float:
+    """Per-device HBM traffic of one *fused-ring* attention layer.
+
+    Each of the ``ring_devices`` ring steps is ONE carry-in/carry-out kernel
+    invocation: Q is re-streamed per q tile, the arriving K/V shard streams
+    once per q tile, and the (acc, m, l) f32 carry round-trips HBM once per
+    step (the kernel holds it in VMEM only within a step). Compare with
+    ``flash_attention_io_bytes`` (single fused sweep, no carry traffic) and
+    the measured XLA blockwise bytes (materialized logits every step).
+    """
+    b = batch_per_device
+    q_bytes = b * s_local * num_q_heads * head_dim * dtype_bytes
+    kv_bytes = 2 * b * s_local * num_kv_heads * head_dim * dtype_bytes
+    carry_bytes = (b * s_local * num_q_heads * head_dim * 4      # acc f32
+                   + 2 * b * s_local * num_q_heads * 4)          # m, l f32
+    rereads = max(s_local // q_tile, 1)
+    # fwd, per ring step: q + kv streamed per q tile + carry in/out.
+    fwd_step = q_bytes + rereads * kv_bytes + 2 * carry_bytes
+    fwd = ring_devices * fwd_step + q_bytes          # + final normalize write
+    if not backward:
+        return float(fwd)
+    # bwd, per ring step: the two Pallas bwd kernels stream q/k/v/do/lse and
+    # the traveling dq/dk/dv accumulators (f32) round-trip per step.
+    dqkv_bytes = (b * s_local * num_q_heads * head_dim * 4
+                  + 2 * b * s_local * num_kv_heads * head_dim * 4)
+    bwd_step = 2 * (q_bytes + rereads * kv_bytes) + 2 * dqkv_bytes
+    bwd = ring_devices * bwd_step
+    remat = fwd
+    return float(fwd + bwd + remat)
+
+
 def measure_xla_attention_bytes(
     cfg: ModelConfig,
     *,

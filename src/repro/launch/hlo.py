@@ -108,6 +108,7 @@ _STACK_FRAME_RE = re.compile(
 # with XLA compiler"). Classified via HLO metadata + resolved stack frames.
 ATTN_TAGS = ("attend_shard", "_block_update", "blockwise_attention",
              "flash", "decode_attend", "ring_attention",
+             "ring_flash_attention", "_ring_fwd_loop", "_fwd_kernel",
              "mamba2_chunked", "rwkv6_chunked", "mamba2_chunk_scan_ref",
              "rwkv6_ref")
 
@@ -455,6 +456,46 @@ class CollectiveStats:
         parts = [f"{k}:{int(self.counts[k])}({self.bytes_by_kind[k]/1e6:.1f}MB)"
                  for k in sorted(self.counts)]
         return " ".join(parts) or "none"
+
+
+def materialized_buffer_bytes(hlo_text: str, *, min_elems: int,
+                              dtype: str = "f32") -> dict:
+    """Bytes + count of op results materializing >= ``min_elems`` of ``dtype``.
+
+    Used to verify the RingAttention fusion claim (paper §3.1): the XLA
+    blockwise path materializes the per-shard (B, H, Sq, Bk) f32 logits in
+    HBM every ring step, while the fused Pallas kernel's tiles never exceed
+    (q_block, kv_block) in VMEM. Fusion-target computations are excluded —
+    a fusion op's interior buffers are register/VMEM-resident — so the count
+    reflects buffers that actually round-trip memory between ops.
+    """
+    comps, entry = parse_module(hlo_text)
+    fused_targets = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                m = _CALLS_RE.search(op.attrs)
+                if m:
+                    fused_targets.add(m.group(1))
+    dtype_bytes = _DTYPE_BYTES.get(dtype, 4)
+    total, count = 0, 0
+    for name, comp in comps.items():
+        if name in fused_targets:
+            continue
+        for op in comp.ops:
+            if op.opcode in _FREE_OPS:
+                continue
+            m = _SHAPE_RE.search(op.shape)
+            if not m or m.group(1) != dtype:
+                continue
+            n = 1
+            for d in m.group(2).split(","):
+                if d:
+                    n *= int(d)
+            if n >= min_elems:
+                total += n * dtype_bytes
+                count += 1
+    return {"bytes": total, "count": count}
 
 
 def collective_stats(hlo_text: str, *, num_devices: int) -> CollectiveStats:

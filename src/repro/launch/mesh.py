@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.core import jax_compat as jc
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """v5e-style production mesh: 16x16 per pod, optionally 2 pods.
@@ -17,8 +19,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jc.make_mesh(shape, axes)
 
 
 def make_host_mesh(shape: tuple[int, ...] = (), axes: tuple[str, ...] = ()):
@@ -26,5 +27,4 @@ def make_host_mesh(shape: tuple[int, ...] = (), axes: tuple[str, ...] = ()):
     if not shape:
         n = len(jax.devices())
         shape, axes = (n,), ("data",)
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jc.make_mesh(shape, axes)

@@ -109,6 +109,9 @@ class ModelConfig:
     # runtime knobs
     dtype: str = "bfloat16"
     attn_impl: str = "blockwise"         # full | blockwise | pallas | interpret
+    ring_impl: str = "auto"              # ring engine: auto | pallas |
+    #   interpret | xla | ref — "auto" = fused Pallas kernel on TPU, XLA
+    #   blockwise loop elsewhere (see core.ring_attention.resolve_ring_impl)
     q_block: int = 512
     kv_block: int = 512
     remat: bool = True

@@ -22,6 +22,8 @@ class RuntimeCtx:
     striped: bool = False                  # striped ring layout in effect
     batch_axes: Any = None                 # mesh axis name(s) sharding batch
     attn_impl: str | None = None           # overrides cfg.attn_impl when set
+    ring_impl: str | None = None           # ring engine override: "pallas" |
+    #   "interpret" | "xla"/"ref" | "auto" (see core.ring_attention)
     decode_ring: bool = False              # ring-sharded KV cache at decode
 
     def spec(self, logical: tuple) -> P:

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import jax_compat as jc
+
 from repro.core import decode as dec_mod
 from repro.core import ring_attention as ring_mod
 from repro.core import rope as rope_mod
@@ -104,11 +106,11 @@ def _decode_attend(cfg: ModelConfig, q, cache_k, cache_v, cache_pos,
                 q, ck, cv, axis_name=ctx.ring_axis, kv_positions=cp,
                 q_position=position, logits_soft_cap=cfg.logits_soft_cap)
 
-        return jax.shard_map(
+        return jc.shard_map(
             fn, mesh=ctx.mesh,
             in_specs=(P(), P(None, seq, None, None), P(None, seq, None, None),
                       P(None, seq)),
-            out_specs=P(), check_vma=False,
+            out_specs=P(), check=False,
         )(q, cache_k, cache_v, cache_pos)
     return dec_mod.decode_attention_unsharded(
         q, cache_k, cache_v, kv_positions=cache_pos, q_position=position,

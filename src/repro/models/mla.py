@@ -16,6 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import jax_compat as jc
+
 from repro.core import blockwise, rope as rope_mod
 from repro.core import ring_attention as ring_mod
 from repro.models.config import ModelConfig
@@ -116,10 +118,10 @@ def _shard_mapped(cfg, ctx, fn, q, k, v, positions, segment_ids):
     seq = ctx.rules.get("seq") if ctx.rules else None
     spec4 = P(None, seq, None, None)
     spec2 = P(None, seq)
-    return jax.shard_map(
+    return jc.shard_map(
         fn, mesh=ctx.mesh,
         in_specs=(spec4, spec4, spec4, spec2, spec2),
-        out_specs=spec4, check_vma=False,
+        out_specs=spec4, check=False,
     )(q, k, v, positions, segment_ids)
 
 
@@ -136,8 +138,7 @@ def _latent_ring_attention(cfg, p, q_nope, q_rope, latent, k_rope,
         n = ring_mod.ring_size(ctx.ring_axis)
         carry = blockwise.init_carry(b, s_loc, h, m.v_head_dim)
         carry = jax.tree.map(
-            lambda x: jax.lax.pcast(x, ring_mod._axis_tuple(ctx.ring_axis),
-                                    to="varying"), carry)
+            lambda x: jc.pcast_varying(x, ring_mod._axis_tuple(ctx.ring_axis)), carry)
         q = jnp.concatenate([q_nope, q_rope], axis=-1)
 
         def step(i, state):
@@ -167,9 +168,9 @@ def _latent_ring_attention(cfg, p, q_nope, q_rope, latent, k_rope,
     s4 = P(None, seq, None, None)
     s3 = P(None, seq, None)
     s2 = P(None, seq)
-    return jax.shard_map(
+    return jc.shard_map(
         fn, mesh=ctx.mesh,
-        in_specs=(s4, s4, s3, s3, s2, s2), out_specs=s4, check_vma=False,
+        in_specs=(s4, s4, s3, s3, s2, s2), out_specs=s4, check=False,
     )(q_nope, q_rope, latent, k_rope, positions, segment_ids)
 
 
@@ -256,11 +257,11 @@ def mla_decode_step(cfg: ModelConfig, p, x: jnp.ndarray, cache: dict,
                 l = jax.lax.psum(l, ax)
             return acc / jnp.maximum(l, 1e-30)[..., None]
 
-        out_lat = jax.shard_map(
+        out_lat = jc.shard_map(
             fn, mesh=ctx.mesh,
             in_specs=(P(), P(), P(None, seq, None), P(None, seq, None),
                       P(None, seq)),
-            out_specs=P(), check_vma=False,
+            out_specs=P(), check=False,
         )(q_lat, q_rope, lat_cache, kr_cache, kvpos)
     else:
         acc, m_loc, l_loc = _mla_local_scores_attend(

@@ -13,6 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import jax_compat as jc
+
 from repro.core import seq_parallel
 from repro.kernels import ops as kops
 from repro.models.config import ModelConfig
@@ -147,8 +149,8 @@ def rwkv_block_apply(cfg: ModelConfig, p, x, ctx: RuntimeCtx = NULL_CTX):
         def fn(x):
             return _rwkv_block_local(cfg, p, x, axis_name=axis)
 
-        return jax.shard_map(fn, mesh=ctx.mesh, in_specs=P(None, seq, None),
-                             out_specs=P(None, seq, None), check_vma=False)(x)
+        return jc.shard_map(fn, mesh=ctx.mesh, in_specs=P(None, seq, None),
+                             out_specs=P(None, seq, None), check=False)(x)
     return _rwkv_block_local(cfg, p, x, axis_name=None)
 
 

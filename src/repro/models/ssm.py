@@ -15,6 +15,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import jax_compat as jc
+
 from repro.core import seq_parallel
 from repro.kernels import ops as kops
 from repro.models.config import ModelConfig
@@ -89,9 +91,9 @@ def mamba_apply(cfg: ModelConfig, p, x: jnp.ndarray,
         def fn(x):
             return _mamba_local(cfg, p, x, axis_name=ctx.ring_axis)
 
-        return jax.shard_map(
+        return jc.shard_map(
             fn, mesh=ctx.mesh, in_specs=P(None, seq, None),
-            out_specs=P(None, seq, None), check_vma=False)(x)
+            out_specs=P(None, seq, None), check=False)(x)
     y, _ = _mamba_core(cfg, p, x, halo=None, initial_state=None)
     return y
 

@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import jax_compat as jc
+
 from repro.core import blockwise, decode as decode_mod, ring_attention as ring_mod
 from repro.core import rope as rope_mod
 from repro.core.attention import full_attention
@@ -116,19 +118,27 @@ def _ring_attend(cfg, q, k, v, positions, segment_ids, ctx, *, causal):
     spec_q = P(None, seq, heads_ax, None)
     spec_pos = P(None, seq)
 
+    # Ring engine selection (ctx overrides cfg). The fused Pallas kernel's
+    # in-kernel block skip is position-driven, hence correct (and still a
+    # win) under the striped layout; the XLA loop's lax.cond skip is not.
+    ring_impl = ring_mod.resolve_ring_impl(
+        ctx.ring_impl or cfg.ring_impl, logits_soft_cap=cfg.logits_soft_cap)
+    skip = True if ring_impl in ("pallas", "interpret") else not ctx.striped
+
     def fn(q, k, v, pos, seg):
         return ring_mod.ring_attention(
             q, k, v, axis_name=ctx.ring_axis,
             q_positions=pos, kv_positions=pos,
             q_segment_ids=seg, kv_segment_ids=seg,
             causal=causal, kv_block_size=cfg.kv_block,
+            q_block_size=cfg.q_block,
             logits_soft_cap=cfg.logits_soft_cap,
-            skip_masked_blocks=not ctx.striped)
+            skip_masked_blocks=skip, impl=ring_impl)
 
-    return jax.shard_map(
+    return jc.shard_map(
         fn, mesh=ctx.mesh,
         in_specs=(spec_q, spec_q, spec_q, spec_pos, spec_pos),
-        out_specs=spec_q, check_vma=False,
+        out_specs=spec_q, check=False,
     )(q, k, v, positions, segment_ids)
 
 

@@ -1,0 +1,59 @@
+"""Import shim: real hypothesis when installed, deterministic fallback else.
+
+Minimal environments (the tier-1 container) don't ship hypothesis; hard
+imports made ``test_blockwise.py`` / ``test_packing.py`` fail at collection.
+The fallback implements just the surface those modules use — ``given`` over
+positional ``strategies.integers`` — by running each property test against a
+fixed number of seeded draws. Property coverage is thinner than real
+hypothesis (no shrinking, no adaptive search) but the invariants still get
+exercised on every run.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _FALLBACK_EXAMPLES = 8
+
+    class _IntStrategy:
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng: random.Random) -> int:
+            return rng.randint(self.lo, self.hi)
+
+    class strategies:  # noqa: N801 — mirrors `hypothesis.strategies` module
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntStrategy:
+            return _IntStrategy(min_value, max_value)
+
+    def settings(*_a, **_k):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                # Deterministic per-test stream: same draws every run.
+                rng = random.Random(fn.__name__)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    fn(*args, *(s.sample(rng) for s in strats), **kwargs)
+
+            # Hide the strategy-filled params from pytest's fixture
+            # resolution (functools.wraps exposes fn's signature otherwise).
+            params = list(inspect.signature(fn).parameters.values())
+            wrapper.__signature__ = inspect.Signature(params[:-len(strats)])
+            return wrapper
+
+        return deco

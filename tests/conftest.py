@@ -14,6 +14,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running tests (multi-device subprocess meshes, dry-runs)")
+
+
 @pytest.fixture
 def rng():
     return jax.random.PRNGKey(0)

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.packing import (PAD_SEGMENT_ID, num_examples,
                                 packed_loss_weights, segment_token_counts)

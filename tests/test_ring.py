@@ -20,6 +20,7 @@ def run_subprocess(body: str):
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.core import jax_compat as jc
     """) + textwrap.dedent(body)
     env = dict(os.environ, PYTHONPATH=SRC)
     env.pop("XLA_FLAGS", None)
@@ -33,8 +34,7 @@ def test_ring_attention_matches_full():
     run_subprocess("""
         from repro.core import ring_attention as ring
         from repro.core.attention import full_attention
-        mesh = jax.make_mesh((8,), ("seq",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jc.make_mesh((8,), ("seq",))
         B,S,H,D = 2, 512, 4, 32
         rng = jax.random.PRNGKey(0)
         q = jax.random.normal(rng,(B,S,H,D))
@@ -48,9 +48,8 @@ def test_ring_attention_matches_full():
                     q_positions=pos,kv_positions=pos,q_segment_ids=seg,
                     kv_segment_ids=seg,causal=causal,kv_block_size=64)
             sp = P(None,"seq")
-            out = jax.jit(jax.shard_map(fn, mesh=mesh,
-                in_specs=(sp,sp,sp,sp,sp), out_specs=sp,
-                check_vma=False))(q,k,v,pos,seg)
+            out = jax.jit(jc.shard_map(fn, mesh=mesh,
+                in_specs=(sp,sp,sp,sp,sp), out_specs=sp))(q,k,v,pos,seg)
             ref = full_attention(q,k,v,causal=causal,q_positions=pos,
                 kv_positions=pos,q_segment_ids=seg,kv_segment_ids=seg)
             np.testing.assert_allclose(np.asarray(out,np.float32),
@@ -63,8 +62,7 @@ def test_striped_ring_matches_full():
     run_subprocess("""
         from repro.core import ring_attention as ring
         from repro.core.attention import full_attention
-        mesh = jax.make_mesh((8,), ("seq",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jc.make_mesh((8,), ("seq",))
         B,S,H,D = 1, 512, 4, 32
         rng = jax.random.PRNGKey(0)
         q = jax.random.normal(rng,(B,S,H,D))
@@ -82,9 +80,8 @@ def test_striped_ring_matches_full():
                 kv_segment_ids=seg,causal=True,kv_block_size=64,
                 skip_masked_blocks=False)
         sp = P(None,"seq")
-        out_s = jax.jit(jax.shard_map(fn, mesh=mesh,
-            in_specs=(sp,sp,sp,sp,sp), out_specs=sp,
-            check_vma=False))(qs,ks_,vs,ps,seg)
+        out_s = jax.jit(jc.shard_map(fn, mesh=mesh,
+            in_specs=(sp,sp,sp,sp,sp), out_specs=sp))(qs,ks_,vs,ps,seg)
         out = ring.unapply_stripe(out_s,1,8)
         ref = full_attention(q,k,v,causal=True,q_positions=pos,
             kv_positions=pos,q_segment_ids=seg,kv_segment_ids=seg)
@@ -99,8 +96,7 @@ def test_two_axis_ring():
     run_subprocess("""
         from repro.core import ring_attention as ring
         from repro.core.attention import full_attention
-        mesh = jax.make_mesh((2,4), ("pod","data"),
-            axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = jc.make_mesh((2,4), ("pod","data"))
         B,S,H,D = 1, 256, 2, 32
         rng = jax.random.PRNGKey(0)
         q = jax.random.normal(rng,(B,S,H,D))
@@ -113,9 +109,8 @@ def test_two_axis_ring():
                 q_positions=pos,kv_positions=pos,q_segment_ids=seg,
                 kv_segment_ids=seg,causal=True,kv_block_size=32)
         sp = P(None,("pod","data"))
-        out = jax.jit(jax.shard_map(fn, mesh=mesh,
-            in_specs=(sp,sp,sp,sp,sp), out_specs=sp,
-            check_vma=False))(q,k,v,pos,seg)
+        out = jax.jit(jc.shard_map(fn, mesh=mesh,
+            in_specs=(sp,sp,sp,sp,sp), out_specs=sp))(q,k,v,pos,seg)
         ref = full_attention(q,k,v,causal=True,q_positions=pos,
             kv_positions=pos,q_segment_ids=seg,kv_segment_ids=seg)
         np.testing.assert_allclose(np.asarray(out,np.float32),
@@ -129,8 +124,7 @@ def test_ring_decode_attention():
     run_subprocess("""
         from repro.core import ring_attention as ring
         from repro.core import decode as dec
-        mesh = jax.make_mesh((8,), ("seq",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jc.make_mesh((8,), ("seq",))
         B,L,H,D = 2, 512, 4, 32
         rng = jax.random.PRNGKey(0)
         q = jax.random.normal(rng,(B,1,H,D))
@@ -143,9 +137,9 @@ def test_ring_decode_attention():
         def fn(q,kc,vc,kvpos):
             return ring.ring_decode_attention(q,kc,vc,axis_name="seq",
                 kv_positions=kvpos,q_position=qpos)
-        out = jax.jit(jax.shard_map(fn, mesh=mesh,
+        out = jax.jit(jc.shard_map(fn, mesh=mesh,
             in_specs=(P(),P(None,"seq"),P(None,"seq"),P(None,"seq")),
-            out_specs=P(), check_vma=False))(q,kc,vc,kvpos)
+            out_specs=P()))(q,kc,vc,kvpos)
         ref = dec.decode_attention_unsharded(q,kc,vc,kv_positions=kvpos,
                                              q_position=qpos)
         np.testing.assert_allclose(np.asarray(out,np.float32),
@@ -158,8 +152,7 @@ def test_seq_parallel_recurrence():
     """Cross-device state handoff == one sequential scan (SSM adaptation)."""
     run_subprocess("""
         from repro.core import seq_parallel as sp
-        mesh = jax.make_mesh((8,), ("seq",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jc.make_mesh((8,), ("seq",))
         S, D = 512, 16
         rng = jax.random.PRNGKey(0)
         x = jax.random.normal(rng,(S,D))*0.5
@@ -187,9 +180,8 @@ def test_seq_parallel_recurrence():
             # correction: with linear recurrence, y_t += (prod decay[0..t]) * S_in
             cum = jnp.cumprod(d_loc, axis=0)
             return y_zero + cum * S_in[None]
-        out = jax.jit(jax.shard_map(fn, mesh=mesh,
-            in_specs=(P("seq"),P("seq")), out_specs=P("seq"),
-            check_vma=False))(x, decay)
+        out = jax.jit(jc.shard_map(fn, mesh=mesh,
+            in_specs=(P("seq"),P("seq")), out_specs=P("seq")))(x, decay)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    atol=1e-5, rtol=1e-4)
     """)
