@@ -10,7 +10,6 @@ improving as context grows.
 from __future__ import annotations
 
 import argparse
-import time
 
 from repro.configs import get_reduced
 from repro.data.pipeline import LWM_1K, LWM_8K, TEXT_STAGE

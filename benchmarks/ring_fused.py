@@ -104,12 +104,24 @@ def _account(step, args, *, iters: int) -> dict:
     }
 
 
-def run(*, quick: bool = False) -> list[dict]:
+def run(*, quick: bool = False, dry_run: bool = False) -> list[dict]:
     from repro.launch import fusion as fusion_mod
 
     iters = 3 if quick else 10
     xla_step, xla_args = _xla_step()
     fused_step, fused_args = _fused_step()
+    if dry_run:
+        # CI smoke: shape-level traces of both engines + the analytic
+        # models, no compile/execute and no JSON overwrite.
+        jax.eval_shape(xla_step, *xla_args)
+        jax.eval_shape(fused_step, *fused_args)
+        return [{
+            "bench": "ring_fused", "dry_run": True,
+            "step_bytes_model": fusion_mod.ring_flash_io_bytes(
+                s_local=S_LOCAL, ring_devices=1, num_q_heads=H,
+                num_kv_heads=HKV, head_dim=D, batch_per_device=B,
+                dtype_bytes=4, backward=False),
+        }]
     xla = _account(xla_step, xla_args, iters=iters)
     fused = _account(fused_step, fused_args, iters=iters)
     if jax.default_backend() != "tpu":

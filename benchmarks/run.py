@@ -18,20 +18,37 @@ Paper artifact -> module map:
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
-from benchmarks import (chat_mix, context_stages, mfu_roofline, needle,
-                        packing_ablation, ring_fused)
+if __package__ in (None, ""):
+    # Direct invocation (``python benchmarks/run.py``): put the repo root on
+    # sys.path so the ``benchmarks`` package imports; ``python -m
+    # benchmarks.run`` never hits this.
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
 
+from benchmarks import (chat_mix, context_stages, decode_fused, mfu_roofline,
+                        needle, packing_ablation, ring_fused)
+
+# name -> (runner(quick), dry_runner(quick) | None). Benches with a dry
+# runner validate their setup (shape-level traces + analytic models) in
+# seconds without compiling or executing — the CI smoke job.
 BENCHES = {
-    "context_stages": lambda q: context_stages.run(quick=q),
-    "context_stages_vision": lambda q: context_stages.run(vision=True, quick=q),
-    "needle": lambda q: needle.run(quick=q),
-    "packing_ablation": lambda q: packing_ablation.run(quick=q),
-    "chat_mix": lambda q: chat_mix.run(quick=q),
-    "mfu_roofline": lambda q: mfu_roofline.run(quick=q),
+    "context_stages": (lambda q: context_stages.run(quick=q), None),
+    "context_stages_vision": (lambda q: context_stages.run(vision=True,
+                                                           quick=q), None),
+    "needle": (lambda q: needle.run(quick=q), None),
+    "packing_ablation": (lambda q: packing_ablation.run(quick=q), None),
+    "chat_mix": (lambda q: chat_mix.run(quick=q), None),
+    "mfu_roofline": (lambda q: mfu_roofline.run(quick=q), None),
     # XLA-vs-fused RingAttention step accounting -> BENCH_ring_fused.json
-    "ring_fused": lambda q: ring_fused.run(quick=q),
+    "ring_fused": (lambda q: ring_fused.run(quick=q),
+                   lambda q: ring_fused.run(quick=q, dry_run=True)),
+    # XLA-vs-fused decode-attention accounting -> BENCH_decode_fused.json
+    "decode_fused": (lambda q: decode_fused.run(quick=q),
+                     lambda q: decode_fused.run(quick=q, dry_run=True)),
 }
 
 
@@ -41,6 +58,9 @@ def main(argv=None) -> int:
                     help="per-benchmark default step counts (slower)")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="setup validation only (no compile/execute/JSON); "
+                         "benches without dry-run support are skipped")
     args = ap.parse_args(argv)
 
     names = list(BENCHES) if not args.only else args.only.split(",")
@@ -50,8 +70,18 @@ def main(argv=None) -> int:
     for name in names:
         t0 = time.time()
         print(f"=== {name} ===", flush=True)
+        if name not in BENCHES:
+            failures.append((name, f"unknown benchmark (have: {', '.join(BENCHES)})"))
+            print(f"  FAILED: unknown benchmark {name!r}")
+            continue
+        runner, dry_runner = BENCHES[name]
+        if args.dry_run:
+            if dry_runner is None:
+                print("  (no dry-run support; skipped)")
+                continue
+            runner = dry_runner
         try:
-            rows = BENCHES[name](quick)
+            rows = runner(quick)
         except Exception as e:  # noqa: BLE001
             failures.append((name, repr(e)))
             print(f"  FAILED: {e!r}")

@@ -2,11 +2,14 @@
 
 Paper §5 "Scaling Inference": million-length decoding with the KV cache
 sequence-sharded across devices (their v4-128 setup: 32-way tensor x 4-way
-sequence/ring). The decode combine here is the log-sum-exp merge of partial
-attention over disjoint KV shards — the same algebra as `combine_carries`,
-expressed as a psum-style reduction so it lowers to one collective instead of
-a P2P ring (at decode there is no per-step compute to overlap with, so a
-direct combine is strictly better; noted in EXPERIMENTS.md §Perf).
+sequence/ring). The decode combine is the log-sum-exp merge of partial
+attention over disjoint KV shards — the same algebra as `combine_carries`.
+
+Two per-shard engines, selected by ``impl`` (``resolve_decode_impl``): the
+split-K Pallas flash-decode kernel (``kernels.flash_decode``) streams the
+cache through VMEM blocks without materializing the (B, 1, H, L) logits;
+the "xla" einsum path below is the baseline/oracle and the only engine
+supporting ``logits_soft_cap`` (and MLA's asymmetric head dims).
 """
 from __future__ import annotations
 
@@ -47,6 +50,34 @@ def decode_attend_local(
     return acc, m, l
 
 
+def resolve_decode_impl(impl: str | None, *, logits_soft_cap=None,
+                        asymmetric: bool = False) -> str:
+    """Normalize a decode impl request to "pallas" | "interpret" | "xla".
+
+    Dispatch matrix (mirrors ``resolve_ring_impl`` / kernels/ops.py):
+      "pallas"     split-K Pallas flash-decode kernel
+                   (``kernels.flash_decode``) — TPU
+      "interpret"  same kernel body via the Pallas interpreter — any backend
+                   (CPU parity tests)
+      "xla"/"ref"  ``decode_attend_local`` einsum + LSE combine — the XLA
+                   baseline, and the only path supporting ``logits_soft_cap``
+      "auto"/None  pallas on TPU, xla elsewhere
+
+    ``asymmetric`` routes MLA-style caches (value head dim != key head dim)
+    to xla: the split-K kernel tiles assume one head_dim.
+    """
+    if impl not in (None, "auto", "ref", "xla", "pallas", "interpret"):
+        raise ValueError(f"unknown decode impl {impl!r}; expected one of "
+                         "auto|pallas|interpret|xla|ref")
+    if logits_soft_cap is not None or asymmetric:
+        return "xla"              # soft cap / MLA dims not in the kernel
+    if impl in (None, "auto"):
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "ref":
+        return "xla"
+    return impl
+
+
 def combine_decode_partials(acc, m, l, axis_name: str) -> jnp.ndarray:
     """Merge partial decode attention across a mesh axis (inside shard_map).
 
@@ -62,9 +93,23 @@ def combine_decode_partials(acc, m, l, axis_name: str) -> jnp.ndarray:
 
 def decode_attention_unsharded(
     q, k_cache, v_cache, *, kv_positions, q_position, logits_soft_cap=None,
-    out_dtype=None,
+    out_dtype=None, impl: str | None = None,
 ) -> jnp.ndarray:
-    """Single-device decode attention (oracle / small-context path)."""
+    """Single-device decode attention.
+
+    ``impl`` selects the engine (see ``resolve_decode_impl``): the split-K
+    Pallas flash-decode kernel streams the cache through VMEM blocks; the
+    "xla" path (also the oracle for parity tests) materializes the full
+    (B, 1, H, L) logits.
+    """
+    impl = resolve_decode_impl(
+        impl, logits_soft_cap=logits_soft_cap,
+        asymmetric=v_cache.shape[-1] != q.shape[-1])
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import flash_decode as fdk  # lazy: avoids cycle
+        return fdk.flash_decode(
+            q, k_cache, v_cache, kv_positions, q_position,
+            interpret=impl == "interpret", out_dtype=out_dtype)
     acc, m, l = decode_attend_local(
         q, k_cache, v_cache, kv_positions=kv_positions, q_position=q_position,
         logits_soft_cap=logits_soft_cap)

@@ -32,8 +32,11 @@ multi-pod rings, e.g. ("pod", "data")).
 
 Also provided:
   * ``ring_decode_attention`` — paper §5 inference: one query token vs a
-    ring-sharded KV cache, merged with a log-sum-exp combine (collectives
-    instead of a rotating ring: at decode there is no compute to hide).
+    ring-sharded KV cache. Per-shard engine selected by ``impl``
+    (``decode.resolve_decode_impl``): the split-K Pallas flash-decode
+    kernel computes each shard's raw (acc, m, l) partial once and rotates
+    it around the ring as a carry; the "xla" path merges einsum partials
+    with a pmax/psum log-sum-exp combine.
   * striped layout helpers — the load-balanced causal variant ([BNQ+23],
     cited by the paper as a further improvement). Tokens are assigned to
     devices round-robin so every device does equal causal work. Because RoPE
@@ -50,7 +53,6 @@ import jax.numpy as jnp
 from repro.core import jax_compat as jc
 
 from repro.core import blockwise
-from repro.core.blockwise import AttnCarry
 
 
 def _axis_tuple(axis_name) -> tuple:
@@ -206,9 +208,27 @@ def ring_decode_attention(
     kv_positions: jnp.ndarray,      # (B, L_local); -1 = empty slot
     q_position: jnp.ndarray,        # (B,)
     logits_soft_cap: float | None = None,
+    impl: str | None = None,
 ) -> jnp.ndarray:
-    """Paper §5 decode: partial attention per cache shard + LSE combine."""
+    """Paper §5 decode: partial attention per cache shard + cross-shard merge.
+
+    ``impl`` selects the per-shard engine (``decode.resolve_decode_impl``):
+    "pallas"/"interpret" run the split-K flash-decode kernel once per device
+    and rotate the raw (acc, m, l) partials around the ring as carries
+    (``kernels.ops.ring_flash_decode``); "xla" is the original einsum +
+    pmax/psum LSE combine below.
+    """
     from repro.core import decode as decode_mod
+
+    impl = decode_mod.resolve_decode_impl(
+        impl, logits_soft_cap=logits_soft_cap,
+        asymmetric=v_cache.shape[-1] != q.shape[-1])
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import ops as kops  # lazy: avoids import cycle
+        return kops.ring_flash_decode(
+            q, k_cache, v_cache, axis_name=axis_name,
+            kv_positions=kv_positions, q_position=q_position,
+            interpret=impl == "interpret")
 
     acc, m, l = decode_mod.decode_attend_local(
         q, k_cache, v_cache, kv_positions=kv_positions, q_position=q_position,

@@ -1,0 +1,267 @@
+"""Pallas TPU flash-decode: single-query attention vs a KV-cache shard.
+
+Paper §5 "Scaling Inference": decoding over a million-token KV cache is
+dominated by streaming the cache through the attention reduction. The XLA
+path (``core.decode.decode_attend_local``) materializes the full per-shard
+(B, 1, H, L) f32 logits in HBM before reducing; this kernel is the fused
+alternative — a *split-K* (flash-decode style) reduction that streams the
+cache through VMEM-resident blocks and keeps every logits tile on-chip.
+
+TPU mapping
+-----------
+* Layout: queries are grouped by KV head — q (B, Hkv, G, D) where
+  G = num_q_heads // num_kv_heads. The GQA group shares one K/V stream, so
+  the per-tile matmul is (G, D) x (D, Bk): the group dimension (not a
+  length-1 query axis) feeds the MXU, and no repeat_kv ever materializes.
+  The cache is consumed in its native (B, L, Hkv, D) serving layout —
+  the BlockSpec index map picks (1, kv_block, 1, D) tiles directly, so
+  the hot path never transposes (= copies) the cache.
+* Grid: (batch, kv_heads, num_splits, blocks_per_split). The *split* axis
+  is PARALLEL — decode has only B*Hkv independent programs otherwise, far
+  too few to fill a TPU, so the KV length is cut into ``num_splits``
+  independent segments reduced concurrently (the flash-decode trick). The
+  last axis is ARBITRARY (sequential): VMEM scratch (acc, m, l) carries the
+  online softmax across a split's KV blocks.
+* Each split emits raw partial statistics (acc, m, l) — exactly the
+  carry algebra of ``flash_attention_fwd_carry`` (PR 1) — and the caller
+  merges splits (and ring carries) with the same log-sum-exp fold.
+* Masking: cache-length/validity masking is in-kernel, driven by the
+  absolute ``kv_positions`` block (-1 = unwritten slot) and the query's
+  absolute position: valid iff 0 <= kv_pos <= q_pos. Blocks with no valid
+  key (unwritten cache tail, or grid padding past the last KV block) skip
+  their matmuls entirely, so compute tracks the *filled* cache length.
+
+Split handling: ``blocks_per_split = ceil(nkv / num_splits)`` may overrun
+the last split; overrun steps clamp their BlockSpec index (no OOB fetch)
+and skip compute via the in-kernel guard, so any (num_splits, kv_block)
+combination is valid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import pallas_compat as pc
+
+from repro.core.attention import NEG_INF  # single-sourced masking constant
+
+DEFAULT_KV_BLOCK = 512
+DEFAULT_NUM_SPLITS = 8
+
+# Far-future sentinel for the block-skip reduction: an unwritten slot (-1)
+# must never satisfy ``min(kv_pos) <= q_pos``. Plain int so the kernel does
+# not capture a traced constant.
+_FAR_FUTURE = 2 ** 30
+
+
+def _decode_kernel(
+    kpos_ref,                  # (1, Bk) int32 — absolute cache positions
+    qpos_ref,                  # (1, 1) int32 — the query's absolute position
+    q_ref,                     # (1, 1, G, D)
+    k_ref, v_ref,              # (1, Bk, 1, D) — native (B, L, Hkv, D) layout
+    acc_ref, m_ref, l_ref,     # per-split partials (1, 1, 1, G, D) / (1, 1, 1, G)
+    acc_s, m_s, l_s,           # VMEM scratch (G, D) / (G, 1) / (G, 1) f32
+    *,
+    sm_scale: float,
+    blocks_per_split: int,
+    num_kv_blocks: int,
+    block_skip: bool,
+):
+    """Online-softmax reduction of one KV block into the split's running
+    (acc, m, l). Same update as ``flash_attention._fwd_kernel`` with the
+    causal mask specialized to a single query position."""
+    isp = pl.program_id(2)
+    ibk = pl.program_id(3)
+
+    @pl.when(ibk == 0)
+    def _init():
+        acc_s[...] = jnp.zeros_like(acc_s)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    kpos = kpos_ref[0]                           # (Bk,)
+    qpos = qpos_ref[0, 0]                        # scalar
+    valid = (kpos >= 0) & (kpos <= qpos)         # (Bk,)
+
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)      # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (Bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        s = jnp.where(valid[None, :], s, NEG_INF)            # (G, Bk)
+        m_prev = m_s[...]                        # (G, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(valid[None, :], p, 0.0)    # kill exp(NEG_INF - NEG_INF)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    # Skip the matmuls when the block holds no attendable key: every slot is
+    # unwritten (-1) or strictly in the future of the query — i.e. the cache
+    # tail past the filled length — or this step is grid padding past the
+    # last KV block of an uneven split. Skipping is the identity update.
+    in_range = isp * blocks_per_split + ibk < num_kv_blocks
+    if block_skip:
+        earliest = jnp.min(jnp.where(kpos >= 0, kpos, _FAR_FUTURE))
+        pl.when(in_range & (earliest <= qpos))(_update)
+    else:
+        pl.when(in_range)(_update)
+
+    @pl.when(ibk == blocks_per_split - 1)
+    def _finalize():
+        acc_ref[0, 0, 0] = acc_s[...]
+        m_ref[0, 0, 0] = m_s[...][:, 0]
+        l_ref[0, 0, 0] = l_s[...][:, 0]
+
+
+def merge_partials(carry, partial):
+    """Log-sum-exp fold of two raw (acc, m, l) statistics — the same carry
+    algebra as the PR 1 ring forward; associative and commutative, so ring
+    arrival order does not matter. Delegates to the single-sourced
+    ``blockwise.combine_carries`` (elementwise over any (..., H[, D])
+    layout) so the numerically delicate merge lives in exactly one place."""
+    from repro.core import blockwise
+    merged = blockwise.combine_carries(blockwise.AttnCarry(*carry),
+                                       blockwise.AttnCarry(*partial))
+    return merged.acc, merged.m, merged.l
+
+
+def flash_decode_partial(
+    q: jnp.ndarray,            # (B, 1, H, D)
+    k_cache: jnp.ndarray,      # (B, L, Hkv, D)
+    v_cache: jnp.ndarray,
+    kv_positions: jnp.ndarray,  # (B, L) int32 absolute; -1 = unwritten
+    q_position: jnp.ndarray,    # (B,) int32 absolute
+    *,
+    kv_block: int = DEFAULT_KV_BLOCK,
+    num_splits: int = DEFAULT_NUM_SPLITS,
+    interpret: bool = False,
+    block_skip: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Partial decode attention over one cache shard via the split-K kernel.
+
+    Returns raw ``(acc (B,1,H,D) f32, m (B,1,H) f32, l (B,1,H) f32)`` — the
+    same contract as ``core.decode.decode_attend_local``, ready for the
+    cross-shard / cross-split ``merge_partials`` fold. Normalize with
+    ``acc / max(l, eps)`` after the last shard.
+    """
+    b, _, h, d = q.shape
+    L, hkv = k_cache.shape[1], k_cache.shape[2]
+    group = h // hkv
+    kv_block = min(kv_block, L)
+    if L % kv_block:
+        # Pad to a block multiple with -1 positions (masked in-kernel) so the
+        # tail block never reads undefined out-of-bounds K/V. Serving caches
+        # are power-of-two sized, so this is usually a no-op.
+        pad = kv_block - L % kv_block
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=-1)
+        L += pad
+    nkv = pl.cdiv(L, kv_block)
+    num_splits = max(min(num_splits, nkv), 1)
+    bps = pl.cdiv(nkv, num_splits)
+    sm_scale = d ** -0.5
+
+    # Group queries by KV head: head h = j * group + r -> (j, r), matching
+    # ``repeat_kv``'s jnp.repeat layout. O(H*D) — free. The cache itself is
+    # indexed in its native (B, L, Hkv, D) layout straight from the
+    # BlockSpec: no transpose, so the serving hot path never copies it.
+    qg = q[:, 0].reshape(b, hkv, group, d)
+    kv_positions = kv_positions.astype(jnp.int32)
+    qpos2d = q_position.astype(jnp.int32).reshape(b, 1)
+
+    def kv_blk(isp, ibk):
+        # Clamp grid padding of uneven splits to the last real block; the
+        # kernel's in_range guard skips its compute.
+        return jnp.minimum(isp * bps + ibk, nkv - 1)
+
+    def kv_index(ib, ih, isp, ibk):
+        return (ib, kv_blk(isp, ibk), ih, 0)
+
+    kernel = functools.partial(
+        _decode_kernel, sm_scale=sm_scale, blocks_per_split=bps,
+        num_kv_blocks=nkv, block_skip=block_skip)
+
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, num_splits, bps),
+        in_specs=[
+            pl.BlockSpec((1, kv_block),
+                         lambda ib, ih, isp, ibk: (ib, kv_blk(isp, ibk))),
+            pl.BlockSpec((1, 1), lambda ib, ih, isp, ibk: (ib, 0)),
+            pl.BlockSpec((1, 1, group, d), lambda ib, ih, isp, ibk: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, kv_block, 1, d), kv_index),
+            pl.BlockSpec((1, kv_block, 1, d), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, group, d),
+                         lambda ib, ih, isp, ibk: (ib, ih, isp, 0, 0)),
+            pl.BlockSpec((1, 1, 1, group),
+                         lambda ib, ih, isp, ibk: (ib, ih, isp, 0)),
+            pl.BlockSpec((1, 1, 1, group),
+                         lambda ib, ih, isp, ibk: (ib, ih, isp, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, num_splits, group, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, num_splits, group), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, num_splits, group), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((group, d), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+        compiler_params=pc.compiler_params(
+            pc.PARALLEL, pc.PARALLEL, pc.PARALLEL, pc.ARBITRARY),
+        interpret=interpret,
+        name="lwm_flash_decode",
+    )(kv_positions, qpos2d, qg, k_cache, v_cache)
+
+    # Merge the split partials (tiny: num_splits x G x D). Same LSE fold as
+    # the ring carry; a fully-masked split has m = NEG_INF, l = 0 and drops
+    # out of the sum.
+    m_glob = jnp.max(m, axis=2)                                # (B, Hkv, G)
+    corr = jnp.exp(m - m_glob[:, :, None])
+    acc = jnp.sum(acc * corr[..., None], axis=2)               # (B, Hkv, G, D)
+    l = jnp.sum(l * corr, axis=2)
+    # (B, Hkv, G, ·) -> (B, 1, H, ·)
+    acc = acc.reshape(b, 1, h, d)
+    m_glob = m_glob.reshape(b, 1, h)
+    l = l.reshape(b, 1, h)
+    return acc, m_glob, l
+
+
+def flash_decode(
+    q, k_cache, v_cache, kv_positions, q_position, *,
+    kv_block: int = DEFAULT_KV_BLOCK,
+    num_splits: int = DEFAULT_NUM_SPLITS,
+    interpret: bool = False,
+    block_skip: bool = True,
+    carry: tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray] | None = None,
+    out_dtype=None,
+):
+    """Normalized single-shard decode attention (B,1,H,D) -> (B,1,H,D).
+
+    With ``carry`` the shard partial is folded into the running statistics
+    first (ring decode); without, this is the full single-device answer.
+    """
+    partial = flash_decode_partial(
+        q, k_cache, v_cache, kv_positions, q_position,
+        kv_block=kv_block, num_splits=num_splits, interpret=interpret,
+        block_skip=block_skip)
+    if carry is not None:
+        partial = merge_partials(carry, partial)
+    acc, _, l = partial
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(out_dtype or q.dtype)

@@ -312,6 +312,101 @@ def ring_flash_attention(
 
 
 # ---------------------------------------------------------------------------
+# Flash decode (single query vs KV cache — paper §5 serving hot path)
+# ---------------------------------------------------------------------------
+
+def flash_decode(
+    q: jnp.ndarray,            # (B, 1, H, D)
+    k_cache: jnp.ndarray,      # (B, L, Hkv, D)
+    v_cache: jnp.ndarray,
+    *,
+    kv_positions: jnp.ndarray,  # (B, L) absolute; -1 = unwritten slot
+    q_position: jnp.ndarray,    # (B,)
+    kv_block: int | None = None,
+    num_splits: int | None = None,
+    impl: str = "auto",
+    block_skip: bool = True,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """Single-device decode attention with impl dispatch.
+
+    "pallas"/"interpret" run the split-K flash-decode kernel
+    (``kernels.flash_decode``): the cache streams through VMEM blocks and
+    the (B, 1, H, L) logits never materialize. "xla"/"ref" (or "auto"
+    off-TPU) is the einsum path. Validation and auto-resolution go through
+    the single-sourced ``core.decode.resolve_decode_impl``.
+    """
+    from repro.core import decode as dec_mod
+    from repro.kernels import flash_decode as fdk
+    impl = dec_mod.resolve_decode_impl(
+        impl, asymmetric=v_cache.shape[-1] != q.shape[-1])
+    if impl == "xla":
+        acc, _, l = dec_mod.decode_attend_local(
+            q, k_cache, v_cache, kv_positions=kv_positions,
+            q_position=q_position)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(out_dtype or q.dtype)
+    return fdk.flash_decode(
+        q, k_cache, v_cache, kv_positions, q_position,
+        kv_block=kv_block or fdk.DEFAULT_KV_BLOCK,
+        num_splits=num_splits or fdk.DEFAULT_NUM_SPLITS,
+        interpret=impl == "interpret", block_skip=block_skip,
+        out_dtype=out_dtype)
+
+
+def ring_flash_decode(
+    q: jnp.ndarray,            # (B, 1, H, D) — replicated over the ring axis
+    k_cache: jnp.ndarray,      # (B, L_local, Hkv, D) local cache shard
+    v_cache: jnp.ndarray,
+    *,
+    axis_name,
+    kv_positions: jnp.ndarray,  # (B, L_local); -1 = unwritten slot
+    q_position: jnp.ndarray,    # (B,)
+    kv_block: int | None = None,
+    num_splits: int | None = None,
+    interpret: bool = False,
+    block_skip: bool = True,
+) -> jnp.ndarray:
+    """Fused ring decode over a sequence-sharded KV cache (inside shard_map).
+
+    Each device folds its local cache shard through ONE split-K kernel call;
+    the resulting raw (acc, m, l) statistics then travel the ring as carries
+    (``ppermute`` hops), folded with the same online-softmax merge as the
+    PR 1 ring forward — no per-shard logits ever materialize and no
+    pmax/psum combine collectives are issued. The cache — the big operand at
+    decode — is read from HBM exactly once; only the tiny per-token carry
+    (B, 1, H, D+2) moves between devices.
+
+    Trade-off: the n-1 hops serialize where a pmax/psum combine of the same
+    partials is one collective round with nothing to hide behind — but the
+    carry is ~KB-scale, so the hops are latency-bound either way, and the
+    traveling-carry form keeps the merge algebra identical to the ring
+    forward (and composes with striped/multi-axis rings without reshaping
+    into collective groups). ``impl="xla"`` keeps the collective combine.
+    """
+    from repro.core import ring_attention as ring_mod
+    from repro.kernels import flash_decode as fdk
+
+    n = ring_mod.ring_size(axis_name)
+    partial = fdk.flash_decode_partial(
+        q, k_cache, v_cache, kv_positions, q_position,
+        kv_block=kv_block or fdk.DEFAULT_KV_BLOCK,
+        num_splits=num_splits or fdk.DEFAULT_NUM_SPLITS,
+        interpret=interpret, block_skip=block_skip)
+
+    def step(_, state):
+        carry, moving = state
+        moving = ring_mod._rotate(moving, axis_name)
+        return fdk.merge_partials(carry, moving), moving
+
+    carry = partial
+    if n > 1:
+        carry, _ = jax.lax.fori_loop(0, n - 1, step, (carry, partial))
+    acc, _, l = carry
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Mamba2 / RWKV6
 # ---------------------------------------------------------------------------
 

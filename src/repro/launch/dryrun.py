@@ -27,11 +27,9 @@ import functools
 import json
 import sys
 import time
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCH_IDS, INPUT_SHAPES, InputShape, get_config, input_specs
 from repro.launch import hlo as hlo_mod

@@ -28,7 +28,6 @@ and reduce ops count 1 flop per element (dots dominate every model here).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from collections import defaultdict
 

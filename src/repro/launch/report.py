@@ -6,7 +6,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import sys
 
 from repro.launch.roofline import Roofline, markdown_table
 

@@ -112,6 +112,10 @@ class ModelConfig:
     ring_impl: str = "auto"              # ring engine: auto | pallas |
     #   interpret | xla | ref — "auto" = fused Pallas kernel on TPU, XLA
     #   blockwise loop elsewhere (see core.ring_attention.resolve_ring_impl)
+    decode_impl: str = "auto"            # decode-attention engine: auto |
+    #   pallas | interpret | xla | ref — "auto" = split-K Pallas flash-decode
+    #   kernel on TPU, XLA einsum elsewhere (core.decode.resolve_decode_impl);
+    #   MLA dims and logits_soft_cap always fall back to xla
     q_block: int = 512
     kv_block: int = 512
     remat: bool = True

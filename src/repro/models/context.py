@@ -25,6 +25,8 @@ class RuntimeCtx:
     ring_impl: str | None = None           # ring engine override: "pallas" |
     #   "interpret" | "xla"/"ref" | "auto" (see core.ring_attention)
     decode_ring: bool = False              # ring-sharded KV cache at decode
+    decode_impl: str | None = None         # decode-attention engine override:
+    #   "pallas" | "interpret" | "xla"/"ref" | "auto" (see core.decode)
 
     def spec(self, logical: tuple) -> P:
         if self.rules is None:

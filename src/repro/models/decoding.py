@@ -25,7 +25,6 @@ from repro.core import jax_compat as jc
 
 from repro.core import decode as dec_mod
 from repro.core import ring_attention as ring_mod
-from repro.core import rope as rope_mod
 from repro.models import layers as L
 from repro.models import mla as mla_mod
 from repro.models import moe as moe_mod
@@ -97,14 +96,21 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
 
 def _decode_attend(cfg: ModelConfig, q, cache_k, cache_v, cache_pos,
                    position, ctx: RuntimeCtx):
-    """q: (B,1,H,hd); cache (B,L,Hkv,hd). Dispatch ring vs local."""
+    """q: (B,1,H,hd); cache (B,L,Hkv,hd). Dispatch ring vs local.
+
+    The engine (split-K Pallas flash-decode vs XLA einsum) is selected by
+    ``ctx.decode_impl`` (override) / ``cfg.decode_impl`` — resolved inside
+    ``ring_decode_attention`` / ``decode_attention_unsharded``.
+    """
+    impl = ctx.decode_impl or cfg.decode_impl
     if ctx.decode_ring:
         seq = ctx.rules.get("seq") if ctx.rules else None
 
         def fn(q, ck, cv, cp):
             return ring_mod.ring_decode_attention(
                 q, ck, cv, axis_name=ctx.ring_axis, kv_positions=cp,
-                q_position=position, logits_soft_cap=cfg.logits_soft_cap)
+                q_position=position, logits_soft_cap=cfg.logits_soft_cap,
+                impl=impl)
 
         return jc.shard_map(
             fn, mesh=ctx.mesh,
@@ -114,7 +120,7 @@ def _decode_attend(cfg: ModelConfig, q, cache_k, cache_v, cache_pos,
         )(q, cache_k, cache_v, cache_pos)
     return dec_mod.decode_attention_unsharded(
         q, cache_k, cache_v, kv_positions=cache_pos, q_position=position,
-        logits_soft_cap=cfg.logits_soft_cap)
+        logits_soft_cap=cfg.logits_soft_cap, impl=impl)
 
 
 def _attn_decode_block(cfg: ModelConfig, p, x, cache, position,
@@ -146,7 +152,8 @@ def _attn_decode_block(cfg: ModelConfig, p, x, cache, position,
         att_c = dec_mod.decode_attention_unsharded(
             qc, ck, cv,
             kv_positions=jnp.zeros((b, se), jnp.int32),
-            q_position=jnp.zeros((b,), jnp.int32))
+            q_position=jnp.zeros((b,), jnp.int32),
+            impl=ctx.decode_impl or cfg.decode_impl)
         x = x + L.linear(att_c.reshape(b, 1, -1), p["cross"]["wo"])
 
     h = norm2(x)

@@ -23,7 +23,6 @@ ctx.ring_axis is set (the paper's core technique).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -32,7 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import jax_compat as jc
 
-from repro.core import blockwise, decode as decode_mod, ring_attention as ring_mod
+from repro.core import blockwise, ring_attention as ring_mod
 from repro.core import rope as rope_mod
 from repro.core.attention import full_attention
 from repro.kernels import ops as kops

@@ -5,7 +5,7 @@ LR with warmup, f32 optimizer state regardless of param dtype.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,10 @@ Structure mirrors the paper's inference setup — the KV cache can be
 *sequence-sharded over the ring axis* (ctx.decode_ring) so million-token
 contexts fit: each decode step computes local partial attention against the
 local cache shard and merges with a log-sum-exp combine
-(``core.ring_attention.ring_decode_attention``).
+(``core.ring_attention.ring_decode_attention``). The per-shard engine is the
+split-K Pallas flash-decode kernel on TPU (``decode_impl="auto"``), which
+streams the cache through VMEM without materializing per-shard logits; XLA
+einsum elsewhere.
 
 The engine is deliberately simple (static batch, padded prompts, done-mask)
 but complete: tokenept streams, eos handling, greedy/temperature sampling,
@@ -14,7 +17,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +49,16 @@ class Result:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *,
                  ctx: RuntimeCtx = NULL_CTX, max_len: int = 4096,
-                 bos_id: int = 0, seed: int = 0):
+                 bos_id: int = 0, seed: int = 0,
+                 decode_impl: str | None = None):
+        """``decode_impl`` selects the decode-attention engine for every
+        step this engine runs (overrides ``ctx.decode_impl`` and
+        ``cfg.decode_impl``): "auto" (default) = the split-K Pallas
+        flash-decode kernel on TPU with a clean XLA fallback elsewhere;
+        "interpret"/"pallas"/"xla" force a path (see
+        ``core.decode.resolve_decode_impl``)."""
+        if decode_impl is not None:
+            ctx = dataclasses.replace(ctx, decode_impl=decode_impl)
         self.cfg = cfg
         self.params = params
         self.ctx = ctx

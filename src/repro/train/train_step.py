@@ -7,7 +7,6 @@ ShapeDtypeStructs.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, NamedTuple
 
 import jax

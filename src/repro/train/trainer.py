@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Iterator
+from typing import Callable, Iterator
 
 import jax
 import numpy as np

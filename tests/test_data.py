@@ -5,7 +5,7 @@ import pytest
 
 from repro.data import build_vocab, data_iterator
 from repro.data.books import BookSampler, stage_sampler
-from repro.data.needle import (KEY_LEN, VAL_LEN, NeedleTask,
+from repro.data.needle import (VAL_LEN, NeedleTask,
                                retrieval_accuracy)
 from repro.data.pipeline import (CHAT_FINETUNE, LWM_1K, LWM_8K, LWM_CHAT,
                                  TEXT_STAGE, MixtureSpec)

@@ -1,8 +1,6 @@
 """HLO cost walker: trip-count scaling, dot flops, collective traffic."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.launch import hlo as H
 

@@ -1,7 +1,6 @@
 """Masked sequence packing: property tests on weights + packer invariants."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.packing import (PAD_SEGMENT_ID, num_examples,

@@ -12,7 +12,7 @@ from repro.data.needle import NeedleTask
 from repro.data.vocab import build_vocab
 from repro.models.registry import build_model
 from repro.optim import schedules
-from repro.optim.adamw import adamw_init, adamw_update, global_norm
+from repro.optim.adamw import adamw_init, adamw_update
 from repro.train import StageSpec, Trainer
 from repro.train.checkpoint import load_checkpoint, save_checkpoint
 from repro.train.train_step import init_train_state, make_train_step

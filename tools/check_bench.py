@@ -1,0 +1,112 @@
+"""CI gate over the committed BENCH_*.json byte-accounting artifacts.
+
+Fails (exit 1) if a committed benchmark result no longer shows the fused
+Pallas paths beating the XLA baselines — the regression this repo's perf
+claims rest on:
+
+  * BENCH_ring_fused.json — the fused RingAttention step must materialize
+    zero (B, H, Sq, Bk) logits buffers while the XLA step materializes at
+    least one, and the fused step's byte model must undercut the measured
+    XLA step traffic.
+  * BENCH_decode_fused.json — at every measured cache length the fused
+    decode step must materialize zero per-shard logits buffers where the
+    XLA path materializes >= 1 (per layer), and the analytic fused bytes
+    must undercut the analytic XLA bytes at every length (including the
+    analytic-only 1M row).
+
+Run locally:  python tools/check_bench.py  (from the repo root)
+"""
+from __future__ import annotations
+
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_errors: list[str] = []
+
+
+def _check(cond: bool, msg: str) -> None:
+    if not cond:
+        _errors.append(msg)
+
+
+def _load(name: str):
+    path = os.path.join(ROOT, name)
+    _check(os.path.exists(path), f"{name}: missing (must be committed)")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_ring_fused() -> None:
+    row = _load("BENCH_ring_fused.json")
+    if row is None:
+        return
+    delta = row.get("delta", {})
+    _check(delta.get("fused_eliminates_logits_buffer") is True,
+           "ring_fused: fused step no longer eliminates the logits buffer")
+    _check(row.get("xla", {}).get("logits_buffer_count", 0) >= 1,
+           "ring_fused: XLA step shows no materialized logits buffer "
+           "(detector broken?)")
+    _check(delta.get("bytes_saved", 0) > 0,
+           "ring_fused: fused byte model no longer undercuts measured XLA "
+           "step traffic")
+
+
+def check_decode_fused() -> None:
+    rows = _load("BENCH_decode_fused.json")
+    if rows is None:
+        return
+    _check(isinstance(rows, list) and len(rows) >= 3,
+           "decode_fused: expected rows for 32K/128K/1M cache lengths")
+    measured = 0
+    stage_rows = 0
+    for row in rows or []:
+        if "shape" not in row:
+            # whole-model analytic projection row (no per-length accounting).
+            # Fail-closed defaults: a missing/renamed key must FAIL the gate.
+            stage = row.get("analytic_paper_stage", {})
+            stage_rows += 1
+            _check(stage.get("fused_bytes_per_step", 1.0)
+                   < stage.get("xla_bytes_per_step", 0.0),
+                   "decode_fused[paper-stage]: fused no longer undercuts xla "
+                   "(or the analytic_paper_stage keys went missing)")
+            continue
+        L = row["shape"].get("cache_len", "?")
+        ana = row.get("analytic", {})
+        _check(ana.get("fused_bytes_model", 0) < ana.get("xla_bytes_model", 0),
+               f"decode_fused[{L}]: fused byte model no longer undercuts "
+               "the XLA byte model")
+        if "delta" not in row:
+            continue
+        measured += 1
+        _check(row["delta"].get("fused_eliminates_logits_buffer") is True,
+               f"decode_fused[{L}]: fused step materializes a per-shard "
+               "logits buffer")
+        _check(row.get("xla", {}).get("logits_buffer_count", 0) >= 1,
+               f"decode_fused[{L}]: XLA step shows no materialized logits "
+               "buffer (detector broken?)")
+        _check(row.get("fused", {}).get("logits_buffer_count", -1) == 0,
+               f"decode_fused[{L}]: fused logits_buffer_count != 0")
+    _check(measured >= 1,
+           "decode_fused: no measured (HLO-walked) rows at all")
+    _check(stage_rows >= 1,
+           "decode_fused: the whole-model analytic_paper_stage row is gone")
+
+
+def main() -> int:
+    check_ring_fused()
+    check_decode_fused()
+    if _errors:
+        for e in _errors:
+            print(f"FAIL: {e}")
+        return 1
+    print("ok: committed BENCH_*.json byte accounting holds "
+          "(fused beats xla; no materialized logits buffers)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
