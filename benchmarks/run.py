@@ -30,7 +30,7 @@ if __package__ in (None, ""):
         os.path.abspath(__file__))))
 
 from benchmarks import (chat_mix, context_stages, decode_fused, mfu_roofline,
-                        needle, packing_ablation, ring_fused)
+                        needle, packing_ablation, ring_fused, serve_batching)
 
 # name -> (runner(quick), dry_runner(quick) | None). Benches with a dry
 # runner validate their setup (shape-level traces + analytic models) in
@@ -49,6 +49,9 @@ BENCHES = {
     # XLA-vs-fused decode-attention accounting -> BENCH_decode_fused.json
     "decode_fused": (lambda q: decode_fused.run(quick=q),
                      lambda q: decode_fused.run(quick=q, dry_run=True)),
+    # static-vs-continuous batching accounting -> BENCH_serve_batching.json
+    "serve_batching": (lambda q: serve_batching.run(quick=q),
+                       lambda q: serve_batching.run(quick=q, dry_run=True)),
 }
 
 

@@ -1,0 +1,257 @@
+"""Static-vs-continuous batching accounting (paper §5 serving at scale).
+
+Two engines serve the same mixed short/long workload:
+
+  * "static"     — ``ServeEngine.generate_static``: the whole batch prefills
+                   together (every prompt right-pads to the longest) and
+                   decodes in lockstep until the *slowest* request finishes.
+  * "continuous" — ``ServeEngine.serve``: a fixed slot pool; finished
+                   requests retire, queued requests admit mid-flight, and
+                   long prompts chunk-prefill interleaved with decode.
+
+The unit of accounting is the *token step* (one batch row x one scan column
+of model work). A token step is useful when the row actually consumed a
+prompt or decode token; it is wasted when the row computed masked padding —
+prompt right-padding, a finished request still stepping in lockstep, an
+idle slot, or the pad tail of a prefill chunk. Continuous batching must
+show strictly fewer wasted token steps (and higher tokens/step) than the
+static engine; ``tools/check_bench.py`` gates the committed JSON on
+exactly that, plus greedy token-level parity between the two engines.
+
+The measured rows run the reduced LWM at small scale; the 1M-context row is
+analytic — the *same* ``Scheduler`` replays the admission policy against a
+bookkeeping-only ``CachePool`` (no model, no arrays), and the static side
+uses the same closed-form loop the engine executes. ``--dry-run``
+(CI smoke) runs the simulators plus a shape-level trace of the chunked
+prefill step — no compile, no execute, no JSON write.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import numpy as np
+
+HERE = os.path.dirname(__file__)
+OUT_PATH = os.path.join(HERE, "..", "BENCH_serve_batching.json")
+
+NUM_SLOTS = 3
+CHUNK = 8
+MAX_LEN = 96
+# (prompt_len, max_new): a short-dominated mix with a few long prompts — the
+# shape that starves a lockstep batch (everything pads to 64, everything
+# waits for the 8-token decoder, and request count is fixed at batch width).
+WORKLOAD = [(64, 4), (48, 6), (5, 8), (4, 6), (6, 2), (5, 7),
+            (8, 3), (4, 8), (6, 5), (5, 2), (7, 6), (40, 2)]
+QUICK_WORKLOAD = WORKLOAD[:6]
+
+# Paper-stage analytic workload: one slot pool serving a 1M-token context
+# alongside ordinary chat-scale traffic (prompt_len, max_new).
+STAGE_SLOTS = 2
+STAGE_CHUNK = 4096
+STAGE_WORKLOAD = [(1_048_576, 256), (131_072, 256), (32_768, 128),
+                  (8_192, 128), (524_288, 256), (16_384, 64)]
+
+
+# ---------------------------------------------------------------------------
+# Analytic simulators (host-only; no model, no device arrays)
+# ---------------------------------------------------------------------------
+
+def simulate_continuous(workload, *, num_slots, chunk, max_len) -> dict:
+    """Replay the REAL scheduler (bookkeeping-only CachePool) over a
+    workload of (prompt_len, max_new) pairs and count token steps."""
+    from repro.serve import CachePool, Request, Scheduler
+
+    pool = CachePool(num_slots, max_len=max_len)
+    sched = Scheduler(pool, prefill_chunk=chunk, vocab_size=2)
+    for i, (p, g) in enumerate(workload):
+        sched.submit(Request(prompt=np.zeros(p, np.int32), max_new_tokens=g),
+                     i)
+    fake = np.ones(num_slots, np.int32)     # token 1; no request sets eos
+    stats = dict(engine="continuous", num_slots=num_slots,
+                 prefill_chunk=chunk, model_calls=0, scan_columns=0,
+                 token_slots=0, useful_tokens=0)
+    while True:
+        sched.retire()
+        sched.admit()
+        if not sched.active:
+            break
+        plan = sched.plan()
+        sched.commit(plan, fake)
+        stats["model_calls"] += 1
+        stats["scan_columns"] += plan.columns
+        stats["token_slots"] += int(plan.tokens.size)
+        stats["useful_tokens"] += int(plan.lengths.sum())
+    return _finish(stats)
+
+
+def simulate_static(workload) -> dict:
+    """Closed-form mirror of ``generate_static``'s accounting loop."""
+    n = len(workload)
+    lens = [p for p, _ in workload]
+    gens = [g for _, g in workload]
+    s_max, g_max = max(lens), max(gens)
+    stats = dict(engine="static", batch=n, model_calls=1,
+                 scan_columns=s_max, token_slots=n * s_max,
+                 useful_tokens=sum(lens))
+    counts = [0] * n
+    done = [False] * n
+    for t in range(g_max):
+        for i in range(n):
+            if not done[i]:
+                counts[i] += 1
+            if counts[i] >= gens[i]:
+                done[i] = True
+        if all(done) or t == g_max - 1:
+            break
+        stats["model_calls"] += 1
+        stats["scan_columns"] += 1
+        stats["token_slots"] += n
+        stats["useful_tokens"] += sum(1 for d in done if not d)
+    return _finish(stats)
+
+
+def _finish(stats: dict) -> dict:
+    from repro.serve.engine import _finish_stats
+    return _finish_stats(stats)
+
+
+def _delta(static: dict, continuous: dict, tokens_match=None) -> dict:
+    d = {
+        "wasted_pad_steps_saved": (static["wasted_token_steps"]
+                                   - continuous["wasted_token_steps"]),
+        "continuous_strictly_fewer_wasted": (
+            continuous["wasted_token_steps"] < static["wasted_token_steps"]),
+        "waste_reduction": round(
+            static["wasted_token_steps"]
+            / max(continuous["wasted_token_steps"], 1), 2),
+        "utilization_gain": round(
+            continuous["utilization"] / max(static["utilization"], 1e-9), 3),
+    }
+    if tokens_match is not None:
+        d["tokens_match"] = tokens_match
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Measured small-scale run
+# ---------------------------------------------------------------------------
+
+def _requests(workload):
+    from repro.serve import Request
+    return [Request(prompt=(7 + np.arange(p, dtype=np.int32) * 3) % 900,
+                    max_new_tokens=g)
+            for p, g in workload]
+
+
+def _measured_row(workload) -> dict:
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models.registry import build_model
+    from repro.serve import ServeEngine
+
+    cfg = get_reduced("lwm-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_len=MAX_LEN)
+
+    t0 = time.time()
+    static_res = eng.generate_static(_requests(workload))
+    static = dict(eng.stats, wall_s=round(time.time() - t0, 2))
+    t0 = time.time()
+    cont_res = eng.serve(_requests(workload), num_slots=NUM_SLOTS,
+                         prefill_chunk=CHUNK)
+    cont = dict(eng.stats, wall_s=round(time.time() - t0, 2))
+    tokens_match = all(
+        np.array_equal(s.tokens, c.tokens)
+        for s, c in zip(static_res, cont_res))
+    return {
+        "bench": "serve_batching",
+        "backend": jax.default_backend(),
+        "workload": {"requests": len(workload),
+                     "prompt_lens": [p for p, _ in workload],
+                     "max_new": [g for _, g in workload],
+                     "num_slots": NUM_SLOTS, "prefill_chunk": CHUNK,
+                     "max_len": MAX_LEN, "model": cfg.name},
+        "static": static,
+        "continuous": cont,
+        "delta": _delta(static, cont, tokens_match=tokens_match),
+    }
+
+
+def _paper_stage_row() -> dict:
+    static = simulate_static(STAGE_WORKLOAD)
+    cont = simulate_continuous(STAGE_WORKLOAD, num_slots=STAGE_SLOTS,
+                               chunk=STAGE_CHUNK, max_len=2 ** 21)
+    return {
+        "bench": "serve_batching",
+        "analytic_paper_stage": {
+            "workload": {"prompt_lens": [p for p, _ in STAGE_WORKLOAD],
+                         "max_new": [g for _, g in STAGE_WORKLOAD],
+                         "num_slots": STAGE_SLOTS,
+                         "prefill_chunk": STAGE_CHUNK},
+            "static": static,
+            "continuous": cont,
+            "delta": _delta(static, cont),
+        },
+    }
+
+
+def _dry_run_trace() -> None:
+    """Shape-level trace of the chunked prefill step (no compile/execute)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.models import decoding
+    from repro.models.registry import build_model
+
+    cfg = get_reduced("lwm-7b")
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    caches = jax.eval_shape(
+        functools.partial(decoding.init_caches, cfg, NUM_SLOTS, MAX_LEN))
+    jax.eval_shape(
+        functools.partial(decoding.prefill_step, cfg),
+        params,
+        jax.ShapeDtypeStruct((NUM_SLOTS, CHUNK), jnp.int32),
+        caches,
+        jax.ShapeDtypeStruct((NUM_SLOTS,), jnp.int32),
+        jax.ShapeDtypeStruct((NUM_SLOTS,), jnp.int32))
+
+
+def run(*, quick: bool = False, dry_run: bool = False) -> list[dict]:
+    workload = QUICK_WORKLOAD if quick else WORKLOAD
+    if dry_run:
+        _dry_run_trace()
+        static = simulate_static(workload)
+        cont = simulate_continuous(workload, num_slots=NUM_SLOTS,
+                                   chunk=CHUNK, max_len=MAX_LEN)
+        rows = [{
+            "bench": "serve_batching", "dry_run": True,
+            "static": static, "continuous": cont,
+            "delta": _delta(static, cont),
+        }, _paper_stage_row()]
+        return rows
+
+    rows = [_measured_row(workload), _paper_stage_row()]
+    with open(OUT_PATH, "w") as f:
+        json.dump(rows, f, indent=2)
+    return rows
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--dry-run", action="store_true")
+    args = ap.parse_args(argv)
+    for row in run(quick=args.quick, dry_run=args.dry_run):
+        print(json.dumps(row, indent=2))
+
+
+if __name__ == "__main__":
+    main()

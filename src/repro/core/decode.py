@@ -27,11 +27,16 @@ def decode_attend_local(
     kv_positions: jnp.ndarray,  # (B, L_local) absolute; -1 marks empty slots
     q_position: jnp.ndarray,    # (B,) absolute position of the new token
     logits_soft_cap: float | None = None,
+    cache_len: jnp.ndarray | None = None,  # (B,) valid absolute positions are
+    #   [0, cache_len); None = derive validity from kv_positions/q_position
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Partial attention over the local cache shard.
 
     Returns (acc, m, l): un-normalized value sum (B,1,H,D) and softmax stats
-    (B,1,H) — ready for cross-shard combine.
+    (B,1,H) — ready for cross-shard combine. ``cache_len`` is the per-row
+    ragged fill length of a slot-pooled cache: entries at absolute positions
+    >= cache_len are dead (e.g. stale writes from a previous occupant of the
+    slot) and masked even if their position sentinel would pass.
     """
     b, _, h, d = q.shape
     k = repeat_kv(k_cache, h).astype(jnp.float32)
@@ -41,6 +46,8 @@ def decode_attend_local(
     if logits_soft_cap is not None:
         s = logits_soft_cap * jnp.tanh(s / logits_soft_cap)
     valid = (kv_positions >= 0) & (kv_positions <= q_position[:, None])  # (B,L)
+    if cache_len is not None:
+        valid &= kv_positions < cache_len[:, None]
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     m = jnp.max(s, axis=-1)                         # (B,1,H)
     p = jnp.exp(s - m[..., None])
@@ -93,14 +100,17 @@ def combine_decode_partials(acc, m, l, axis_name: str) -> jnp.ndarray:
 
 def decode_attention_unsharded(
     q, k_cache, v_cache, *, kv_positions, q_position, logits_soft_cap=None,
-    out_dtype=None, impl: str | None = None,
+    out_dtype=None, impl: str | None = None, cache_len=None,
 ) -> jnp.ndarray:
     """Single-device decode attention.
 
     ``impl`` selects the engine (see ``resolve_decode_impl``): the split-K
     Pallas flash-decode kernel streams the cache through VMEM blocks; the
     "xla" path (also the oracle for parity tests) materializes the full
-    (B, 1, H, L) logits.
+    (B, 1, H, L) logits. ``cache_len`` (B,) is the per-row ragged fill
+    length (slot-pooled serving caches); it threads through both engines so
+    the same batch can mix freshly-admitted short slots with long-running
+    ones.
     """
     impl = resolve_decode_impl(
         impl, logits_soft_cap=logits_soft_cap,
@@ -109,10 +119,11 @@ def decode_attention_unsharded(
         from repro.kernels import flash_decode as fdk  # lazy: avoids cycle
         return fdk.flash_decode(
             q, k_cache, v_cache, kv_positions, q_position,
-            interpret=impl == "interpret", out_dtype=out_dtype)
+            interpret=impl == "interpret", out_dtype=out_dtype,
+            cache_len=cache_len)
     acc, m, l = decode_attend_local(
         q, k_cache, v_cache, kv_positions=kv_positions, q_position=q_position,
-        logits_soft_cap=logits_soft_cap)
+        logits_soft_cap=logits_soft_cap, cache_len=cache_len)
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.astype(out_dtype or q.dtype)
 
@@ -127,18 +138,23 @@ def cache_update(
     *,
     local_offset: int = 0,
     local_len: int | None = None,
+    valid: jnp.ndarray | None = None,  # (B,) bool; False rows skip the write
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Write the new K/V at ``position``; no-op on shards not owning it.
 
     With a ring-sharded cache, device i owns absolute positions
     [local_offset, local_offset + local_len); the write lowers to a
-    select-style masked update which GSPMD keeps local.
+    select-style masked update which GSPMD keeps local. ``valid`` is the
+    slot mask of a continuous-batching step: rows carrying a pad column of
+    a prefill chunk (or an empty slot) leave their cache row untouched.
     """
     b, L = kv_positions.shape
     if local_len is None:
         local_len = L
     local_idx = position - local_offset                      # (B,)
     owns = (local_idx >= 0) & (local_idx < local_len)
+    if valid is not None:
+        owns &= valid
     idx = jnp.clip(local_idx, 0, L - 1)
     one_hot = jax.nn.one_hot(idx, L, dtype=k_cache.dtype) * owns[:, None]  # (B,L)
     k_cache = k_cache * (1 - one_hot[..., None, None]) + one_hot[..., None, None] * k_new

@@ -209,6 +209,7 @@ def ring_decode_attention(
     q_position: jnp.ndarray,        # (B,)
     logits_soft_cap: float | None = None,
     impl: str | None = None,
+    cache_len: jnp.ndarray | None = None,  # (B,) ragged fill (absolute count)
 ) -> jnp.ndarray:
     """Paper §5 decode: partial attention per cache shard + cross-shard merge.
 
@@ -216,7 +217,9 @@ def ring_decode_attention(
     "pallas"/"interpret" run the split-K flash-decode kernel once per device
     and rotate the raw (acc, m, l) partials around the ring as carries
     (``kernels.ops.ring_flash_decode``); "xla" is the original einsum +
-    pmax/psum LSE combine below.
+    pmax/psum LSE combine below. ``cache_len`` carries the per-row ragged
+    fill of a slot-pooled cache; it is defined over *absolute* positions, so
+    the same (replicated) vector is valid on every shard.
     """
     from repro.core import decode as decode_mod
 
@@ -228,11 +231,11 @@ def ring_decode_attention(
         return kops.ring_flash_decode(
             q, k_cache, v_cache, axis_name=axis_name,
             kv_positions=kv_positions, q_position=q_position,
-            interpret=impl == "interpret")
+            interpret=impl == "interpret", cache_len=cache_len)
 
     acc, m, l = decode_mod.decode_attend_local(
         q, k_cache, v_cache, kv_positions=kv_positions, q_position=q_position,
-        logits_soft_cap=logits_soft_cap)
+        logits_soft_cap=logits_soft_cap, cache_len=cache_len)
     axes = _axis_tuple(axis_name)
     out = acc
     # Multi-axis combine: fold axes one at a time (psum/pmax accept one name).

@@ -26,10 +26,14 @@ TPU mapping
   carry algebra of ``flash_attention_fwd_carry`` (PR 1) — and the caller
   merges splits (and ring carries) with the same log-sum-exp fold.
 * Masking: cache-length/validity masking is in-kernel, driven by the
-  absolute ``kv_positions`` block (-1 = unwritten slot) and the query's
-  absolute position: valid iff 0 <= kv_pos <= q_pos. Blocks with no valid
-  key (unwritten cache tail, or grid padding past the last KV block) skip
-  their matmuls entirely, so compute tracks the *filled* cache length.
+  absolute ``kv_positions`` block (-1 = unwritten slot), the query's
+  absolute position, and the optional per-batch-row ragged ``cache_len``:
+  valid iff 0 <= kv_pos <= q_pos and kv_pos < cache_len. Blocks with no
+  valid key (unwritten cache tail, a dead block past a short slot's ragged
+  fill, or grid padding past the last KV block) skip their matmuls
+  entirely, so compute tracks each row's *filled* cache length — the
+  contract the continuous-batching slot pool relies on when it batches a
+  freshly-admitted request against long-running ones.
 
 Split handling: ``blocks_per_split = ceil(nkv / num_splits)`` may overrun
 the last split; overrun steps clamp their BlockSpec index (no OOB fetch)
@@ -61,6 +65,7 @@ _FAR_FUTURE = 2 ** 30
 def _decode_kernel(
     kpos_ref,                  # (1, Bk) int32 — absolute cache positions
     qpos_ref,                  # (1, 1) int32 — the query's absolute position
+    clen_ref,                  # (1, 1) int32 — row's filled cache length
     q_ref,                     # (1, 1, G, D)
     k_ref, v_ref,              # (1, Bk, 1, D) — native (B, L, Hkv, D) layout
     acc_ref, m_ref, l_ref,     # per-split partials (1, 1, 1, G, D) / (1, 1, 1, G)
@@ -85,7 +90,11 @@ def _decode_kernel(
 
     kpos = kpos_ref[0]                           # (Bk,)
     qpos = qpos_ref[0, 0]                        # scalar
-    valid = (kpos >= 0) & (kpos <= qpos)         # (Bk,)
+    clen = clen_ref[0, 0]                        # scalar
+    # A slot entry is attendable iff it was written (>= 0), is causally
+    # visible (<= qpos), and lies inside the row's ragged fill [0, clen) —
+    # the last clause kills stale writes left by a slot's previous occupant.
+    valid = (kpos >= 0) & (kpos <= qpos) & (kpos < clen)  # (Bk,)
 
     def _update():
         q = q_ref[0, 0].astype(jnp.float32)      # (G, D)
@@ -106,13 +115,15 @@ def _decode_kernel(
         m_s[...] = m_new
 
     # Skip the matmuls when the block holds no attendable key: every slot is
-    # unwritten (-1) or strictly in the future of the query — i.e. the cache
-    # tail past the filled length — or this step is grid padding past the
-    # last KV block of an uneven split. Skipping is the identity update.
+    # unwritten (-1), strictly in the future of the query (the cache tail
+    # past the filled length), or past the row's ragged cache_len (a dead
+    # block of a short slot in a mixed batch) — or this step is grid padding
+    # past the last KV block of an uneven split. Skipping is the identity
+    # update.
     in_range = isp * blocks_per_split + ibk < num_kv_blocks
     if block_skip:
         earliest = jnp.min(jnp.where(kpos >= 0, kpos, _FAR_FUTURE))
-        pl.when(in_range & (earliest <= qpos))(_update)
+        pl.when(in_range & (earliest <= qpos) & (earliest < clen))(_update)
     else:
         pl.when(in_range)(_update)
 
@@ -146,6 +157,7 @@ def flash_decode_partial(
     num_splits: int = DEFAULT_NUM_SPLITS,
     interpret: bool = False,
     block_skip: bool = True,
+    cache_len: jnp.ndarray | None = None,   # (B,) ragged fill; None = no cap
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Partial decode attention over one cache shard via the split-K kernel.
 
@@ -153,6 +165,11 @@ def flash_decode_partial(
     same contract as ``core.decode.decode_attend_local``, ready for the
     cross-shard / cross-split ``merge_partials`` fold. Normalize with
     ``acc / max(l, eps)`` after the last shard.
+
+    ``cache_len`` is the per-batch-row ragged fill length of a slot-pooled
+    serving cache: positions >= cache_len are dead (possibly stale) and both
+    masked and block-skipped in-kernel, so a freshly-admitted short slot
+    costs only its own filled blocks even when batched with 1M-length slots.
     """
     b, _, h, d = q.shape
     L, hkv = k_cache.shape[1], k_cache.shape[2]
@@ -180,6 +197,10 @@ def flash_decode_partial(
     qg = q[:, 0].reshape(b, hkv, group, d)
     kv_positions = kv_positions.astype(jnp.int32)
     qpos2d = q_position.astype(jnp.int32).reshape(b, 1)
+    if cache_len is None:
+        clen2d = jnp.full((b, 1), _FAR_FUTURE, jnp.int32)   # no ragged cap
+    else:
+        clen2d = cache_len.astype(jnp.int32).reshape(b, 1)
 
     def kv_blk(isp, ibk):
         # Clamp grid padding of uneven splits to the last real block; the
@@ -199,6 +220,7 @@ def flash_decode_partial(
         in_specs=[
             pl.BlockSpec((1, kv_block),
                          lambda ib, ih, isp, ibk: (ib, kv_blk(isp, ibk))),
+            pl.BlockSpec((1, 1), lambda ib, ih, isp, ibk: (ib, 0)),
             pl.BlockSpec((1, 1), lambda ib, ih, isp, ibk: (ib, 0)),
             pl.BlockSpec((1, 1, group, d), lambda ib, ih, isp, ibk: (ib, ih, 0, 0)),
             pl.BlockSpec((1, kv_block, 1, d), kv_index),
@@ -226,7 +248,7 @@ def flash_decode_partial(
             pc.PARALLEL, pc.PARALLEL, pc.PARALLEL, pc.ARBITRARY),
         interpret=interpret,
         name="lwm_flash_decode",
-    )(kv_positions, qpos2d, qg, k_cache, v_cache)
+    )(kv_positions, qpos2d, clen2d, qg, k_cache, v_cache)
 
     # Merge the split partials (tiny: num_splits x G x D). Same LSE fold as
     # the ring carry; a fully-masked split has m = NEG_INF, l = 0 and drops
@@ -250,6 +272,7 @@ def flash_decode(
     block_skip: bool = True,
     carry: tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray] | None = None,
     out_dtype=None,
+    cache_len=None,
 ):
     """Normalized single-shard decode attention (B,1,H,D) -> (B,1,H,D).
 
@@ -259,7 +282,7 @@ def flash_decode(
     partial = flash_decode_partial(
         q, k_cache, v_cache, kv_positions, q_position,
         kv_block=kv_block, num_splits=num_splits, interpret=interpret,
-        block_skip=block_skip)
+        block_skip=block_skip, cache_len=cache_len)
     if carry is not None:
         partial = merge_partials(carry, partial)
     acc, _, l = partial

@@ -327,6 +327,7 @@ def flash_decode(
     impl: str = "auto",
     block_skip: bool = True,
     out_dtype=None,
+    cache_len: jnp.ndarray | None = None,   # (B,) ragged per-row fill length
 ) -> jnp.ndarray:
     """Single-device decode attention with impl dispatch.
 
@@ -343,7 +344,7 @@ def flash_decode(
     if impl == "xla":
         acc, _, l = dec_mod.decode_attend_local(
             q, k_cache, v_cache, kv_positions=kv_positions,
-            q_position=q_position)
+            q_position=q_position, cache_len=cache_len)
         out = acc / jnp.maximum(l, 1e-30)[..., None]
         return out.astype(out_dtype or q.dtype)
     return fdk.flash_decode(
@@ -351,7 +352,7 @@ def flash_decode(
         kv_block=kv_block or fdk.DEFAULT_KV_BLOCK,
         num_splits=num_splits or fdk.DEFAULT_NUM_SPLITS,
         interpret=impl == "interpret", block_skip=block_skip,
-        out_dtype=out_dtype)
+        out_dtype=out_dtype, cache_len=cache_len)
 
 
 def ring_flash_decode(
@@ -366,6 +367,7 @@ def ring_flash_decode(
     num_splits: int | None = None,
     interpret: bool = False,
     block_skip: bool = True,
+    cache_len: jnp.ndarray | None = None,   # (B,) ragged fill, absolute
 ) -> jnp.ndarray:
     """Fused ring decode over a sequence-sharded KV cache (inside shard_map).
 
@@ -392,7 +394,7 @@ def ring_flash_decode(
         q, k_cache, v_cache, kv_positions, q_position,
         kv_block=kv_block or fdk.DEFAULT_KV_BLOCK,
         num_splits=num_splits or fdk.DEFAULT_NUM_SPLITS,
-        interpret=interpret, block_skip=block_skip)
+        interpret=interpret, block_skip=block_skip, cache_len=cache_len)
 
     def step(_, state):
         carry, moving = state

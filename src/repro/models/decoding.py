@@ -15,6 +15,7 @@ masked update that only the owning shard applies.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any
 
 import jax
@@ -95,37 +96,47 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
 # ---------------------------------------------------------------------------
 
 def _decode_attend(cfg: ModelConfig, q, cache_k, cache_v, cache_pos,
-                   position, ctx: RuntimeCtx):
+                   position, ctx: RuntimeCtx, cache_lens=None):
     """q: (B,1,H,hd); cache (B,L,Hkv,hd). Dispatch ring vs local.
 
     The engine (split-K Pallas flash-decode vs XLA einsum) is selected by
     ``ctx.decode_impl`` (override) / ``cfg.decode_impl`` — resolved inside
     ``ring_decode_attention`` / ``decode_attention_unsharded``.
+    ``cache_lens`` (B,) is the per-row ragged fill of a slot-pooled cache
+    (absolute-position semantics, so it is replicated over the ring axis).
     """
     impl = ctx.decode_impl or cfg.decode_impl
     if ctx.decode_ring:
         seq = ctx.rules.get("seq") if ctx.rules else None
+        if cache_lens is None:
+            cache_lens = jnp.full(q.shape[:1], 2 ** 30, jnp.int32)
 
-        def fn(q, ck, cv, cp):
+        def fn(q, ck, cv, cp, cl):
             return ring_mod.ring_decode_attention(
                 q, ck, cv, axis_name=ctx.ring_axis, kv_positions=cp,
                 q_position=position, logits_soft_cap=cfg.logits_soft_cap,
-                impl=impl)
+                impl=impl, cache_len=cl)
 
         return jc.shard_map(
             fn, mesh=ctx.mesh,
             in_specs=(P(), P(None, seq, None, None), P(None, seq, None, None),
-                      P(None, seq)),
+                      P(None, seq), P()),
             out_specs=P(), check=False,
-        )(q, cache_k, cache_v, cache_pos)
+        )(q, cache_k, cache_v, cache_pos, cache_lens)
     return dec_mod.decode_attention_unsharded(
         q, cache_k, cache_v, kv_positions=cache_pos, q_position=position,
-        logits_soft_cap=cfg.logits_soft_cap, impl=impl)
+        logits_soft_cap=cfg.logits_soft_cap, impl=impl, cache_len=cache_lens)
 
 
 def _attn_decode_block(cfg: ModelConfig, p, x, cache, position,
-                       ctx: RuntimeCtx, cross_kv=None):
-    """One attention block decode step. x: (B,1,D)."""
+                       ctx: RuntimeCtx, cross_kv=None, token_valid=None,
+                       cache_lens=None):
+    """One attention block decode step. x: (B,1,D).
+
+    ``token_valid`` (B,) masks the cache write per row (continuous batching:
+    pad columns of a prefill chunk and empty slots must not touch the
+    cache); ``cache_lens`` (B,) bounds each row's attendable cache span.
+    """
     b = x.shape[0]
     hd = cfg.resolved_head_dim
     is_encdec = cross_kv is not None
@@ -140,8 +151,10 @@ def _attn_decode_block(cfg: ModelConfig, p, x, cache, position,
     pos2d = position[:, None]
     q, k_new, v_new = tfm._project_qkv(cfg, p["attn"], h, pos2d)
     k_c, v_c, pos_c = dec_mod.cache_update(
-        cache["k"], cache["v"], cache["positions"], k_new, v_new, position)
-    att = _decode_attend(cfg, q, k_c, v_c, pos_c, position, ctx)
+        cache["k"], cache["v"], cache["positions"], k_new, v_new, position,
+        valid=token_valid)
+    att = _decode_attend(cfg, q, k_c, v_c, pos_c, position, ctx,
+                         cache_lens=cache_lens)
     x = x + L.linear(att.reshape(b, 1, -1), p["attn"]["wo"])
 
     if is_encdec:
@@ -196,13 +209,24 @@ def decode_step(
     position: jnp.ndarray,     # (B,) absolute position of this token
     *,
     ctx: RuntimeCtx = NULL_CTX,
+    token_valid: jnp.ndarray | None = None,   # (B,) bool slot mask
+    cache_lens: jnp.ndarray | None = None,    # (B,) ragged attendable span
 ) -> tuple[jnp.ndarray, dict]:
-    """One autoregressive step. Returns (logits (B,1,V), new caches)."""
+    """One autoregressive step. Returns (logits (B,1,V), new caches).
+
+    ``token_valid`` masks attention-cache writes per row (continuous
+    batching: a pad column / empty slot must not write); recurrent-state
+    families additionally rely on the caller selecting old-vs-new caches per
+    row (``prefill_step`` does). ``cache_lens`` threads the per-row ragged
+    cache span into decode attention.
+    """
     x = L.embed_lookup(params["embed"], token, cfg.compute_dtype)
     new_caches = dict(caches)
 
     if cfg.family == "hybrid":
-        x, new_caches = _hybrid_decode(cfg, params, x, caches, position, ctx)
+        x, new_caches = _hybrid_decode(cfg, params, x, caches, position, ctx,
+                                       token_valid=token_valid,
+                                       cache_lens=cache_lens)
     else:
         for i, (kind, count) in enumerate(tfm.layer_groups(cfg)):
             if count == 0:
@@ -214,7 +238,9 @@ def decode_step(
             if kind in ("attn_dense", "attn_moe"):
                 def body(x, pc):
                     lp, lc = pc
-                    x, nc = _attn_decode_block(cfg, lp, x, lc, position, ctx)
+                    x, nc = _attn_decode_block(cfg, lp, x, lc, position, ctx,
+                                               token_valid=token_valid,
+                                               cache_lens=cache_lens)
                     return x, nc
             elif kind == "dec_attn":
                 cross = caches["cross"]
@@ -224,7 +250,9 @@ def decode_step(
                     ck = cross["k"][idx]
                     cv = cross["v"][idx]
                     x, nc = _attn_decode_block(cfg, lp, x, lc, position, ctx,
-                                               cross_kv=(ck, cv))
+                                               cross_kv=(ck, cv),
+                                               token_valid=token_valid,
+                                               cache_lens=cache_lens)
                     return x, nc
             elif kind.startswith("mla"):
                 def body(x, pc):
@@ -259,7 +287,8 @@ def decode_step(
     return logits, new_caches
 
 
-def _hybrid_decode(cfg, params, x, caches, position, ctx):
+def _hybrid_decode(cfg, params, x, caches, position, ctx, token_valid=None,
+                   cache_lens=None):
     """zamba2 decode: scan over (mamba-group + shared-attn) super-blocks."""
     hy = cfg.hybrid
     k = hy.attn_every
@@ -289,7 +318,9 @@ def _hybrid_decode(cfg, params, x, caches, position, ctx):
         gp, gc, sc = xs           # mamba params (k,...), mamba caches, shared cache
         x, new_gc = mamba_scan(x, gp, gc)
         h = L.linear(jnp.concatenate([x, x0], axis=-1), w_in)
-        y, new_sc = _attn_decode_block(cfg, shared_p, h, sc, position, ctx)
+        y, new_sc = _attn_decode_block(cfg, shared_p, h, sc, position, ctx,
+                                       token_valid=token_valid,
+                                       cache_lens=cache_lens)
         x = x + (y - h)
         return x, (new_gc, new_sc)
 
@@ -316,34 +347,84 @@ def _hybrid_decode(cfg, params, x, caches, position, ctx):
 
 
 # ---------------------------------------------------------------------------
-# Prefill (build caches from a full prompt)
+# Prefill (build caches from a full prompt, or append a chunk per slot)
 # ---------------------------------------------------------------------------
+
+def _select_rows(valid, new, old):
+    """Per-batch-row select over a stacked cache leaf (count, B, ...)."""
+    shape = (1, valid.shape[0]) + (1,) * (new.ndim - 2)
+    return jnp.where(valid.reshape(shape), new, old)
+
+
+def prefill_step(
+    cfg: ModelConfig,
+    params,
+    tokens: jnp.ndarray,       # (B, C) int32 — per-slot chunk, right-padded
+    caches: dict,
+    offsets: jnp.ndarray,      # (B,) absolute position of each row's column 0
+    lengths: jnp.ndarray,      # (B,) valid tokens per row (0 = idle slot)
+    *,
+    ctx: RuntimeCtx = NULL_CTX,
+) -> tuple[jnp.ndarray, dict]:
+    """Append a multi-token chunk to each slot's cache through the decode
+    path (continuous batching's chunked prefill).
+
+    Row i consumes ``tokens[i, :lengths[i]]`` at absolute positions
+    ``offsets[i] .. offsets[i] + lengths[i] - 1``; columns past a row's
+    length are pad (no cache write, no state advance — slot-masked writes
+    for attention caches, a per-row old/new select for recurrent state).
+    A pure decode step is the C == 1 case (decoding slots carry length 1,
+    idle slots length 0), so ONE entry point serves mixed
+    prefill-interleaved-with-decode batches.
+
+    Returns ``(last_logits (B, 1, V), new_caches)`` where last_logits is
+    each row's logits at its *last valid* column — the next-token logits a
+    sampler needs, whether the row decoded one token or just finished its
+    prompt.
+    """
+    b, c = tokens.shape
+    offsets = offsets.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    # Upper bound of every row's attendable span once its chunk is written.
+    # In-chunk causality still holds per column via kv_pos <= q_pos.
+    upper = offsets + lengths
+    logits0 = jnp.zeros((b, 1, cfg.vocab_size), cfg.compute_dtype)
+
+    def step(carry, xs):
+        caches, last = carry
+        tok, col = xs                      # (B,), scalar
+        valid = col < lengths              # (B,)
+        pos = offsets + col
+        lg, new_caches = decode_step(
+            cfg, params, tok[:, None], caches, pos, ctx=ctx,
+            token_valid=valid, cache_lens=upper)
+        new_caches = jax.tree.map(
+            functools.partial(_select_rows, valid), new_caches, caches)
+        last = jnp.where(valid[:, None, None], lg, last)
+        return (new_caches, last), None
+
+    (caches, last_logits), _ = jax.lax.scan(
+        step, (caches, logits0),
+        (tokens.T.astype(jnp.int32), jnp.arange(c, dtype=jnp.int32)))
+    return last_logits, caches
+
 
 def prefill(cfg: ModelConfig, params, tokens, *, ctx: RuntimeCtx = NULL_CTX,
             max_len: int | None = None, encoder_frames=None,
-            vision_embeds=None):
-    """Run the prompt through the model step-by-step-free (full forward) and
-    populate caches for subsequent decode_step calls.
+            vision_embeds=None, lengths=None):
+    """Run the prompt through the model and populate caches for subsequent
+    decode_step calls.
 
-    For attention families this recomputes K/V per layer via a scan that
-    mirrors ``transformer.forward`` but collects cache entries.
+    Simple, correct approach: feed the prompt through decode_step one token
+    at a time via lax.scan (``prefill_step``). O(S) steps of O(L) work —
+    used by tests and the serve engine at example scale; the fused forward
+    covers batch scoring. With ``lengths`` (B,), rows are ragged:
+    ``tokens[i, lengths[i]:]`` is right-padding and the returned logits are
+    each row's *last real* token's — no separate full forward needed.
     """
     b, s = tokens.shape
     max_len = max_len or s
     caches = init_caches(cfg, b, max_len, ctx)
-    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
-
-    # Simple, correct approach: feed the prompt through decode_step one token
-    # at a time via lax.scan. O(S) steps of O(L) work — used by tests and the
-    # serve engine at example scale; the fused forward covers batch scoring.
-    logits0 = jnp.zeros((b, 1, cfg.vocab_size), cfg.compute_dtype)
-
-    def step(carry, t):
-        caches, _ = carry
-        tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
-        pos = jnp.full((b,), 0, jnp.int32) + t
-        lg, caches = decode_step(cfg, params, tok, caches, pos, ctx=ctx)
-        return (caches, lg), None
 
     if cfg.family == "audio":
         enc_out = tfm.encode(cfg, params, encoder_frames, ctx)
@@ -361,6 +442,8 @@ def prefill(cfg: ModelConfig, params, tokens, *, ctx: RuntimeCtx = NULL_CTX,
         ck, cv = jax.lax.map(cross_kv, dec_p)
         caches["cross"] = {"k": ck, "v": cv}
 
-    (caches, last_logits), _ = jax.lax.scan(step, (caches, logits0),
-                                            jnp.arange(s))
-    return last_logits, caches
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    return prefill_step(cfg, params, tokens, caches,
+                        jnp.zeros((b,), jnp.int32),
+                        jnp.asarray(lengths, jnp.int32), ctx=ctx)

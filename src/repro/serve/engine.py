@@ -1,4 +1,4 @@
-"""Batched serving engine: prefill + autoregressive decode (paper §5).
+"""Continuous-batching serving engine (paper §5 inference, scaled out).
 
 Structure mirrors the paper's inference setup — the KV cache can be
 *sequence-sharded over the ring axis* (ctx.decode_ring) so million-token
@@ -9,9 +9,21 @@ split-K Pallas flash-decode kernel on TPU (``decode_impl="auto"``), which
 streams the cache through VMEM without materializing per-shard logits; XLA
 einsum elsewhere.
 
-The engine is deliberately simple (static batch, padded prompts, done-mask)
-but complete: tokenept streams, eos handling, greedy/temperature sampling,
-and classifier-free guidance for vision-token generation.
+Above the kernel sits a continuous-batching loop (``serve``): a
+``CachePool`` owns a fixed number of batch slots over preallocated
+per-layer KV caches, a ``Scheduler`` admits queued requests into free slots
+and retires finished ones every step, and new prompts are *chunk-prefilled*
+through the decode path (``decoding.prefill_step``) interleaved with the
+ongoing decode steps — so finished requests leave the batch immediately,
+queued requests join mid-flight, and a long prompt never stalls short ones
+behind a monolithic prefill. Token streams, eos handling, per-request
+greedy/temperature/top-k sampling, and classifier-free guidance for
+vision-token generation all ride on the same slot layout.
+
+``generate`` keeps the original thin batch API (admit everything, run to
+completion); ``generate_static`` preserves the PR-2-era lockstep engine —
+pad every prompt to the longest, decode until the slowest request finishes
+— as the measured baseline for ``benchmarks/serve_batching.py``.
 """
 from __future__ import annotations
 
@@ -26,6 +38,22 @@ from repro.models.config import ModelConfig
 from repro.models.context import NULL_CTX, RuntimeCtx
 from repro.models import decoding, transformer
 from repro.serve import sampling
+from repro.serve.pool import CachePool
+from repro.serve.scheduler import Scheduler
+
+
+def _finish_stats(stats: dict) -> dict:
+    """Derive the waste accounting every engine reports: a *token step* is
+    one batch row x one scan column of model work; wasted = the row computed
+    masked padding (prompt right-pad, lockstep stepping of a finished
+    request, an idle slot, or a prefill chunk's pad tail)."""
+    stats["wasted_token_steps"] = (stats["token_slots"]
+                                   - stats["useful_tokens"])
+    stats["utilization"] = round(
+        stats["useful_tokens"] / max(stats["token_slots"], 1), 4)
+    stats["tokens_per_step"] = round(
+        stats["useful_tokens"] / max(stats["scan_columns"], 1), 3)
+    return stats
 
 
 @dataclasses.dataclass
@@ -44,19 +72,27 @@ class Result:
     tokens: np.ndarray                    # generated tokens (without prompt)
     steps: int
     prefill_len: int
+    finish_reason: str | None = None      # "eos" | "length" | "cache_full"
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *,
                  ctx: RuntimeCtx = NULL_CTX, max_len: int = 4096,
                  bos_id: int = 0, seed: int = 0,
-                 decode_impl: str | None = None):
+                 decode_impl: str | None = None,
+                 num_slots: int | None = None, prefill_chunk: int = 8):
         """``decode_impl`` selects the decode-attention engine for every
         step this engine runs (overrides ``ctx.decode_impl`` and
         ``cfg.decode_impl``): "auto" (default) = the split-K Pallas
         flash-decode kernel on TPU with a clean XLA fallback elsewhere;
         "interpret"/"pallas"/"xla" force a path (see
-        ``core.decode.resolve_decode_impl``)."""
+        ``core.decode.resolve_decode_impl``).
+
+        ``num_slots`` fixes the continuous-batching slot count for
+        ``serve`` (default: per-call, min(len(requests), 8));
+        ``prefill_chunk`` is the number of prompt tokens a prefilling slot
+        consumes per interleaved step.
+        """
         if decode_impl is not None:
             ctx = dataclasses.replace(ctx, decode_impl=decode_impl)
         self.cfg = cfg
@@ -64,67 +100,238 @@ class ServeEngine:
         self.ctx = ctx
         self.max_len = max_len
         self.bos_id = bos_id
-        self.rng = jax.random.PRNGKey(seed)
+        self.num_slots = num_slots
+        self.prefill_chunk = prefill_chunk
+        self._base_key = jax.random.PRNGKey(seed)
+        self._req_counter = 0
+        self.stats: dict = {}
 
+        # One jitted chunk step serves prefill, decode, and mixed batches
+        # (decode is the C == 1 case); compiled once per (slots, C) shape.
+        self._step = jax.jit(functools.partial(
+            decoding.prefill_step, cfg, ctx=ctx), donate_argnums=(2,))
+        # Single-token step for the static baseline's lockstep loop.
         self._decode = jax.jit(functools.partial(
             decoding.decode_step, cfg, ctx=ctx), donate_argnums=(2,))
+        self._sample = jax.jit(sampling.sample_batch)
+        self._greedy = jax.jit(sampling.greedy_batch)
+        # One batched fold per step (not one dispatch per slot): request key
+        # x token index -> per-row sampling key.
+        self._fold = jax.jit(jax.vmap(jax.random.fold_in))
 
-    # -- prefill ---------------------------------------------------------------
+    # -- continuous engine -----------------------------------------------------
+
+    def serve(self, requests: list[Request], *, num_slots: int | None = None,
+              prefill_chunk: int | None = None) -> list[Result]:
+        """Run requests through the continuous-batching loop.
+
+        Requests queue FIFO; at most ``num_slots`` run concurrently and a
+        finished slot is re-used by the next queued request on the very next
+        step. Returns results in submission order. ``self.stats`` holds the
+        run's token-step accounting (useful vs wasted row-column slots).
+        """
+        reqs = list(requests)
+        assert reqs, "empty batch"
+        n_slots = int(num_slots or self.num_slots or min(len(reqs), 8))
+        chunk = int(prefill_chunk or self.prefill_chunk)
+
+        pool = CachePool(n_slots, cfg=self.cfg, max_len=self.max_len,
+                         ctx=self.ctx)
+        sched = Scheduler(pool, prefill_chunk=chunk,
+                          vocab_size=self.cfg.vocab_size, bos_id=self.bos_id)
+        req_keys = []
+        for i, r in enumerate(reqs):
+            sched.submit(r, i)
+            req_keys.append(np.asarray(jax.random.fold_in(
+                self._base_key, self._req_counter)))
+            self._req_counter += 1
+        uncond_pool = None
+        if any(r.cfg_scale is not None for r in reqs):
+            uncond_pool = CachePool(n_slots, cfg=self.cfg,
+                                    max_len=self.max_len, ctx=self.ctx)
+
+        results: list[Result | None] = [None] * len(reqs)
+        stats = dict(engine="continuous", num_slots=n_slots,
+                     prefill_chunk=chunk, model_calls=0, scan_columns=0,
+                     token_slots=0, useful_tokens=0, prefill_tokens=0,
+                     decode_tokens=0, admissions=0, uncond_calls=0,
+                     uncond_token_slots=0)
+        while True:
+            for st in sched.retire():
+                results[st.req_id] = Result(
+                    tokens=np.asarray(st.tokens, np.int32),
+                    steps=len(st.tokens), prefill_len=len(st.req.prompt),
+                    finish_reason=st.finish_reason)
+            admitted = sched.admit()
+            stats["admissions"] += len(admitted)
+            if uncond_pool is not None:
+                for st in admitted:
+                    if st.req.cfg_scale is not None:
+                        uncond_pool.reset(st.slot)
+            if not sched.active:
+                break
+
+            plan = sched.plan()
+            if plan is None:        # only pre-finished slots; retire them
+                continue
+            logits, pool.caches = self._step(
+                self.params, jnp.asarray(plan.tokens), pool.caches,
+                jnp.asarray(plan.offsets), jnp.asarray(plan.lengths))
+            if uncond_pool is not None:
+                logits = self._cfg_combine(logits, sched, uncond_pool, stats)
+            if any(sched.temperature[slot] > 0 for slot in sched.active):
+                keys = self._step_keys(sched, req_keys)
+                toks = self._sample(
+                    logits, keys, jnp.asarray(sched.temperature),
+                    jnp.asarray(sched.top_k), jnp.asarray(sched.vision_lo),
+                    jnp.asarray(sched.vision_hi))
+            else:   # all-greedy step: skip the full-vocab sort + draw
+                toks = self._greedy(logits, jnp.asarray(sched.vision_lo),
+                                    jnp.asarray(sched.vision_hi))
+            sched.commit(plan, np.asarray(toks[:, 0]))
+
+            stats["model_calls"] += 1
+            stats["scan_columns"] += plan.columns
+            stats["token_slots"] += int(plan.tokens.size)
+            stats["useful_tokens"] += int(plan.lengths.sum())
+            stats["prefill_tokens"] += int(plan.lengths[plan.is_prefill].sum())
+            stats["decode_tokens"] += int(plan.lengths[~plan.is_prefill].sum())
+
+        self.stats = _finish_stats(stats)
+        return results  # type: ignore[return-value]
+
+    def _cfg_combine(self, logits, sched, uncond_pool, stats):
+        """Run the CFG unconditional branch (same chunked step, <bos>-rooted
+        caches) and mix per-row: rows without guidance keep cond logits."""
+        uplan = sched.plan_uncond()
+        if uplan is None:
+            return logits
+        u_logits, uncond_pool.caches = self._step(
+            self.params, jnp.asarray(uplan.tokens), uncond_pool.caches,
+            jnp.asarray(uplan.offsets), jnp.asarray(uplan.lengths))
+        scale = jnp.asarray(sched.cfg_scale)[:, None, None]
+        mix = sampling.cfg_logits(logits.astype(jnp.float32),
+                                  u_logits.astype(jnp.float32), scale)
+        urows = jnp.asarray(uplan.lengths > 0)[:, None, None]
+        sched.commit_uncond(uplan, uncond_pool)
+        stats["uncond_calls"] += 1
+        stats["uncond_token_slots"] += int(uplan.tokens.size)
+        return jnp.where(urows, mix, logits.astype(jnp.float32))
+
+    def _step_keys(self, sched, req_keys) -> jnp.ndarray:
+        """Per-slot PRNG keys: request key folded with the token index, so a
+        request's sampled stream is independent of batch composition. Host
+        code only gathers; the fold itself is one batched jitted call."""
+        base = np.zeros((sched.pool.num_slots, 2), np.uint32)
+        idx = np.zeros(sched.pool.num_slots, np.uint32)
+        for slot, st in sched.active.items():
+            base[slot] = req_keys[st.req_id]
+            idx[slot] = len(st.tokens)
+        return self._fold(jnp.asarray(base), jnp.asarray(idx))
+
+    # -- batch API (thin wrapper) ----------------------------------------------
+
+    def generate(self, requests: list[Request], *, extras: dict | None = None
+                 ) -> list[Result]:
+        """Run a batch of requests to completion. Returns per-request tokens.
+
+        Thin wrapper over the continuous engine with one slot per request
+        (everything admitted at step 0). ``extras`` route to the static
+        path: audio encoder frames build the cross-attention caches in its
+        one-shot prefill, and VLM vision embeds condition its first-token
+        logits through the full forward.
+        """
+        assert requests, "empty batch"
+        if extras:
+            return self.generate_static(requests, extras=extras)
+        return self.serve(requests, num_slots=len(requests))
+
+    # -- static lockstep baseline ----------------------------------------------
 
     def _prefill_batch(self, prompts: list[np.ndarray], extras: dict):
-        """Right-padded batched prefill via per-token decode scan."""
+        """Right-padded batched prefill through the chunked decode path.
+
+        The prefill scan itself yields each row's *last real* token logits
+        (ragged ``lengths``), so the full ``transformer.forward`` only runs
+        when it is not redundant: VLM patch embeds condition the input layer,
+        which the token-id decode path cannot see.
+        """
         b = len(prompts)
         lens = np.array([len(p) for p in prompts], np.int32)
         s = int(lens.max())
         toks = np.full((b, s), self.bos_id, np.int32)
         for i, p in enumerate(prompts):
             toks[i, : len(p)] = p
-        caches = decoding.init_caches(self.cfg, b, self.max_len, self.ctx)
-        if self.ctx.mesh is not None:
-            shard = self.ctx  # caches constrained lazily inside decode steps
-        _, caches = decoding.prefill(
+        last_logits, caches = decoding.prefill(
             self.cfg, self.params, jnp.asarray(toks), ctx=self.ctx,
-            max_len=self.max_len, **extras)
-        # logits for each request's *last real* token, via a full forward
-        logits, _ = transformer.forward(self.cfg, self.params,
-                                        jnp.asarray(toks), ctx=self.ctx,
-                                        **extras)
-        last = jnp.asarray(lens - 1)
-        last_logits = jnp.take_along_axis(
-            logits, last[:, None, None].astype(jnp.int32), axis=1)
+            max_len=self.max_len, lengths=jnp.asarray(lens), **extras)
+        if extras.get("vision_embeds") is not None:
+            logits, _ = transformer.forward(self.cfg, self.params,
+                                            jnp.asarray(toks), ctx=self.ctx,
+                                            **extras)
+            last = jnp.asarray(lens - 1)
+            last_logits = jnp.take_along_axis(
+                logits, last[:, None, None].astype(jnp.int32), axis=1)
         return last_logits, caches, lens
 
-    # -- decode ----------------------------------------------------------------
-
-    def _sample(self, logits, req: Request):
-        if req.vision_range is not None:
-            logits = sampling.mask_to_vision_range(logits, *req.vision_range)
-        if req.temperature and req.temperature > 0:
-            self.rng, k = jax.random.split(self.rng)
-            return sampling.temperature_sample(
-                logits, k, req.temperature, req.top_k)
-        return sampling.greedy(logits)
-
-    def generate(self, requests: list[Request], *, extras: dict | None = None
-                 ) -> list[Result]:
-        """Run a batch of requests to completion. Returns per-request tokens."""
-        assert requests, "empty batch"
-        req0 = requests[0]
+    def generate_static(self, requests: list[Request], *,
+                        extras: dict | None = None) -> list[Result]:
+        """The lockstep batch engine: every prompt pads to the longest, the
+        batch decodes until the slowest request finishes, nothing joins
+        mid-flight. Kept as the measured baseline for
+        ``benchmarks/serve_batching.py`` (and for ``extras``-carrying
+        families); sampling params are still honored per request.
+        """
+        reqs = list(requests)
+        assert reqs, "empty batch"
         extras = extras or {}
-        prompts = [r.prompt for r in requests]
-        b = len(prompts)
+        b = len(reqs)
+        v = self.cfg.vocab_size
+        prompts = [r.prompt for r in reqs]
         last_logits, caches, lens = self._prefill_batch(prompts, extras)
+        s_max = int(lens.max())
 
-        max_new = max(r.max_new_tokens for r in requests)
+        temp = np.array([r.temperature or 0.0 for r in reqs], np.float32)
+        top_k = np.array([r.top_k if r.top_k else v for r in reqs], np.int32)
+        vlo = np.array([(r.vision_range or (0, v))[0] for r in reqs], np.int32)
+        vhi = np.array([(r.vision_range or (0, v))[1] for r in reqs], np.int32)
         eos = np.array([r.eos_id if r.eos_id is not None else -1
-                        for r in requests], np.int32)
-        out = np.zeros((b, max_new), np.int32)
-        done = np.zeros(b, bool)
-        positions = jnp.asarray(lens)           # next position per request
+                        for r in reqs], np.int32)
+        max_new_each = np.array([r.max_new_tokens for r in reqs], np.int32)
+        max_new = int(max_new_each.max())
+        cfg_scales = np.array([r.cfg_scale if r.cfg_scale is not None else 0.0
+                               for r in reqs], np.float32)
+        cfg_rows = np.array([r.cfg_scale is not None for r in reqs])
+        has_cfg = bool(cfg_rows.any())
 
-        token = self._sample(last_logits, req0)
+        req_keys = np.zeros((b, 2), np.uint32)
+        for i in range(b):
+            req_keys[i] = np.asarray(jax.random.fold_in(
+                self._base_key, self._req_counter))
+            self._req_counter += 1
+
+        def sample(logits, t):
+            if not (temp > 0).any():
+                return self._greedy(logits, jnp.asarray(vlo), jnp.asarray(vhi))
+            keys = self._fold(jnp.asarray(req_keys),
+                              jnp.full((b,), t, jnp.uint32))
+            return self._sample(logits, keys, jnp.asarray(temp),
+                                jnp.asarray(top_k), jnp.asarray(vlo),
+                                jnp.asarray(vhi))
+
+        stats = dict(engine="static", batch=b, model_calls=1,
+                     scan_columns=s_max, token_slots=b * s_max,
+                     useful_tokens=int(lens.sum()),
+                     prefill_tokens=int(lens.sum()), decode_tokens=0)
+
+        out = np.zeros((b, max_new), np.int32)
+        done = max_new_each < 1          # a 0-budget row never stores a token
+        counts = np.zeros(b, np.int32)
+        positions = jnp.asarray(lens)
+        token = sample(last_logits, 0)
+
         uncond_caches = None
-        if req0.cfg_scale is not None:
+        if has_cfg:
             # unconditional branch: cache over a <bos>-only context
             uncond_caches = decoding.init_caches(self.cfg, b, self.max_len,
                                                  self.ctx)
@@ -132,22 +339,38 @@ class ServeEngine:
             _, uncond_caches = self._decode(
                 self.params, bos, uncond_caches, jnp.zeros((b,), jnp.int32))
 
-        steps = 0
+        finish = np.array(["length"] * b, object)
         for t in range(max_new):
-            out[:, t] = np.where(done, 0, np.asarray(token[:, 0]))
-            done |= np.asarray(token[:, 0]) == eos
-            steps = t + 1
+            tok_np = np.asarray(token[:, 0])
+            out[:, t] = np.where(done, 0, tok_np)
+            counts[~done] += 1
+            hit_eos = ~done & (eos >= 0) & (tok_np == eos)
+            finish[hit_eos] = "eos"
+            done |= hit_eos
+            done |= counts >= max_new_each
             if bool(done.all()) or t == max_new - 1:
                 break
             logits, caches = self._decode(self.params, token, caches,
                                           positions)
-            if req0.cfg_scale is not None:
+            stats["model_calls"] += 1
+            stats["scan_columns"] += 1
+            stats["token_slots"] += b
+            stats["useful_tokens"] += int((~done).sum())
+            stats["decode_tokens"] += int((~done).sum())
+            if has_cfg:
                 u_pos = jnp.full((b,), t + 1, jnp.int32)
                 u_logits, uncond_caches = self._decode(
                     self.params, token, uncond_caches, u_pos)
-                logits = sampling.cfg_logits(logits, u_logits, req0.cfg_scale)
-            token = self._sample(logits, req0)
+                mix = sampling.cfg_logits(
+                    logits.astype(jnp.float32), u_logits.astype(jnp.float32),
+                    jnp.asarray(cfg_scales)[:, None, None])
+                logits = jnp.where(
+                    jnp.asarray(cfg_rows)[:, None, None], mix,
+                    logits.astype(jnp.float32))
+            token = sample(logits, t + 1)
             positions = positions + 1
 
-        return [Result(tokens=out[i, : steps], steps=steps,
-                       prefill_len=int(lens[i])) for i in range(b)]
+        self.stats = _finish_stats(stats)
+        return [Result(tokens=out[i, : counts[i]], steps=int(counts[i]),
+                       prefill_len=int(lens[i]), finish_reason=str(finish[i]))
+                for i in range(b)]

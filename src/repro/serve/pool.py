@@ -1,0 +1,87 @@
+"""Slot-based KV cache pool for continuous-batching serving.
+
+The pool preallocates the per-layer decode caches ONCE for a fixed number of
+batch *slots* (``decoding.init_caches(cfg, num_slots, max_len)``) and then
+hands slots out to requests as they arrive: admit -> ``alloc`` + ``reset``,
+retire -> ``free``. Cache arrays never reallocate or reshape while the
+engine runs, so the jitted step function compiles once per (num_slots,
+chunk) shape and every admission/retirement is pure bookkeeping plus one
+donated in-place slot reset.
+
+Per-slot ``cache_len`` tracks each slot's ragged fill (tokens written so
+far) — the quantity that threads through ``core.decode`` /
+``kernels.flash_decode`` as the per-batch-row cache length, letting a
+freshly-admitted slot skip the dead tail of its cache row in-kernel.
+
+``CachePool(num_slots)`` without a config is bookkeeping-only (no arrays):
+the scheduler simulator and the serve_batching benchmark's analytic mode
+replay admission policy against it without touching a device.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.models.context import NULL_CTX, RuntimeCtx
+
+
+class CachePool:
+    def __init__(self, num_slots: int, *, cfg=None, max_len: int = 0,
+                 ctx: RuntimeCtx = NULL_CTX):
+        assert num_slots >= 1, "pool needs at least one slot"
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.cache_len = np.zeros(num_slots, np.int64)
+        # pop() from the tail => lowest slot ids are handed out first.
+        self._free = list(range(num_slots - 1, -1, -1))
+        self.caches = None
+        self._template = None
+        self._reset_jit = None
+        if cfg is not None:
+            from repro.models import decoding  # lazy: keeps bookkeeping mode light
+            self.caches = decoding.init_caches(cfg, num_slots, max_len, ctx)
+            self._template = decoding.init_caches(cfg, 1, max_len, ctx)
+            self._reset_jit = jax.jit(self._reset_slot, donate_argnums=(0,))
+
+    # -- slot lifecycle --------------------------------------------------------
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int | None:
+        """Claim a free slot (lowest id first); None when the pool is full."""
+        if not self._free:
+            return None
+        return self._free.pop()
+
+    def free(self, slot: int) -> None:
+        assert slot not in self._free, f"slot {slot} double-freed"
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+        self.cache_len[slot] = 0
+
+    def reset(self, slot: int) -> None:
+        """Restore one slot's cache rows to their init state (positions -1,
+        recurrent state zeroed) so a new occupant starts clean."""
+        self.cache_len[slot] = 0
+        if self.caches is not None:
+            self.caches = self._reset_jit(self.caches, self._template, slot)
+
+    def advance(self, slot: int, n: int) -> None:
+        """Record ``n`` tokens written into the slot this step."""
+        self.cache_len[slot] += n
+        assert self.max_len == 0 or self.cache_len[slot] <= self.max_len, (
+            f"slot {slot} overflowed max_len={self.max_len}")
+
+    # -- jitted slot reset -----------------------------------------------------
+
+    @staticmethod
+    def _reset_slot(caches, template, slot):
+        # Every cache leaf is stacked (count, B, ...); the single-slot
+        # template leaf is (count, 1, ...) — a dynamic batch-axis splice.
+        # ``slot`` stays a traced scalar so one compilation covers all slots.
+        return jax.tree.map(
+            lambda f, t: jax.lax.dynamic_update_slice_in_dim(
+                f, t.astype(f.dtype), slot, axis=1),
+            caches, template)

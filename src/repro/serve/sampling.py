@@ -32,8 +32,52 @@ def temperature_sample(logits: jnp.ndarray, rng: jax.Array,
 
 def cfg_logits(cond: jnp.ndarray, uncond: jnp.ndarray,
                scale: float = 5.0) -> jnp.ndarray:
-    """Classifier-free guidance combine [HS22], as used by LWM generation."""
+    """Classifier-free guidance combine [HS22], as used by LWM generation.
+
+    ``scale`` may be a scalar or a broadcastable per-row array (B, 1, 1) —
+    the continuous-batching engine passes one scale per slot.
+    """
     return uncond + scale * (cond - uncond)
+
+
+def greedy_batch(logits: jnp.ndarray, vision_lo: jnp.ndarray,
+                 vision_hi: jnp.ndarray) -> jnp.ndarray:
+    """All-greedy fast path of ``sample_batch``: per-row vision-range mask +
+    argmax, skipping the full-vocab sort and categorical draw entirely.
+    (B, 1, V) -> (B, 1) int32."""
+    v = logits.shape[-1]
+    ids = jnp.arange(v)
+    ok = (ids[None, :] >= vision_lo[:, None]) & (ids[None, :] < vision_hi[:, None])
+    logits = jnp.where(ok[:, None, :], logits.astype(jnp.float32), -1e30)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_batch(
+    logits: jnp.ndarray,        # (B, 1, V)
+    keys: jnp.ndarray,          # (B, 2) uint32 — one PRNG key per row
+    temperature: jnp.ndarray,   # (B,) f32; <= 0 selects greedy for that row
+    top_k: jnp.ndarray,         # (B,) int32; k >= V disables the filter
+    vision_lo: jnp.ndarray,     # (B,) int32; [lo, hi) constrains sampling,
+    vision_hi: jnp.ndarray,     # (B,)        lo=0 hi=V means unconstrained
+) -> jnp.ndarray:
+    """Vectorized per-slot sampling: every row applies its *own* request's
+    temperature / top-k / vision-range (continuous batching mixes requests
+    with different params in one batch; the old engine broadcast request 0's
+    params over everyone). Returns (B, 1) int32.
+    """
+    b, _, v = logits.shape
+    ids = jnp.arange(v)
+    ok = (ids[None, :] >= vision_lo[:, None]) & (ids[None, :] < vision_hi[:, None])
+    logits = jnp.where(ok[:, None, :], logits.astype(jnp.float32), -1e30)
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)          # (B,1)
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None, None]
+    k = jnp.clip(top_k, 1, v)
+    sort_desc = -jnp.sort(-scaled, axis=-1)
+    kth = jnp.take_along_axis(sort_desc, (k - 1)[:, None, None], axis=-1)
+    scaled = jnp.where(scaled < kth, -1e30, scaled)
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled[:, 0, :])
+    sampled = sampled.astype(jnp.int32)[:, None]                        # (B,1)
+    return jnp.where((temperature > 0)[:, None], sampled, greedy_tok)
 
 
 def mask_to_vision_range(logits: jnp.ndarray, vision_start: int,

@@ -1,0 +1,234 @@
+"""Continuous-batching scheduler: admit, plan, commit, retire.
+
+Pure host-side control plane (no jax): each engine iteration the scheduler
+
+  1. ``retire()``s finished slots (eos / per-request max_new / cache full)
+     back to the ``CachePool``,
+  2. ``admit()``s queued requests into freed slots (slot reset + per-slot
+     sampling params installed),
+  3. ``plan()``s one step: a (num_slots, C) token block where prefilling
+     slots carry up to ``prefill_chunk`` prompt tokens, decoding slots carry
+     their one sampled token in column 0, and idle slots carry length 0 —
+     the *chunked prefill interleaved with decode* layout consumed by
+     ``models.decoding.prefill_step``,
+  4. ``commit()``s the sampled tokens back into per-slot state.
+
+Because the scheduler never touches device arrays, the same class replays
+admission policy at 1M-token scale in the serve_batching benchmark's
+analytic mode (a bookkeeping-only ``CachePool``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import numpy as np
+
+from repro.serve.pool import CachePool
+
+PREFILL = "prefill"
+DECODE = "decode"
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Host-side state of one occupied slot."""
+    req: Any                   # serve.Request (duck-typed)
+    req_id: int                # caller's index for result ordering
+    slot: int
+    cursor: int = 0            # prompt tokens fed so far
+    tokens: list = dataclasses.field(default_factory=list)   # generated
+    next_token: int = -1       # decode input for the next step
+    uncond_len: int = 0        # CFG unconditional-branch cache fill
+    finish_reason: str | None = None   # "eos" | "length" | "cache_full"
+
+    @property
+    def phase(self) -> str:
+        return PREFILL if self.cursor < len(self.req.prompt) else DECODE
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """One step's (num_slots, C) layout for ``decoding.prefill_step``."""
+    tokens: np.ndarray         # (B, C) int32
+    offsets: np.ndarray        # (B,) int32 — absolute position of column 0
+    lengths: np.ndarray        # (B,) int32 — valid tokens (0 = idle slot)
+    is_prefill: np.ndarray     # (B,) bool — row consumes prompt tokens
+    sample_rows: np.ndarray    # (B,) bool — row's sampled token is kept
+    columns: int
+
+
+class Scheduler:
+    def __init__(self, pool: CachePool, *, prefill_chunk: int = 8,
+                 vocab_size: int, bos_id: int = 0):
+        assert prefill_chunk >= 1
+        self.pool = pool
+        self.prefill_chunk = prefill_chunk
+        self.vocab_size = vocab_size
+        self.bos_id = bos_id
+        self.queue: deque[tuple[Any, int]] = deque()
+        self.active: dict[int, SlotState] = {}
+        self.finished: list[SlotState] = []
+        b = pool.num_slots
+        # Per-slot sampling params (vectorized sampler inputs), installed at
+        # admission — every row applies its own request's knobs.
+        self.temperature = np.zeros(b, np.float32)
+        self.top_k = np.full(b, vocab_size, np.int32)
+        self.eos = np.full(b, -1, np.int32)
+        self.cfg_scale = np.zeros(b, np.float32)
+        self.has_cfg = np.zeros(b, bool)   # cfg_scale may legally be <= 0
+        self.vision_lo = np.zeros(b, np.int32)
+        self.vision_hi = np.full(b, vocab_size, np.int32)
+
+    # -- request lifecycle -----------------------------------------------------
+
+    def submit(self, req, req_id: int) -> None:
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req_id}: empty prompt (decode needs "
+                             "at least one prefilled token)")
+        if self.pool.max_len and len(req.prompt) >= self.pool.max_len:
+            raise ValueError(
+                f"request {req_id}: prompt of {len(req.prompt)} tokens cannot "
+                f"fit a max_len={self.pool.max_len} cache slot (need >= 1 "
+                "decode position)")
+        self.queue.append((req, req_id))
+
+    def retire(self) -> list[SlotState]:
+        done = [st for st in self.active.values() if st.finish_reason]
+        for st in done:
+            del self.active[st.slot]
+            self.pool.free(st.slot)
+            self.finished.append(st)
+        return done
+
+    def admit(self) -> list[SlotState]:
+        """Move queued requests into free slots (mid-flight admission)."""
+        newly = []
+        while self.queue:
+            slot = self.pool.alloc()
+            if slot is None:
+                break
+            req, req_id = self.queue.popleft()
+            self.pool.reset(slot)
+            st = SlotState(req=req, req_id=req_id, slot=slot)
+            self.active[slot] = st
+            self.temperature[slot] = req.temperature or 0.0
+            self.top_k[slot] = req.top_k if req.top_k else self.vocab_size
+            self.eos[slot] = req.eos_id if req.eos_id is not None else -1
+            self.cfg_scale[slot] = (req.cfg_scale
+                                    if req.cfg_scale is not None else 0.0)
+            self.has_cfg[slot] = req.cfg_scale is not None
+            lo, hi = req.vision_range or (0, self.vocab_size)
+            self.vision_lo[slot], self.vision_hi[slot] = lo, hi
+            if req.max_new_tokens < 1:
+                st.finish_reason = "length"   # nothing to generate; retire
+            newly.append(st)
+        return newly
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.active)
+
+    # -- step planning ---------------------------------------------------------
+
+    def plan(self) -> StepPlan | None:
+        if not any(st.finish_reason is None for st in self.active.values()):
+            return None             # nothing runnable; caller retires next
+        # Chunk width = the largest prefill take this step, rounded up to a
+        # power of two (capped by prefill_chunk): a short final chunk never
+        # drags every decoding slot through a full chunk of dead pad
+        # columns, while the jitted step compiles at most log2(chunk) + 1
+        # distinct widths; 1 when the batch is decode-only.
+        need = max((min(self.prefill_chunk, len(st.req.prompt) - st.cursor)
+                    for st in self.active.values()
+                    if st.phase == PREFILL and not st.finish_reason),
+                   default=1)
+        c = min(1 << (need - 1).bit_length() if need > 1 else 1,
+                self.prefill_chunk)
+        b = self.pool.num_slots
+        tokens = np.zeros((b, c), np.int32)
+        offsets = np.zeros(b, np.int32)
+        lengths = np.zeros(b, np.int32)
+        is_prefill = np.zeros(b, bool)
+        sample_rows = np.zeros(b, bool)
+        for slot, st in self.active.items():
+            if st.finish_reason:        # admitted pre-finished (max_new < 1)
+                continue
+            offsets[slot] = self.pool.cache_len[slot]
+            if st.phase == PREFILL:
+                take = min(c, len(st.req.prompt) - st.cursor)
+                tokens[slot, :take] = st.req.prompt[st.cursor:st.cursor + take]
+                lengths[slot] = take
+                is_prefill[slot] = True
+                # Completing the prompt this step => its last-column logits
+                # are the first next-token logits; sample immediately.
+                sample_rows[slot] = st.cursor + take == len(st.req.prompt)
+            else:
+                tokens[slot, 0] = st.next_token
+                lengths[slot] = 1
+                sample_rows[slot] = True
+        return StepPlan(tokens=tokens, offsets=offsets, lengths=lengths,
+                        is_prefill=is_prefill, sample_rows=sample_rows,
+                        columns=c)
+
+    def commit(self, plan: StepPlan, sampled: np.ndarray) -> None:
+        """Fold one executed step back into slot state. ``sampled`` is the
+        (num_slots,) vector from the vectorized sampler; only rows with
+        ``plan.sample_rows`` keep theirs."""
+        for slot, st in self.active.items():
+            n = int(plan.lengths[slot])
+            if n == 0:
+                continue
+            self.pool.advance(slot, n)
+            if plan.is_prefill[slot]:
+                st.cursor += n
+            if not plan.sample_rows[slot]:
+                continue
+            tok = int(sampled[slot])
+            st.tokens.append(tok)
+            st.next_token = tok
+            if self.eos[slot] >= 0 and tok == self.eos[slot]:
+                st.finish_reason = "eos"
+            elif len(st.tokens) >= st.req.max_new_tokens:
+                st.finish_reason = "length"
+            elif (self.pool.max_len
+                  and self.pool.cache_len[slot] + 1 > self.pool.max_len):
+                st.finish_reason = "cache_full"   # next decode write overflows
+
+    # -- classifier-free-guidance branch ---------------------------------------
+
+    def plan_uncond(self) -> StepPlan | None:
+        """Plan the CFG unconditional-branch step: decode-phase CFG slots
+        process the same input token against a <bos>-rooted cache. A slot's
+        first uncond step carries [bos, token] (length 2) to seed the cache;
+        afterwards one token per step — the chunked layout again."""
+        rows = [st for st in self.active.values()
+                if self.has_cfg[st.slot] and st.phase == DECODE
+                and st.next_token >= 0 and not st.finish_reason]
+        if not rows:
+            return None
+        c = 2 if any(st.uncond_len == 0 for st in rows) else 1
+        b = self.pool.num_slots
+        tokens = np.zeros((b, c), np.int32)
+        offsets = np.zeros(b, np.int32)
+        lengths = np.zeros(b, np.int32)
+        for st in rows:
+            if st.uncond_len == 0:
+                tokens[st.slot, 0] = self.bos_id
+                tokens[st.slot, 1] = st.next_token
+                lengths[st.slot] = 2
+            else:
+                tokens[st.slot, 0] = st.next_token
+                offsets[st.slot] = st.uncond_len
+                lengths[st.slot] = 1
+        return StepPlan(tokens=tokens, offsets=offsets, lengths=lengths,
+                        is_prefill=np.zeros(b, bool),
+                        sample_rows=lengths > 0, columns=c)
+
+    def commit_uncond(self, plan: StepPlan, uncond_pool: CachePool) -> None:
+        for slot, st in self.active.items():
+            n = int(plan.lengths[slot])
+            if n:
+                uncond_pool.advance(slot, n)
+                st.uncond_len += n

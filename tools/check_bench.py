@@ -13,6 +13,11 @@ claims rest on:
     XLA path materializes >= 1 (per layer), and the analytic fused bytes
     must undercut the analytic XLA bytes at every length (including the
     analytic-only 1M row).
+  * BENCH_serve_batching.json — the continuous-batching engine must show
+    strictly fewer wasted pad-token steps (and higher tokens/step) than
+    the static lockstep engine on the measured mixed workload with greedy
+    token-level parity between the two, and the analytic 1M-context row
+    must show the same strict ordering.
 
 Run locally:  python tools/check_bench.py  (from the repo root)
 """
@@ -96,15 +101,57 @@ def check_decode_fused() -> None:
            "decode_fused: the whole-model analytic_paper_stage row is gone")
 
 
+def _check_waste_ordering(tag: str, static: dict, continuous: dict,
+                          delta: dict) -> None:
+    # Fail-closed defaults: a missing/renamed key must FAIL the gate.
+    _check(continuous.get("wasted_token_steps", 10 ** 12)
+           < static.get("wasted_token_steps", -1),
+           f"serve_batching[{tag}]: continuous no longer strictly undercuts "
+           "static wasted token steps (or the accounting keys went missing)")
+    _check(continuous.get("utilization", 0.0)
+           > static.get("utilization", 10.0 ** 9),
+           f"serve_batching[{tag}]: continuous utilization (useful/token "
+           "slots) no longer beats static")
+    _check(delta.get("continuous_strictly_fewer_wasted") is True,
+           f"serve_batching[{tag}]: delta flag lost the strict ordering")
+
+
+def check_serve_batching() -> None:
+    rows = _load("BENCH_serve_batching.json")
+    if rows is None:
+        return
+    measured = 0
+    stage_rows = 0
+    for row in rows or []:
+        if "analytic_paper_stage" in row:
+            stage = row["analytic_paper_stage"]
+            stage_rows += 1
+            _check_waste_ordering("1M-analytic", stage.get("static", {}),
+                                  stage.get("continuous", {}),
+                                  stage.get("delta", {}))
+            continue
+        measured += 1
+        _check_waste_ordering("measured", row.get("static", {}),
+                              row.get("continuous", {}), row.get("delta", {}))
+        _check(row.get("delta", {}).get("tokens_match") is True,
+               "serve_batching[measured]: static and continuous engines no "
+               "longer produce identical greedy tokens")
+    _check(measured >= 1, "serve_batching: no measured row at all")
+    _check(stage_rows >= 1,
+           "serve_batching: the 1M-context analytic_paper_stage row is gone")
+
+
 def main() -> int:
     check_ring_fused()
     check_decode_fused()
+    check_serve_batching()
     if _errors:
         for e in _errors:
             print(f"FAIL: {e}")
         return 1
-    print("ok: committed BENCH_*.json byte accounting holds "
-          "(fused beats xla; no materialized logits buffers)")
+    print("ok: committed BENCH_*.json accounting holds (fused beats xla; no "
+          "materialized logits buffers; continuous batching wastes fewer "
+          "pad-token steps than static)")
     return 0
 
 
