@@ -36,7 +36,9 @@ from benchmarks import (chat_mix, context_stages, decode_fused, mfu_roofline,
 # runner validate their setup (shape-level traces + analytic models) in
 # seconds without compiling or executing — the CI smoke job.
 BENCHES = {
-    "context_stages": (lambda q: context_stages.run(quick=q), None),
+    # stage-ladder runtime accounting -> BENCH_context_stages.json
+    "context_stages": (lambda q: context_stages.run(quick=q),
+                       lambda q: context_stages.run(quick=q, dry_run=True)),
     "context_stages_vision": (lambda q: context_stages.run(vision=True,
                                                            quick=q), None),
     "needle": (lambda q: needle.run(quick=q), None),

@@ -182,22 +182,23 @@ def blockwise_attention(
 
     ``impl`` in ("pallas", "interpret") routes to the Pallas flash kernel
     (kernels/ops.py) — same online-softmax math with tiles resident in
-    VMEM; "auto" takes the kernel only on TPU (off-TPU it would degrade to
-    the O(S^2) reference, defeating this function's memory contract);
-    None/"xla"/"ref" keeps this einsum loop (the only path with
-    ``logits_soft_cap`` support).
+    VMEM, including the in-kernel tanh ``logits_soft_cap``; "auto" takes
+    the kernel only on TPU (off-TPU it would degrade to the O(S^2)
+    reference, defeating this function's memory contract); None/"xla"/"ref"
+    keeps this einsum loop.
     """
     b, sq, h, d = q.shape
     skv = k.shape[1]
     if impl == "auto" and jax.default_backend() == "tpu":
         impl = "pallas"
-    if impl in ("pallas", "interpret") and logits_soft_cap is None:
+    if impl in ("pallas", "interpret"):
         from repro.kernels import ops as kops  # lazy: avoids import cycle
         return kops.flash_attention(
             q, k, v, causal=causal,
             q_positions=q_positions, kv_positions=kv_positions,
             q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
-            q_block=q_block_size, kv_block=kv_block_size, impl=impl)
+            q_block=q_block_size, kv_block=kv_block_size, impl=impl,
+            logits_soft_cap=logits_soft_cap)
     if q_positions is None:
         q_positions = jnp.broadcast_to(jnp.arange(sq, dtype=jnp.int32), (b, sq)) + (skv - sq)
     if kv_positions is None:

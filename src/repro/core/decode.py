@@ -9,7 +9,8 @@ Two per-shard engines, selected by ``impl`` (``resolve_decode_impl``): the
 split-K Pallas flash-decode kernel (``kernels.flash_decode``) streams the
 cache through VMEM blocks without materializing the (B, 1, H, L) logits;
 the "xla" einsum path below is the baseline/oracle and the only engine
-supporting ``logits_soft_cap`` (and MLA's asymmetric head dims).
+supporting MLA's asymmetric head dims (``logits_soft_cap`` is applied
+in-kernel by both engines).
 """
 from __future__ import annotations
 
@@ -67,17 +68,20 @@ def resolve_decode_impl(impl: str | None, *, logits_soft_cap=None,
       "interpret"  same kernel body via the Pallas interpreter — any backend
                    (CPU parity tests)
       "xla"/"ref"  ``decode_attend_local`` einsum + LSE combine — the XLA
-                   baseline, and the only path supporting ``logits_soft_cap``
+                   baseline
       "auto"/None  pallas on TPU, xla elsewhere
 
     ``asymmetric`` routes MLA-style caches (value head dim != key head dim)
     to xla: the split-K kernel tiles assume one head_dim.
+    ``logits_soft_cap`` no longer forces xla — the decode kernel applies the
+    tanh cap in-kernel; the kwarg is kept for caller compatibility.
     """
     if impl not in (None, "auto", "ref", "xla", "pallas", "interpret"):
         raise ValueError(f"unknown decode impl {impl!r}; expected one of "
                          "auto|pallas|interpret|xla|ref")
-    if logits_soft_cap is not None or asymmetric:
-        return "xla"              # soft cap / MLA dims not in the kernel
+    del logits_soft_cap           # supported by every engine since PR 4
+    if asymmetric:
+        return "xla"              # MLA dims not in the kernel
     if impl in (None, "auto"):
         return "pallas" if jax.default_backend() == "tpu" else "xla"
     if impl == "ref":
@@ -120,7 +124,7 @@ def decode_attention_unsharded(
         return fdk.flash_decode(
             q, k_cache, v_cache, kv_positions, q_position,
             interpret=impl == "interpret", out_dtype=out_dtype,
-            cache_len=cache_len)
+            cache_len=cache_len, logits_soft_cap=logits_soft_cap)
     acc, m, l = decode_attend_local(
         q, k_cache, v_cache, kv_positions=kv_positions, q_position=q_position,
         logits_soft_cap=logits_soft_cap, cache_len=cache_len)

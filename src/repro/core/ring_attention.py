@@ -111,15 +111,17 @@ def resolve_ring_impl(impl: str | None, *, logits_soft_cap=None) -> str:
       "interpret"  same fused kernel body via the Pallas interpreter — any
                    backend (CPU parity tests)
       "xla"/"ref"  blockwise einsum loop (materialized logits tiles) — the
-                   paper's XLA-compiler baseline, and the only path that
-                   supports ``logits_soft_cap``
+                   paper's XLA-compiler baseline
       "auto"/None  pallas on TPU, xla elsewhere
+
+    ``logits_soft_cap`` no longer forces the xla path: the kernels apply the
+    tanh cap in-kernel (fwd + bwd). The kwarg is kept so callers can keep
+    passing it; it is accepted for every impl.
     """
     if impl not in (None, "auto", "ref", "xla", "pallas", "interpret"):
         raise ValueError(f"unknown ring impl {impl!r}; expected one of "
                          "auto|pallas|interpret|xla|ref")
-    if logits_soft_cap is not None:
-        return "xla"              # soft cap not implemented in the kernel
+    del logits_soft_cap           # supported by every engine since PR 4
     if impl in (None, "auto"):
         return "pallas" if jax.default_backend() == "tpu" else "xla"
     if impl == "ref":
@@ -163,7 +165,8 @@ def ring_attention(
             q_positions=q_positions, kv_positions=kv_positions,
             q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
             causal=causal, q_block=q_block_size, kv_block=kv_block_size,
-            impl=impl, block_skip=skip_masked_blocks)
+            impl=impl, block_skip=skip_masked_blocks,
+            logits_soft_cap=logits_soft_cap)
     n = ring_size(axis_name)
     axes = _axis_tuple(axis_name)
 
@@ -231,7 +234,8 @@ def ring_decode_attention(
         return kops.ring_flash_decode(
             q, k_cache, v_cache, axis_name=axis_name,
             kv_positions=kv_positions, q_position=q_position,
-            interpret=impl == "interpret", cache_len=cache_len)
+            interpret=impl == "interpret", cache_len=cache_len,
+            logits_soft_cap=logits_soft_cap)
 
     acc, m, l = decode_mod.decode_attend_local(
         q, k_cache, v_cache, kv_positions=kv_positions, q_position=q_position,

@@ -43,6 +43,11 @@ Impl dispatch matrix (see also kernels/ops.py and core/ring_attention.py):
   "interpret"  same kernel body, Pallas interpreter — any backend (CPU tests)
   "ref"        pure-jnp oracle / XLA blockwise path
   "auto"       pallas on TPU, ref elsewhere
+
+``logits_soft_cap`` (Gemma-style tanh cap) is applied in-kernel on the
+logits tile: forward caps ``s <- cap * tanh(s / cap)`` before masking; the
+backward kernels recompute the tanh and scale ``ds`` by the cap derivative
+``1 - tanh^2`` — so capped models no longer fall back to the XLA path.
 """
 from __future__ import annotations
 
@@ -75,6 +80,7 @@ def _fwd_kernel(
     num_kv_blocks: int,
     has_carry: bool,
     block_skip: bool,
+    logits_soft_cap: float | None,
 ):
     """Online-softmax flash forward over one (q block, kv block) tile.
 
@@ -115,6 +121,8 @@ def _fwd_kernel(
 
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * sm_scale  # (Bq,Bk)
+        if logits_soft_cap is not None:
+            s = logits_soft_cap * jnp.tanh(s / logits_soft_cap)
         mask = qseg[:, None] == kseg[None, :]
         if causal:
             mask &= qpos[:, None] >= kpos[None, :]
@@ -171,6 +179,7 @@ def flash_attention_fwd(
     kv_block: int = DEFAULT_KV_BLOCK,
     interpret: bool = False,
     block_skip: bool = True,
+    logits_soft_cap: float | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (out (B,H,Sq,D), lse (B,H,Sq))."""
     b, h, sq, d = q.shape
@@ -186,7 +195,8 @@ def flash_attention_fwd(
 
     kernel = functools.partial(
         _fwd_kernel, causal=causal, sm_scale=sm_scale, num_kv_blocks=nkv,
-        has_carry=False, block_skip=block_skip)
+        has_carry=False, block_skip=block_skip,
+        logits_soft_cap=logits_soft_cap)
 
     out, lse = pl.pallas_call(
         kernel,
@@ -237,6 +247,7 @@ def flash_attention_fwd_carry(
     kv_block: int = DEFAULT_KV_BLOCK,
     interpret: bool = False,
     block_skip: bool = True,
+    logits_soft_cap: float | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Fold one K/V shard into running flash statistics, in VMEM.
 
@@ -260,7 +271,8 @@ def flash_attention_fwd_carry(
 
     kernel = functools.partial(
         _fwd_kernel, causal=causal, sm_scale=sm_scale, num_kv_blocks=nkv,
-        has_carry=True, block_skip=block_skip)
+        has_carry=True, block_skip=block_skip,
+        logits_soft_cap=logits_soft_cap)
 
     acc_out, m_out, l_out = pl.pallas_call(
         kernel,
@@ -315,6 +327,7 @@ def _bwd_dq_kernel(
     causal: bool,
     sm_scale: float,
     num_kv_blocks: int,
+    logits_soft_cap: float | None,
 ):
     ik = pl.program_id(3)
 
@@ -331,13 +344,18 @@ def _bwd_dq_kernel(
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * sm_scale
+    cap_grad = 1.0
+    if logits_soft_cap is not None:
+        t = jnp.tanh(s / logits_soft_cap)
+        s = logits_soft_cap * t
+        cap_grad = 1.0 - t * t          # d(cap*tanh(s/cap))/ds
     mask = qseg_ref[0][:, None] == kseg_ref[0][None, :]
     if causal:
         mask &= qpos_ref[0][:, None] >= kpos_ref[0][None, :]
     p = jnp.where(mask, jnp.exp(s - lse), 0.0)
     dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)
-    ds = p * (dp - delta) * sm_scale
+    ds = p * (dp - delta) * cap_grad * sm_scale
     dq_acc_ref[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
                                            preferred_element_type=jnp.float32)
 
@@ -355,6 +373,7 @@ def _bwd_dkv_kernel(
     causal: bool,
     sm_scale: float,
     num_q_blocks: int,
+    logits_soft_cap: float | None,
 ):
     iq = pl.program_id(3)
 
@@ -372,6 +391,11 @@ def _bwd_dkv_kernel(
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * sm_scale
+    cap_grad = 1.0
+    if logits_soft_cap is not None:
+        t = jnp.tanh(s / logits_soft_cap)
+        s = logits_soft_cap * t
+        cap_grad = 1.0 - t * t          # d(cap*tanh(s/cap))/ds
     mask = qseg_ref[0][:, None] == kseg_ref[0][None, :]
     if causal:
         mask &= qpos_ref[0][:, None] >= kpos_ref[0][None, :]
@@ -380,7 +404,7 @@ def _bwd_dkv_kernel(
                                            preferred_element_type=jnp.float32)
     dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)
-    ds = p * (dp - delta) * sm_scale
+    ds = p * (dp - delta) * cap_grad * sm_scale
     dk_acc_ref[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
                                            preferred_element_type=jnp.float32)
 
@@ -398,6 +422,7 @@ def flash_attention_bwd(
     q_block: int = DEFAULT_Q_BLOCK,
     kv_block: int = DEFAULT_KV_BLOCK,
     interpret: bool = False,
+    logits_soft_cap: float | None = None,
 ):
     """Returns (dq (B,H,Sq,D), dk (B,H,Skv,D), dv (B,H,Skv,D)).
 
@@ -416,7 +441,7 @@ def flash_attention_bwd(
 
     dq = pl.pallas_call(
         functools.partial(_bwd_dq_kernel, causal=causal, sm_scale=sm_scale,
-                          num_kv_blocks=nkv),
+                          num_kv_blocks=nkv, logits_soft_cap=logits_soft_cap),
         grid=(b, h, nq, nkv),
         in_specs=[
             pl.BlockSpec((1, q_block), lambda ib, ih, iq, ik: (ib, iq)),
@@ -443,7 +468,7 @@ def flash_attention_bwd(
 
     dk, dv = pl.pallas_call(
         functools.partial(_bwd_dkv_kernel, causal=causal, sm_scale=sm_scale,
-                          num_q_blocks=nq),
+                          num_q_blocks=nq, logits_soft_cap=logits_soft_cap),
         grid=(b, h, nkv, nq),
         in_specs=[
             pl.BlockSpec((1, q_block), lambda ib, ih, ik, iq: (ib, iq)),

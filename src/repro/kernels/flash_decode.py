@@ -75,6 +75,7 @@ def _decode_kernel(
     blocks_per_split: int,
     num_kv_blocks: int,
     block_skip: bool,
+    logits_soft_cap: float | None,
 ):
     """Online-softmax reduction of one KV block into the split's running
     (acc, m, l). Same update as ``flash_attention._fwd_kernel`` with the
@@ -102,6 +103,8 @@ def _decode_kernel(
         v = v_ref[0, :, 0, :].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * sm_scale
+        if logits_soft_cap is not None:
+            s = logits_soft_cap * jnp.tanh(s / logits_soft_cap)
         s = jnp.where(valid[None, :], s, NEG_INF)            # (G, Bk)
         m_prev = m_s[...]                        # (G, 1)
         m_cur = jnp.max(s, axis=-1, keepdims=True)
@@ -158,6 +161,7 @@ def flash_decode_partial(
     interpret: bool = False,
     block_skip: bool = True,
     cache_len: jnp.ndarray | None = None,   # (B,) ragged fill; None = no cap
+    logits_soft_cap: float | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Partial decode attention over one cache shard via the split-K kernel.
 
@@ -212,7 +216,8 @@ def flash_decode_partial(
 
     kernel = functools.partial(
         _decode_kernel, sm_scale=sm_scale, blocks_per_split=bps,
-        num_kv_blocks=nkv, block_skip=block_skip)
+        num_kv_blocks=nkv, block_skip=block_skip,
+        logits_soft_cap=logits_soft_cap)
 
     acc, m, l = pl.pallas_call(
         kernel,
@@ -273,6 +278,7 @@ def flash_decode(
     carry: tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray] | None = None,
     out_dtype=None,
     cache_len=None,
+    logits_soft_cap: float | None = None,
 ):
     """Normalized single-shard decode attention (B,1,H,D) -> (B,1,H,D).
 
@@ -282,7 +288,8 @@ def flash_decode(
     partial = flash_decode_partial(
         q, k_cache, v_cache, kv_positions, q_position,
         kv_block=kv_block, num_splits=num_splits, interpret=interpret,
-        block_skip=block_skip, cache_len=cache_len)
+        block_skip=block_skip, cache_len=cache_len,
+        logits_soft_cap=logits_soft_cap)
     if carry is not None:
         partial = merge_partials(carry, partial)
     acc, _, l = partial

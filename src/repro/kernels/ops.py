@@ -65,28 +65,31 @@ def _bhsd_to_bshd(x):
 # Flash attention
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11))
 def _flash_core(q, k, v, qpos, kpos, qseg, kseg,
-                causal, q_block, kv_block, interpret):
+                causal, q_block, kv_block, interpret, soft_cap):
     out, _ = fa.flash_attention_fwd(
         q, k, v, qpos, kpos, qseg, kseg,
-        causal=causal, q_block=q_block, kv_block=kv_block, interpret=interpret)
+        causal=causal, q_block=q_block, kv_block=kv_block, interpret=interpret,
+        logits_soft_cap=soft_cap)
     return out
 
 
 def _flash_core_fwd(q, k, v, qpos, kpos, qseg, kseg,
-                    causal, q_block, kv_block, interpret):
+                    causal, q_block, kv_block, interpret, soft_cap):
     out, lse = fa.flash_attention_fwd(
         q, k, v, qpos, kpos, qseg, kseg,
-        causal=causal, q_block=q_block, kv_block=kv_block, interpret=interpret)
+        causal=causal, q_block=q_block, kv_block=kv_block, interpret=interpret,
+        logits_soft_cap=soft_cap)
     return out, (q, k, v, out, lse, qpos, kpos, qseg, kseg)
 
 
-def _flash_core_bwd(causal, q_block, kv_block, interpret, res, do):
+def _flash_core_bwd(causal, q_block, kv_block, interpret, soft_cap, res, do):
     q, k, v, out, lse, qpos, kpos, qseg, kseg = res
     dq, dk, dv = fa.flash_attention_bwd(
         q, k, v, out, lse, do, qpos, kpos, qseg, kseg,
-        causal=causal, q_block=q_block, kv_block=kv_block, interpret=interpret)
+        causal=causal, q_block=q_block, kv_block=kv_block, interpret=interpret,
+        logits_soft_cap=soft_cap)
     # dk/dv come back per query head; reduce over the GQA group.
     hkv = k.shape[1]
     dk = _gqa_reduce(dk, hkv).astype(k.dtype)
@@ -110,6 +113,7 @@ def flash_attention(
     q_block: int = fa.DEFAULT_Q_BLOCK,
     kv_block: int = fa.DEFAULT_KV_BLOCK,
     impl: str = "auto",
+    logits_soft_cap: float | None = None,
 ) -> jnp.ndarray:
     """Differentiable flash attention; (B,S,H,D) in/out."""
     b, sq, h, d = q.shape
@@ -134,13 +138,14 @@ def flash_attention(
         return full_attention(
             q, k, v, causal=causal,
             q_positions=q_positions, kv_positions=kv_positions,
-            q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids)
+            q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
+            logits_soft_cap=logits_soft_cap)
 
     interpret = impl == "interpret"
     qt, kt, vt = _bshd_to_bhsd(q), _bshd_to_bhsd(k), _bshd_to_bhsd(v)
     out = _flash_core(qt, kt, vt, q_positions, kv_positions,
                       q_segment_ids, kv_segment_ids,
-                      causal, q_block, kv_block, interpret)
+                      causal, q_block, kv_block, interpret, logits_soft_cap)
     return _bhsd_to_bshd(out)
 
 
@@ -158,7 +163,7 @@ def _gqa_reduce(dkv: jnp.ndarray, hkv: int) -> jnp.ndarray:
 
 def _ring_fwd_loop(q, k, v, qpos, kpos, qseg, kseg, *,
                    axis_name, causal, q_block, kv_block, interpret,
-                   block_skip):
+                   block_skip, soft_cap=None):
     """Forward ring: returns (out (B,H,S,D), lse (B,H,S)). BHSD layout."""
     from repro.core import ring_attention as ring_mod
 
@@ -177,7 +182,8 @@ def _ring_fwd_loop(q, k, v, qpos, kpos, qseg, kseg, *,
         acc, m, l = fa.flash_attention_fwd_carry(
             q, k_cur, v_cur, qpos, kp_cur, qseg, ks_cur, (acc, m, l),
             causal=causal, q_block=q_block, kv_block=kv_block,
-            interpret=interpret, block_skip=block_skip)
+            interpret=interpret, block_skip=block_skip,
+            logits_soft_cap=soft_cap)
         return acc, m, l, k_nxt, v_nxt, kp_nxt, ks_nxt
 
     state = (acc, m, l, k, v, kpos, kseg)
@@ -192,29 +198,29 @@ def _ring_fwd_loop(q, k, v, qpos, kpos, qseg, kseg, *,
     return out, lse
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11, 12))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11, 12, 13))
 def _ring_flash_core(q, k, v, qpos, kpos, qseg, kseg,
                      axis_name, causal, q_block, kv_block, interpret,
-                     block_skip):
+                     block_skip, soft_cap):
     out, _ = _ring_fwd_loop(
         q, k, v, qpos, kpos, qseg, kseg, axis_name=axis_name, causal=causal,
         q_block=q_block, kv_block=kv_block, interpret=interpret,
-        block_skip=block_skip)
+        block_skip=block_skip, soft_cap=soft_cap)
     return out
 
 
 def _ring_flash_core_fwd(q, k, v, qpos, kpos, qseg, kseg,
                          axis_name, causal, q_block, kv_block, interpret,
-                         block_skip):
+                         block_skip, soft_cap):
     out, lse = _ring_fwd_loop(
         q, k, v, qpos, kpos, qseg, kseg, axis_name=axis_name, causal=causal,
         q_block=q_block, kv_block=kv_block, interpret=interpret,
-        block_skip=block_skip)
+        block_skip=block_skip, soft_cap=soft_cap)
     return out, (q, k, v, out, lse, qpos, kpos, qseg, kseg)
 
 
 def _ring_flash_core_bwd(axis_name, causal, q_block, kv_block, interpret,
-                         block_skip, res, do):
+                         block_skip, soft_cap, res, do):
     """Ring backward: K/V shards re-rotate; dk/dv travel with their shard.
 
     Each step runs the two Pallas backward kernels against the currently
@@ -239,7 +245,7 @@ def _ring_flash_core_bwd(axis_name, causal, q_block, kv_block, interpret,
         dq_p, dk_p, dv_p = fa.flash_attention_bwd(
             q, k_cur, v_cur, out, lse, do, qpos, kp_cur, qseg, ks_cur,
             causal=causal, q_block=q_block, kv_block=kv_block,
-            interpret=interpret)
+            interpret=interpret, logits_soft_cap=soft_cap)
         dq = dq + dq_p.astype(jnp.float32)
         dk = dk + _gqa_reduce(dk_p, hkv).astype(jnp.float32)
         dv = dv + _gqa_reduce(dv_p, hkv).astype(jnp.float32)
@@ -276,6 +282,7 @@ def ring_flash_attention(
     kv_block: int = fa.DEFAULT_KV_BLOCK,
     impl: str = "auto",
     block_skip: bool = True,
+    logits_soft_cap: float | None = None,
 ) -> jnp.ndarray:
     """Differentiable fused RingAttention over the local query shard.
 
@@ -302,12 +309,13 @@ def ring_flash_attention(
             q_positions=q_positions, kv_positions=kv_positions,
             q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
             causal=causal, kv_block_size=kv_block, impl="xla",
-            skip_masked_blocks=block_skip)
+            skip_masked_blocks=block_skip, logits_soft_cap=logits_soft_cap)
 
     qt, kt, vt = _bshd_to_bhsd(q), _bshd_to_bhsd(k), _bshd_to_bhsd(v)
     out = _ring_flash_core(
         qt, kt, vt, q_positions, kv_positions, q_segment_ids, kv_segment_ids,
-        axis_name, causal, q_block, kv_block, impl == "interpret", block_skip)
+        axis_name, causal, q_block, kv_block, impl == "interpret", block_skip,
+        logits_soft_cap)
     return _bhsd_to_bshd(out)
 
 
@@ -328,6 +336,7 @@ def flash_decode(
     block_skip: bool = True,
     out_dtype=None,
     cache_len: jnp.ndarray | None = None,   # (B,) ragged per-row fill length
+    logits_soft_cap: float | None = None,
 ) -> jnp.ndarray:
     """Single-device decode attention with impl dispatch.
 
@@ -344,7 +353,8 @@ def flash_decode(
     if impl == "xla":
         acc, _, l = dec_mod.decode_attend_local(
             q, k_cache, v_cache, kv_positions=kv_positions,
-            q_position=q_position, cache_len=cache_len)
+            q_position=q_position, cache_len=cache_len,
+            logits_soft_cap=logits_soft_cap)
         out = acc / jnp.maximum(l, 1e-30)[..., None]
         return out.astype(out_dtype or q.dtype)
     return fdk.flash_decode(
@@ -352,7 +362,8 @@ def flash_decode(
         kv_block=kv_block or fdk.DEFAULT_KV_BLOCK,
         num_splits=num_splits or fdk.DEFAULT_NUM_SPLITS,
         interpret=impl == "interpret", block_skip=block_skip,
-        out_dtype=out_dtype, cache_len=cache_len)
+        out_dtype=out_dtype, cache_len=cache_len,
+        logits_soft_cap=logits_soft_cap)
 
 
 def ring_flash_decode(
@@ -368,6 +379,7 @@ def ring_flash_decode(
     interpret: bool = False,
     block_skip: bool = True,
     cache_len: jnp.ndarray | None = None,   # (B,) ragged fill, absolute
+    logits_soft_cap: float | None = None,
 ) -> jnp.ndarray:
     """Fused ring decode over a sequence-sharded KV cache (inside shard_map).
 
@@ -394,7 +406,8 @@ def ring_flash_decode(
         q, k_cache, v_cache, kv_positions, q_position,
         kv_block=kv_block or fdk.DEFAULT_KV_BLOCK,
         num_splits=num_splits or fdk.DEFAULT_NUM_SPLITS,
-        interpret=interpret, block_skip=block_skip, cache_len=cache_len)
+        interpret=interpret, block_skip=block_skip, cache_len=cache_len,
+        logits_soft_cap=logits_soft_cap)
 
     def step(_, state):
         carry, moving = state

@@ -39,7 +39,7 @@ from repro.models import decoding, layers as L, transformer
 from repro.models.config import ModelConfig
 from repro.models.registry import build_model
 from repro.optim.adamw import AdamWState
-from repro.train.sharding import ShardingPolicy, make_policy
+from repro.train.sharding import ShardingPolicy, make_policy, state_shardings
 from repro.train.train_step import TrainState, make_train_step
 
 
@@ -56,11 +56,6 @@ def _state_structs(model):
     p = _param_structs(model)
     f32 = lambda t: jax.tree.map(lambda s: _struct(s.shape, jnp.float32), t)
     return TrainState(p, AdamWState(_struct((), jnp.int32), f32(p), f32(p)))
-
-
-def _state_shardings(model, policy: ShardingPolicy):
-    p = policy.param_sharding(model.param_specs())
-    return TrainState(p, AdamWState(policy.replicated(), p, p))
 
 
 def _tree_replicated(tree, policy):
@@ -116,7 +111,7 @@ def build_step(cfg: ModelConfig, shape: InputShape, policy: ShardingPolicy,
     if shape.kind == "train":
         step = make_train_step(cfg, ctx=ctx, learning_rate=4e-5)
         state_structs = _state_structs(model)
-        state_sh = _state_shardings(model, policy)
+        state_sh = state_shardings(model, policy)
         batch_structs = {k: v for k, v in specs.items()}
         batch_sh = policy.batch_sharding(batch_structs,
                                          seq_sharded=policy.ring_axis is not None)

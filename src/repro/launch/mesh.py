@@ -28,3 +28,19 @@ def make_host_mesh(shape: tuple[int, ...] = (), axes: tuple[str, ...] = ()):
         n = len(jax.devices())
         shape, axes = (n,), ("data",)
     return jc.make_mesh(shape, axes)
+
+
+def parse_mesh(spec: str):
+    """"DxM" (or "D") -> a ("data", "model") host mesh, e.g. "4x2", "8".
+
+    The model axis defaults to 1 so sharding policies (which address both
+    axes) always resolve. Device count must equal D*M — under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on CPU, or the
+    real accelerator count otherwise.
+    """
+    parts = [int(p) for p in spec.lower().split("x")]
+    if len(parts) == 1:
+        parts.append(1)
+    if len(parts) != 2 or any(p < 1 for p in parts):
+        raise ValueError(f"mesh spec {spec!r}; expected 'D' or 'DxM'")
+    return make_host_mesh(tuple(parts), ("data", "model"))

@@ -5,10 +5,23 @@ optionally reduced scale. On real TPU hardware this is the entry point a
 cluster job would invoke (one process per host; jax.distributed handles the
 rest); on this CPU container it runs the reduced configs end-to-end.
 
+Distributed/resumable knobs (PR 4):
+  --mesh DxM            compile every stage under the host mesh's stage
+                        policy (FSDP short-context stages, ring long-context
+                        ones) instead of the single-device path; on CPU set
+                        XLA_FLAGS=--xla_force_host_platform_device_count=D*M
+  --accum N             N microbatches per optimizer update (lax.scan grad
+                        accumulation; the 4M-token-batch recipe)
+  --checkpoint-every N  write the full TrainState + cursor every N steps
+  --resume DIR|FILE     continue a preempted run mid-stage, bit-for-bit on
+                        the loss curve (DIR uses its LATEST pointer)
+
 Examples:
     python -m repro.launch.train --arch lwm-7b --reduced \
         --stages 256:10,512:10 --rows 2
-    python -m repro.launch.train --arch rwkv6-3b --reduced --vision
+    python -m repro.launch.train --arch lwm-7b --reduced --accum 4 \
+        --checkpoint-dir ckpt --checkpoint-every 5
+    python -m repro.launch.train --arch lwm-7b --reduced --resume ckpt
 """
 from __future__ import annotations
 
@@ -16,11 +29,13 @@ import argparse
 
 from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.data.pipeline import LWM_1K, TEXT_STAGE
+from repro.launch.mesh import parse_mesh
 from repro.models.registry import build_model
 from repro.train import StageSpec, Trainer
 
 
-def parse_stages(spec: str, rows: int, vision: bool) -> list[StageSpec]:
+def parse_stages(spec: str, rows: int, vision: bool,
+                 accum: int = 1) -> list[StageSpec]:
     """"256:10,512:10" -> two stages (seq_len:steps), theta ladder applied."""
     thetas = [1e6, 1e7, 1e7, 2.5e7, 5e7]
     out = []
@@ -30,7 +45,7 @@ def parse_stages(spec: str, rows: int, vision: bool) -> list[StageSpec]:
             name=f"s{seq}", seq_len=int(seq),
             rope_theta=thetas[min(i, len(thetas) - 1)], steps=int(steps),
             batch_rows=rows, mixture=LWM_1K if vision else TEXT_STAGE,
-            lr=3e-4, warmup=max(int(steps) // 10, 1)))
+            lr=3e-4, warmup=max(int(steps) // 10, 1), accum_steps=accum))
     return out
 
 
@@ -41,10 +56,21 @@ def main(argv=None) -> int:
                     help="use the smoke-scale config (CPU-runnable)")
     ap.add_argument("--stages", default="256:10,512:10",
                     help="comma list of seq_len:steps")
-    ap.add_argument("--rows", type=int, default=2)
+    ap.add_argument("--rows", type=int, default=2,
+                    help="batch rows per microbatch")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="microbatches accumulated per optimizer update")
     ap.add_argument("--vision", action="store_true",
                     help="train on the text-image mixture (paper stage II)")
+    ap.add_argument("--mesh", default=None,
+                    help="host mesh 'DxM': compile stages under real "
+                         "sharding policies (FSDP/ring per stage)")
     ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="full-state checkpoint cadence in steps (0 = only "
+                         "at stage boundaries)")
+    ap.add_argument("--resume", default=None,
+                    help="checkpoint dir (LATEST) or file to resume from")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -57,15 +83,21 @@ def main(argv=None) -> int:
         print("WARNING: full-scale config on CPU — expect this to be "
               "unrunnably slow; use --reduced locally, full scale on TPU.")
 
-    stages = parse_stages(args.stages, args.rows, args.vision)
-    tr = Trainer(cfg, stages, seed=args.seed,
-                 checkpoint_dir=args.checkpoint_dir)
-    history = tr.run()
+    mesh = parse_mesh(args.mesh) if args.mesh else None
+    if mesh is not None:
+        print(f"mesh={dict(mesh.shape)} (per-stage policy selection on)")
+
+    stages = parse_stages(args.stages, args.rows, args.vision, args.accum)
+    tr = Trainer(cfg, stages, seed=args.seed, mesh=mesh,
+                 checkpoint_dir=args.checkpoint_dir,
+                 checkpoint_every=args.checkpoint_every)
+    history = tr.run(resume_from=args.resume)
     print("\nstage results:")
     for h in history:
         print(f"  {h['stage']}: loss {h['first_loss']:.3f} -> "
               f"{h['final_loss']:.3f} ({h['tokens']:,} tokens, "
-              f"{h['tokens']/h['wall_s']:,.0f} tok/s)")
+              f"{h['tokens']/h['wall_s']:,.0f} tok/s, "
+              f"policy={h['policy']}, accum={h['accum_steps']})")
     return 0
 
 

@@ -115,7 +115,8 @@ class ModelConfig:
     decode_impl: str = "auto"            # decode-attention engine: auto |
     #   pallas | interpret | xla | ref — "auto" = split-K Pallas flash-decode
     #   kernel on TPU, XLA einsum elsewhere (core.decode.resolve_decode_impl);
-    #   MLA dims and logits_soft_cap always fall back to xla
+    #   MLA's asymmetric head dims always fall back to xla (logits_soft_cap
+    #   is applied in-kernel since PR 4)
     q_block: int = 512
     kv_block: int = 512
     remat: bool = True

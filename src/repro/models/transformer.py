@@ -95,7 +95,8 @@ def _attend(cfg: ModelConfig, q, k, v, positions, segment_ids, ctx: RuntimeCtx,
             q, k, v, causal=causal,
             q_positions=positions, kv_positions=positions,
             q_segment_ids=segment_ids, kv_segment_ids=segment_ids,
-            q_block=cfg.q_block, kv_block=cfg.kv_block, impl=impl)
+            q_block=cfg.q_block, kv_block=cfg.kv_block, impl=impl,
+            logits_soft_cap=cfg.logits_soft_cap)
     # default: blockwise (BPT) — also the dry-run path
     return blockwise.blockwise_attention(
         q, k, v, causal=causal,

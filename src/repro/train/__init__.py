@@ -1,3 +1,5 @@
-from repro.train.sharding import ShardingPolicy, make_policy
+from repro.train.sharding import (ShardingPolicy, make_policy,
+                                  policy_for_stage, reshard_plan,
+                                  reshard_state, state_shardings)
 from repro.train.train_step import make_train_step, make_eval_step, TrainState
 from repro.train.trainer import Trainer, StageSpec

@@ -4,6 +4,19 @@ Pytrees are flattened with '/'-joined key paths; the AdamW step counter and a
 small JSON metadata blob ride along. Restores verify shape/dtype agreement so
 progressive-stage re-initialization (32K model -> 128K run) is explicit, not
 accidental.
+
+Two layers:
+
+  * ``save_checkpoint`` / ``load_checkpoint`` — one pytree (params-only
+    stage snapshots, eval exports).
+  * ``save_train_state`` / ``load_train_state`` / ``latest_checkpoint`` —
+    the resumable-training layer: the FULL TrainState (params + both AdamW
+    moments + step counter) plus a stage/step/data cursor, written as
+    ``ckpt-<stage>-<step>.npz`` with a ``LATEST`` pointer updated
+    atomically. A preempted stage restarts mid-stage bit-for-bit: params
+    and f32 moments round-trip exactly through npz, the AdamW step drives
+    the LR schedule, and the data cursor tells the trainer how many batches
+    to fast-forward the (deterministic, per-stage-seeded) data iterator.
 """
 from __future__ import annotations
 
@@ -15,12 +28,18 @@ import jax
 import numpy as np
 
 
-def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
+def _key(path_elems) -> str:
+    # dict -> DictKey.key, sequence -> SequenceKey.idx, NamedTuple
+    # (TrainState/AdamWState) -> GetAttrKey.name.
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+        for p in path_elems)
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
     flat = {}
-    items = jax.tree_util.tree_flatten_with_path(tree)[0]
-    for path, leaf in items:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        flat[key] = np.asarray(leaf)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[_key(path)] = np.asarray(leaf)
     return flat
 
 
@@ -33,7 +52,11 @@ def save_checkpoint(path: str, tree: Any, *, metadata: dict | None = None):
 
 
 def load_checkpoint(path: str, target: Any) -> tuple[Any, dict]:
-    """Restore into the structure of ``target`` (shapes must match)."""
+    """Restore into the structure of ``target`` (shapes must match).
+
+    ``target`` leaves may be concrete arrays OR ShapeDtypeStructs (e.g. a
+    ``jax.eval_shape`` template) — only shape/dtype are read from them.
+    """
     if not path.endswith(".npz"):
         path = path + ".npz"
     data = np.load(path)
@@ -41,14 +64,95 @@ def load_checkpoint(path: str, target: Any) -> tuple[Any, dict]:
     paths, treedef = jax.tree_util.tree_flatten_with_path(target)
     leaves = []
     for path_elems, old in paths:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path_elems)
+        key = _key(path_elems)
         if key not in data:
             raise KeyError(f"checkpoint missing param {key}")
         new = data[key]
-        if tuple(new.shape) != tuple(np.shape(old)):
+        if tuple(new.shape) != tuple(getattr(old, "shape", np.shape(old))):
             raise ValueError(
                 f"shape mismatch for {key}: ckpt {new.shape} vs target "
                 f"{np.shape(old)} — progressive stages must share the model")
         leaves.append(new)
     return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+# ---------------------------------------------------------------------------
+# Resumable training checkpoints (full TrainState + cursor)
+# ---------------------------------------------------------------------------
+
+LATEST = "LATEST"
+
+
+def _ckpt_name(stage_index: int, step: int) -> str:
+    return f"ckpt-{stage_index:02d}-{step:06d}.npz"
+
+
+def save_train_state(
+    ckpt_dir: str,
+    state: Any,                      # TrainState (params + AdamWState)
+    *,
+    stage_index: int,
+    stage_name: str,
+    step: int,                       # steps COMPLETED in this stage
+    data_cursor: int,                # batches drawn from the stage iterator
+    metadata: dict | None = None,
+) -> str:
+    """Write the full TrainState + cursor; atomically repoint LATEST."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    meta = dict(metadata or {}, stage_index=stage_index,
+                stage_name=stage_name, step=step, data_cursor=data_cursor)
+    name = _ckpt_name(stage_index, step)
+    save_checkpoint(os.path.join(ckpt_dir, name[:-4]), state, metadata=meta)
+    tmp = os.path.join(ckpt_dir, LATEST + ".tmp")
+    with open(tmp, "w") as f:
+        f.write(name + "\n")
+    os.replace(tmp, os.path.join(ckpt_dir, LATEST))
+    return os.path.join(ckpt_dir, name)
+
+
+def latest_checkpoint(ckpt_dir: str) -> str | None:
+    """Path of the newest resumable checkpoint in ``ckpt_dir`` (or None)."""
+    pointer = os.path.join(ckpt_dir, LATEST)
+    if os.path.exists(pointer):
+        with open(pointer) as f:
+            name = f.read().strip()
+        path = os.path.join(ckpt_dir, name)
+        return path if os.path.exists(path) else None
+    names = sorted(n for n in os.listdir(ckpt_dir)
+                   if n.startswith("ckpt-") and n.endswith(".npz")) \
+        if os.path.isdir(ckpt_dir) else []
+    return os.path.join(ckpt_dir, names[-1]) if names else None
+
+
+def peek_metadata(path: str) -> dict:
+    """Read just the JSON metadata of a checkpoint (file or directory) —
+    cheap (npz is lazily indexed), used to pick the resume template before
+    any parameters are materialized."""
+    if os.path.isdir(path):
+        found = latest_checkpoint(path)
+        if found is None:
+            raise FileNotFoundError(f"no resumable checkpoint under {path}")
+        path = found
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    return (json.loads(bytes(data["__metadata__"]).decode())
+            if "__metadata__" in data else {})
+
+
+def load_train_state(path: str, target_state: Any) -> tuple[Any, dict]:
+    """Restore a full TrainState (+ cursor metadata) from a resumable
+    checkpoint. ``path`` may be a checkpoint file or a directory (uses the
+    LATEST pointer)."""
+    if os.path.isdir(path):
+        found = latest_checkpoint(path)
+        if found is None:
+            raise FileNotFoundError(f"no resumable checkpoint under {path}")
+        path = found
+    state, meta = load_checkpoint(path, target_state)
+    for k in ("stage_index", "step", "data_cursor"):
+        if k not in meta:
+            raise KeyError(
+                f"{path} has no {k!r} cursor — not a resumable train-state "
+                "checkpoint (params-only stage snapshots cannot resume)")
+    return state, meta

@@ -113,16 +113,23 @@ class ShardingPolicy:
         seq_ax = self.ring_axis if seq_sharded else None
         return P(self.batch_axes, seq_ax)
 
-    def batch_sharding(self, batch_tree, *, seq_sharded: bool = False) -> Any:
-        """dict of (B, S, ...) arrays -> NamedShardings (rank-aware)."""
+    def batch_sharding(self, batch_tree, *, seq_sharded: bool = False,
+                       leading_accum: bool = False) -> Any:
+        """dict of (B, S, ...) arrays -> NamedShardings (rank-aware).
+
+        ``leading_accum``: arrays carry a leading microbatch axis
+        ``(accum, B, S, ...)`` (gradient accumulation); that axis is the
+        ``lax.scan`` dimension and stays unsharded.
+        """
 
         def one(x):
             nd = len(x.shape)
-            if nd == 1:
-                return NamedSharding(self.mesh, P(self.batch_axes))
-            spec = [self.batch_axes,
-                    self.ring_axis if seq_sharded else None]
-            spec += [None] * (nd - 2)
+            lead = [None] if leading_accum else []
+            if nd - len(lead) == 1:
+                return NamedSharding(self.mesh, P(*lead, self.batch_axes))
+            spec = lead + [self.batch_axes,
+                           self.ring_axis if seq_sharded else None]
+            spec += [None] * (nd - len(spec))
             return NamedSharding(self.mesh, P(*spec))
 
         return jax.tree.map(one, batch_tree)
@@ -244,3 +251,126 @@ def make_policy(
                               decode_ring=True, attn_impl=attn_impl)
 
     raise ValueError(shape_kind)
+
+
+# ---------------------------------------------------------------------------
+# Progressive-training stage policies (paper Appendix F)
+# ---------------------------------------------------------------------------
+
+def policy_for_stage(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    seq_len: int,
+    batch_rows: int,
+    *,
+    attn_impl: str | None = None,
+    striped: bool = False,
+) -> ShardingPolicy:
+    """Select the mesh layout for one progressive-training stage.
+
+    Mirrors the paper's Appendix F ladder: at short contexts the 4M-token
+    global batch has enough rows to fill the data axes, so the stage trains
+    FSDP/data-parallel ("train"); as seq_len doubles, ``batch_rows =
+    tokens_per_batch / seq_len`` shrinks below the data-axis size and the
+    stage flips to RingAttention sequence parallelism ("train_ring" — batch
+    replicated, sequence sharded over the ring axes). The crossover is
+    purely arithmetic: prefer data parallelism while the rows divide the
+    data axes, otherwise shard the sequence (which must divide the ring).
+    """
+    multi_pod = "pod" in mesh.shape
+    data = _axis_size(mesh, ("pod", "data") if multi_pod else ("data",))
+    if batch_rows % data == 0 and batch_rows >= data:
+        return make_policy(cfg, mesh, "train", global_batch=batch_rows,
+                           attn_impl=attn_impl)
+    if seq_len % data == 0:
+        return make_policy(cfg, mesh, "train_ring", global_batch=batch_rows,
+                           striped=striped, attn_impl=attn_impl)
+    # Neither rows nor sequence divide the data axes (tiny smoke shapes):
+    # batch-parallel layout with the batch dim replicated.
+    pol = make_policy(cfg, mesh, "train", global_batch=batch_rows,
+                      attn_impl=attn_impl)
+    rules = dict(pol.rules, batch=None, tokens=None)
+    return dataclasses.replace(pol, rules=rules, batch_axes=None)
+
+
+def state_shardings(model, policy: ShardingPolicy):
+    """NamedSharding tree for a full TrainState under ``policy``.
+
+    AdamW moments shard exactly like their parameters (the FSDP invariant:
+    optimizer state lives with the shard it updates); the step counter is
+    replicated.
+    """
+    from repro.optim.adamw import AdamWState
+    from repro.train.train_step import TrainState
+
+    p = policy.param_sharding(model.param_specs())
+    return TrainState(p, AdamWState(policy.replicated(), p, p))
+
+
+def reshard_state(state, dst_shardings):
+    """Re-lay-out a TrainState onto another policy's shardings.
+
+    One ``device_put`` over the whole pytree: GSPMD turns each leaf's
+    src->dst spec change into the minimal collective (all-gather only where
+    a dim de-shards, all-to-all where it moves between axes). Used at stage
+    boundaries when ``policy_for_stage`` flips train -> train_ring.
+    """
+    return jax.device_put(state, dst_shardings)
+
+
+def reshard_plan(model, src_policy: ShardingPolicy, dst_policy: ShardingPolicy,
+                 *, dtype_bytes: int = 4, state_copies: int = 3) -> dict:
+    """Analytic per-device byte accounting of a stage-boundary re-layout.
+
+    For every parameter leaf (x ``state_copies`` for params + both AdamW
+    moments) compares two strategies:
+
+      * ``reshard_bytes``  — keep the state sharded, fetch only the new
+        local shard for leaves whose PartitionSpec changes (what
+        ``reshard_state`` lowers to);
+      * ``replicate_bytes`` — the naive alternative: gather every sharded
+        leaf full-size onto every device before the next stage.
+
+    Context-stage benchmark + CI gate assert reshard < replicate.
+    """
+
+    def layout(policy, spec):
+        """Per-dim (mesh axes, axis size) — captures both which axes shard a
+        dim AND how wide they are, so an Appendix-F mesh re-split (e.g.
+        64x4 -> 32x8; same axis NAMES, different shard geometry) counts as
+        a change."""
+        out = []
+        for ax in spec:
+            names = (tuple(ax) if isinstance(ax, (tuple, list))
+                     else (ax,) if ax is not None else ())
+            out.append((names, _axis_size(policy.mesh, ax)))
+        return tuple(out)
+
+    from repro.models import layers as L
+
+    reshard = 0
+    replicate = 0
+    total = 0
+    changed = 0
+    leaves = jax.tree.leaves(model.param_specs(), is_leaf=L.is_spec)
+    for s in leaves:
+        size = int(np.prod(s.shape)) * dtype_bytes * state_copies
+        total += size
+        src_spec = src_policy.param_spec(s.shape, s.axes)
+        dst_spec = dst_policy.param_spec(s.shape, s.axes)
+        src_layout = layout(src_policy, src_spec)
+        dst_layout = layout(dst_policy, dst_spec)
+        src_div = int(np.prod([d for _, d in src_layout]))
+        dst_div = int(np.prod([d for _, d in dst_layout]))
+        if src_layout != dst_layout:
+            changed += 1
+            reshard += size // dst_div          # fetch the new local shard
+        if src_div > 1:
+            replicate += size - size // src_div  # gather the missing rest
+    return {
+        "total_state_bytes": total,
+        "reshard_bytes_per_device": reshard,
+        "replicate_bytes_per_device": replicate,
+        "changed_leaves": changed,
+        "num_leaves": len(leaves),
+    }

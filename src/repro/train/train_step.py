@@ -83,13 +83,54 @@ def make_train_step(
     weight_decay: float = 0.1,
     clip_norm: float | None = 1.0,
     lcfg: LossConfig = LossConfig(),
+    accum_steps: int = 1,
 ):
-    """Returns train_step(state, batch) -> (state, metrics). Not yet jitted."""
+    """Returns train_step(state, batch) -> (state, metrics). Not yet jitted.
+
+    ``accum_steps > 1`` turns on microbatch gradient accumulation (the
+    paper's 4M-token global batches never fit a single forward): every leaf
+    of ``batch`` carries a leading microbatch axis ``(accum_steps, rows,
+    ...)``; a ``lax.scan`` folds one microbatch at a time into an f32 grad
+    accumulator, and AdamW applies ONCE on the mean gradient. With uniform
+    loss weights the mean of per-microbatch grads equals the one-big-batch
+    grad exactly; reported scalar metrics are microbatch means.
+
+    Caveat: each microbatch loss normalizes by its OWN weight sum
+    (``lcfg.normalize_by``), so when microbatch weight sums differ (masked
+    packing with uneven segment counts) the uniform mean over-weights
+    light microbatches relative to the one-big-batch gradient — the
+    standard per-replica-mean trade-off of data-parallel training, not a
+    bug; keep microbatch compositions comparable (the packer's fixed
+    ``batch_rows`` does) if exact big-batch equivalence matters.
+
+    The returned step is written for donation: jit it with
+    ``donate_argnums=(0,)`` so the TrainState buffers (params + both AdamW
+    moments — 3x params bytes) are reused in place instead of copied; the
+    grad accumulator is the only extra params-sized buffer.
+    """
+
+    def grads_of(params, microbatch):
+        grad_fn = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, microbatch, ctx=ctx, lcfg=lcfg),
+            has_aux=True)
+        (_, metrics), grads = grad_fn(params)
+        return grads, metrics
 
     def train_step(state: TrainState, batch: dict):
-        grad_fn = jax.value_and_grad(
-            lambda p: loss_fn(cfg, p, batch, ctx=ctx, lcfg=lcfg), has_aux=True)
-        (_, metrics), grads = grad_fn(state.params)
+        if accum_steps == 1:
+            grads, metrics = grads_of(state.params, batch)
+        else:
+            def micro(acc, microbatch):
+                g, m = grads_of(state.params, microbatch)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), acc, g)
+                return acc, m
+
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            grads, metrics_seq = jax.lax.scan(micro, acc0, batch)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics_seq)
         params, opt, opt_metrics = adamw_update(
             grads, state.opt, state.params,
             learning_rate=learning_rate, weight_decay=weight_decay,

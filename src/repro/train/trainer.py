@@ -5,6 +5,26 @@ from the previous stage's parameters, with RoPE theta scaled per stage —
 exactly the paper's recipe, parameterized so examples/tests run it at
 reduced scale on CPU while the full-scale stage table lives in
 ``benchmarks/context_stages.py``.
+
+Distributed runtime (PR 4): given a ``mesh``, every stage compiles its train
+step under the layout ``sharding.policy_for_stage`` picks for that stage's
+(seq_len, batch_rows) — FSDP/data-parallel at short contexts, RingAttention
+sequence-parallel once the 4M-token batch no longer fills the data axes
+(paper Appendix F) — with explicit ``in_shardings``/``out_shardings`` and
+the TrainState donated. At stage boundaries the carried state is re-laid-out
+onto the next stage's policy (``sharding.reshard_state``). Without a mesh
+the trainer is the single-device smoke path (still donated).
+
+Resumption: with ``checkpoint_dir`` set, ``checkpoint_every`` steps the full
+TrainState (params + AdamW moments + step) plus a stage/step/data cursor is
+written; ``Trainer.run(resume_from=...)`` (or ``launch.train --resume``)
+restarts a preempted run mid-stage bit-for-bit on the loss curve — the data
+iterators are deterministic per-stage streams that fast-forward to the
+cursor, and the LR schedule is driven by the restored AdamW step.
+
+Per-stage randomness: stage ``i`` derives ``fold_in(PRNGKey(seed), i)``
+sub-streams for init and data, so no two stages (or their iterators) replay
+identical randomness.
 """
 from __future__ import annotations
 
@@ -19,9 +39,13 @@ from repro.data.pipeline import MixtureSpec, TEXT_STAGE, data_iterator
 from repro.data.vocab import Vocab, build_vocab
 from repro.models.config import ModelConfig
 from repro.models.context import NULL_CTX, RuntimeCtx
+from repro.models.registry import build_model
 from repro.optim import schedules
 from repro.optim.adamw import adamw_init
-from repro.train.checkpoint import save_checkpoint
+from repro.train.checkpoint import (load_train_state, peek_metadata,
+                                    save_checkpoint, save_train_state)
+from repro.train.sharding import (policy_for_stage, reshard_state,
+                                  state_shardings)
 from repro.train.train_step import (LossConfig, TrainState, init_train_state,
                                     make_train_step)
 
@@ -33,13 +57,14 @@ class StageSpec:
     seq_len: int
     rope_theta: float
     steps: int
-    batch_rows: int
+    batch_rows: int                    # rows per MICROBATCH
     mixture: MixtureSpec = TEXT_STAGE
     lr: float = 4e-5                   # paper Table 11
     schedule: str = "constant"         # "constant" | "cosine"
     warmup: int = 0
     min_lr: float | None = None
     packing_mode: str = "masked"
+    accum_steps: int = 1               # microbatches per optimizer update
 
 
 # The paper's stage ladders, scaled by ``scale`` for runnable examples:
@@ -72,17 +97,20 @@ class Trainer:
         stages: list[StageSpec],
         *,
         ctx: RuntimeCtx = NULL_CTX,
+        mesh=None,
         vocab: Vocab | None = None,
         lcfg: LossConfig = LossConfig(),
         seed: int = 0,
         checkpoint_dir: str | None = None,
+        checkpoint_every: int = 0,
         data_factory: Callable[..., Iterator[dict]] | None = None,
         log_every: int = 10,
         log_fn: Callable[[str], None] = print,
     ):
         self.base_cfg = cfg
         self.stages = stages
-        self.ctx = ctx
+        self.ctx = ctx                 # explicit override when mesh is None
+        self.mesh = mesh
         codebook = cfg.vision_tokens.codebook_size if cfg.vision_tokens else 0
         # Reduced-scale configs shrink vocab but keep the family's codebook
         # setting; cap the codebook so the text range stays usable.
@@ -91,6 +119,7 @@ class Trainer:
         self.lcfg = lcfg
         self.seed = seed
         self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
         self.data_factory = data_factory or data_iterator
         self.log_every = log_every
         self.log = log_fn
@@ -108,34 +137,96 @@ class Trainer:
                                                 stage.warmup, stage.steps)
         return schedules.constant_with_warmup(stage.lr, stage.warmup)
 
-    def run_stage(self, stage: StageSpec, *, data: Iterator[dict] | None = None
-                  ) -> dict:
+    # -- per-stage randomness (satellite: no stage replays another's stream) --
+
+    def _stage_rng(self, stage_index: int) -> jax.Array:
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed), stage_index)
+
+    def _stage_data_seed(self, stage_index: int) -> int:
+        key = jax.random.fold_in(self._stage_rng(stage_index), 1)
+        return int(jax.random.randint(key, (), 0, np.iinfo(np.int32).max))
+
+    # -- stage policy / compile ------------------------------------------------
+
+    def _stage_policy(self, cfg: ModelConfig, stage: StageSpec):
+        if self.mesh is None:
+            return None
+        return policy_for_stage(cfg, self.mesh, stage.seq_len,
+                                stage.batch_rows)
+
+    def _compile_step(self, cfg, stage, policy, model, batch0):
+        """jit the stage's step with the policy's explicit shardings; the
+        TrainState (argument 0) is donated — params and both AdamW moments
+        update in place instead of being copied every step."""
+        ctx = policy.ctx() if policy is not None else self.ctx
+        step = make_train_step(
+            cfg, ctx=ctx, learning_rate=self._lr(stage), lcfg=self.lcfg,
+            accum_steps=stage.accum_steps)
+        if policy is None:
+            return jax.jit(step, donate_argnums=(0,)), None
+        sh = state_shardings(model, policy)
+        batch_sh = policy.batch_sharding(
+            batch0, seq_sharded=policy.ring_axis is not None,
+            leading_accum=stage.accum_steps > 1)
+        jitted = jax.jit(step, in_shardings=(sh, batch_sh),
+                         out_shardings=(sh, None), donate_argnums=(0,))
+        return jitted, sh
+
+    # -- data ------------------------------------------------------------------
+
+    def _stage_data(self, stage: StageSpec, stage_index: int):
+        return self.data_factory(
+            self.vocab, stage.mixture, seq_len=stage.seq_len,
+            batch_rows=stage.batch_rows, packing_mode=stage.packing_mode,
+            seed=self._stage_data_seed(stage_index))
+
+    @staticmethod
+    def _draw_batch(data, accum_steps: int) -> dict:
+        if accum_steps == 1:
+            return dict(next(data))
+        micro = [next(data) for _ in range(accum_steps)]
+        return {k: np.stack([m[k] for m in micro]) for k in micro[0]}
+
+    # -- one stage -------------------------------------------------------------
+
+    def run_stage(self, stage: StageSpec, stage_index: int = 0, *,
+                  data: Iterator[dict] | None = None,
+                  start_step: int = 0,
+                  data_cursor: int | None = None) -> dict:
         cfg = self._stage_cfg(stage)
-        rng = jax.random.PRNGKey(self.seed)
+        model = build_model(cfg)
+        policy = self._stage_policy(cfg, stage)
+
         if self.state is None:
-            model_state = init_train_state(
-                type("M", (), {"init": lambda s, r: __import__(
-                    "repro.models.transformer", fromlist=["init"]).init(cfg, r)})(),
-                rng)
-            self.state = model_state
-        else:
+            self.state = init_train_state(
+                model, jax.random.fold_in(self._stage_rng(stage_index), 0))
+        elif start_step == 0:
             # paper: "Each successive run is initialized from the run of the
             # prior sequence length" — params carry over, optimizer restarts.
             self.state = TrainState(self.state.params,
                                     adamw_init(self.state.params))
+        # else: resumed mid-stage — the restored state continues untouched.
 
-        step_fn = jax.jit(make_train_step(
-            cfg, ctx=self.ctx, learning_rate=self._lr(stage), lcfg=self.lcfg))
         if data is None:
-            data = self.data_factory(
-                self.vocab, stage.mixture, seq_len=stage.seq_len,
-                batch_rows=stage.batch_rows, packing_mode=stage.packing_mode,
-                seed=self.seed)
+            data = self._stage_data(stage, stage_index)
+            # Resume: replay the deterministic stream up to the recorded
+            # cursor (falls back to the draw arithmetic for direct callers).
+            if data_cursor is None:
+                data_cursor = start_step * stage.accum_steps
+            for _ in range(data_cursor):
+                next(data)
+
+        batch = self._draw_batch(data, stage.accum_steps)
+        step_fn, sh = self._compile_step(cfg, stage, policy, model, batch)
+        # Stage-boundary re-layout: lay the carried state out as THIS stage's
+        # policy shards it (no-op when the specs agree); single device just
+        # commits the pytree so donation reuses the buffers.
+        self.state = (reshard_state(self.state, sh) if sh is not None
+                      else jax.device_put(self.state))
 
         losses_log, t0 = [], time.time()
         tokens_done = 0
-        for step in range(stage.steps):
-            batch = {k: v for k, v in next(data).items()}
+        for step in range(start_step, stage.steps):
             self.state, metrics = step_fn(self.state, batch)
             loss = float(metrics["loss"])
             losses_log.append(loss)
@@ -144,21 +235,75 @@ class Trainer:
                 self.log(f"[{stage.name}] step {step:5d} loss {loss:.4f} "
                          f"grad_norm {float(metrics['grad_norm']):.3f} "
                          f"tok/s {tokens_done / (time.time() - t0):,.0f}")
+            done = step + 1
+            if (self.checkpoint_dir and self.checkpoint_every
+                    and done % self.checkpoint_every == 0
+                    and done < stage.steps):
+                save_train_state(
+                    self.checkpoint_dir, self.state,
+                    stage_index=stage_index, stage_name=stage.name,
+                    step=done, data_cursor=done * stage.accum_steps)
+            if step + 1 < stage.steps:
+                batch = self._draw_batch(data, stage.accum_steps)
+
         summary = {
             "stage": stage.name, "seq_len": stage.seq_len,
             "rope_theta": stage.rope_theta, "steps": stage.steps,
-            "first_loss": losses_log[0], "final_loss": float(
-                np.mean(losses_log[-min(5, len(losses_log)):])),
+            "accum_steps": stage.accum_steps,
+            "policy": ("none" if policy is None else
+                       "ring" if policy.ring_axis is not None else "fsdp"),
+            "first_loss": losses_log[0] if losses_log else float("nan"),
+            "final_loss": (float(np.mean(losses_log[-min(5, len(losses_log)):]))
+                           if losses_log else float("nan")),
+            "losses": losses_log,
             "tokens": tokens_done,
             "wall_s": time.time() - t0,
         }
         self.history.append(summary)
         if self.checkpoint_dir:
-            save_checkpoint(f"{self.checkpoint_dir}/{stage.name}",
-                            self.state.params, metadata=summary)
+            # Full resumable state at the stage boundary + the params-only
+            # per-stage snapshot (eval / next-run init).
+            save_train_state(
+                self.checkpoint_dir, self.state, stage_index=stage_index,
+                stage_name=stage.name, step=stage.steps,
+                data_cursor=stage.steps * stage.accum_steps)
+            save_checkpoint(
+                f"{self.checkpoint_dir}/{stage.name}", self.state.params,
+                metadata={k: v for k, v in summary.items() if k != "losses"})
         return summary
 
-    def run(self) -> list[dict]:
-        for stage in self.stages:
-            self.run_stage(stage)
+    # -- resume ----------------------------------------------------------------
+
+    def _restore(self, resume_from: str) -> tuple[int, int, int]:
+        """Load a resumable checkpoint into self.state; returns the
+        (stage_index, start_step, data_cursor) to continue from."""
+        meta = peek_metadata(resume_from)
+        for k in ("stage_index", "step"):
+            if k not in meta:
+                raise KeyError(f"{resume_from}: not a resumable checkpoint "
+                               f"(missing {k!r})")
+        idx, step = int(meta["stage_index"]), int(meta["step"])
+        cfg = self._stage_cfg(self.stages[idx])
+        model = build_model(cfg)
+        # Shape/dtype template only — no real init compute or allocation;
+        # every leaf is overwritten by the checkpoint.
+        template = jax.eval_shape(
+            lambda r: init_train_state(model, r), jax.random.PRNGKey(0))
+        self.state, meta = load_train_state(resume_from, template)
+        self.log(f"[resume] {meta['stage_name']} (stage {idx}) "
+                 f"at step {step}/{self.stages[idx].steps}")
+        if step >= self.stages[idx].steps:
+            return idx + 1, 0, 0       # checkpoint taken at the stage end
+        return idx, step, int(meta["data_cursor"])
+
+    def run(self, *, resume_from: str | None = None) -> list[dict]:
+        start_stage, start_step, cursor = 0, 0, 0
+        if resume_from is not None:
+            start_stage, start_step, cursor = self._restore(resume_from)
+        for i, stage in enumerate(self.stages):
+            if i < start_stage:
+                continue
+            first = i == start_stage
+            self.run_stage(stage, i, start_step=start_step if first else 0,
+                           data_cursor=cursor if first else None)
         return self.history

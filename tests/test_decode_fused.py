@@ -7,9 +7,9 @@ compiles, executed by the Pallas interpreter on CPU):
     ``decode_attention_unsharded`` XLA oracle: GQA/MQA/MHA head grouping,
     ragged (per-row) cache fill lengths, split-count invariance, raw
     (acc, m, l) partial parity, and the cross-shard carry merge.
-  * dispatch tests — ``resolve_decode_impl`` routing (soft cap / MLA
-    asymmetric dims fall back to xla) and the ``decode_attention_unsharded``
-    impl knob.
+  * dispatch tests — ``resolve_decode_impl`` routing (MLA asymmetric dims
+    fall back to xla; ``logits_soft_cap`` runs in-kernel) and the
+    ``decode_attention_unsharded`` impl knob.
   * multi-device test (slow) — 8-way host-platform ring decode in a
     subprocess: the kernel partial travels the ring as a carry
     (``kernels.ops.ring_flash_decode``) vs the unsharded oracle.
@@ -125,8 +125,9 @@ def test_resolve_decode_impl_dispatch():
     assert dec.resolve_decode_impl("interpret") == "interpret"
     assert dec.resolve_decode_impl("ref") == "xla"
     assert dec.resolve_decode_impl("auto") in ("pallas", "xla")
-    # the kernel has no soft-cap / asymmetric-head-dim path
-    assert dec.resolve_decode_impl("pallas", logits_soft_cap=30.0) == "xla"
+    # soft cap is in-kernel now (tanh on the logits tile); only MLA's
+    # asymmetric head dims still force the einsum path
+    assert dec.resolve_decode_impl("pallas", logits_soft_cap=30.0) == "pallas"
     assert dec.resolve_decode_impl("interpret", asymmetric=True) == "xla"
     with pytest.raises(ValueError):
         dec.resolve_decode_impl("bogus")
@@ -141,6 +142,22 @@ def test_ops_flash_decode_wrapper_dispatch(rng):
         out = kops.flash_decode(q, kc, vc, kv_positions=kvpos,
                                 q_position=qpos, impl=impl)
         np.testing.assert_allclose(out, ref, atol=2e-5, rtol=1e-4)
+
+
+def test_flash_decode_soft_cap_matches_oracle(rng):
+    """In-kernel tanh cap == the einsum path's cap, and it must matter."""
+    q, kc, vc, kvpos, qpos = _inputs(rng, fill=[200, 97])
+    q = q * 4.0                     # bend the logits so tanh != identity
+    cap = 10.0
+    out = dec.decode_attention_unsharded(
+        q, kc, vc, kv_positions=kvpos, q_position=qpos, impl="interpret",
+        logits_soft_cap=cap)
+    ref = dec.decode_attention_unsharded(
+        q, kc, vc, kv_positions=kvpos, q_position=qpos, impl="xla",
+        logits_soft_cap=cap)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=1e-4)
+    uncapped = _oracle(q, kc, vc, kvpos, qpos)
+    assert not np.allclose(np.asarray(ref), np.asarray(uncapped), atol=1e-3)
 
 
 def test_decode_attention_unsharded_impl_knob(rng):

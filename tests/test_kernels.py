@@ -101,6 +101,45 @@ def test_flash_attention_grads(rng):
         np.testing.assert_allclose(a, b_, atol=5e-5, rtol=1e-3)
 
 
+@pytest.mark.parametrize("cap", [10.0, 30.0])
+def test_flash_attention_soft_cap_fwd_and_grads(rng, cap):
+    """In-kernel tanh logits cap: forward + gradients vs the capped oracle
+    (jnp autodiff differentiates the reference cap; the kernel's backward
+    applies the 1 - tanh^2 factor explicitly)."""
+    b, s, h, hkv, d = 1, 128, 4, 2, 64
+    q, k, v = make_qkv(rng, b, s, h, hkv, d, jnp.float32)
+    # scale q up so the cap actually bends logits (otherwise tanh ~ identity)
+    q = q * 4.0
+    pos, seg = ids(rng, b, s)
+    kw = dict(causal=True, q_positions=pos, kv_positions=pos,
+              q_segment_ids=seg, kv_segment_ids=seg)
+
+    out = ops.flash_attention(q, k, v, q_block=64, kv_block=64,
+                              impl="interpret", logits_soft_cap=cap, **kw)
+    ref = full_attention(q, k, v, logits_soft_cap=cap, **kw)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=1e-4)
+    # the cap must actually change the answer, or this test proves nothing
+    uncapped = full_attention(q, k, v, **kw)
+    assert not np.allclose(np.asarray(ref), np.asarray(uncapped), atol=1e-3)
+
+    def loss(fn):
+        def inner(q, k, v):
+            o = fn(q, k, v)
+            return jnp.sum(o * jnp.cos(jnp.arange(o.size, dtype=jnp.float32)
+                                       .reshape(o.shape)))
+        return inner
+
+    f_kernel = loss(lambda q, k, v: ops.flash_attention(
+        q, k, v, q_block=64, kv_block=64, impl="interpret",
+        logits_soft_cap=cap, **kw))
+    f_ref = loss(lambda q, k, v: full_attention(
+        q, k, v, logits_soft_cap=cap, **kw))
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, atol=5e-5, rtol=1e-3)
+
+
 # -- Mamba2 chunked scan -------------------------------------------------------
 
 @pytest.mark.parametrize("s,chunk", [(128, 32), (256, 64), (96, 32)])

@@ -190,8 +190,9 @@ def test_ring_attention_impl_dispatch(rng):
                                np.asarray(outs["xla"], np.float32),
                                atol=1e-5, rtol=1e-4)
     assert ring_mod.resolve_ring_impl("auto") in ("pallas", "xla")
+    # soft cap is applied in-kernel now — it must NOT force the xla path
     assert ring_mod.resolve_ring_impl("interpret",
-                                      logits_soft_cap=30.0) == "xla"
+                                      logits_soft_cap=30.0) == "interpret"
 
 
 def test_ring_flash_bf16_tolerance(rng):

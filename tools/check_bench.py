@@ -18,6 +18,11 @@ claims rest on:
     the static lockstep engine on the measured mixed workload with greedy
     token-level parity between the two, and the analytic 1M-context row
     must show the same strict ordering.
+  * BENCH_context_stages.json — every measured ladder stage reports a
+    positive tok/s under a real stage policy; the accumulation-on/off pair
+    consumed identical token budgets; and at every full-scale Appendix-F
+    stage boundary the spec-diff reshard moves fewer bytes per device than
+    gathering the TrainState replicated.
 
 Run locally:  python tools/check_bench.py  (from the repo root)
 """
@@ -141,17 +146,65 @@ def check_serve_batching() -> None:
            "serve_batching: the 1M-context analytic_paper_stage row is gone")
 
 
+def check_context_stages() -> None:
+    rows = _load("BENCH_context_stages.json")
+    if rows is None:
+        return
+    measured = 0
+    parity_rows = 0
+    boundaries = 0
+    for row in rows or []:
+        if row.get("mode") == "measured":
+            measured += 1
+            stage = row.get("stage", "?")
+            # Fail-closed defaults: a missing/renamed key must FAIL the gate.
+            _check(row.get("tok_per_s", 0.0) > 0.0,
+                   f"context_stages[{stage}]: no positive tok_per_s")
+            _check(row.get("policy", "none") != "none",
+                   f"context_stages[{stage}]: stage did not compile under a "
+                   "sharding policy (NULL_CTX regression)")
+            continue
+        if "accum_parity" in row:
+            parity_rows += 1
+            p = row["accum_parity"]
+            _check(p.get("tokens_match") is True,
+                   "context_stages[accum]: accumulation-on/off token budgets "
+                   "no longer match (or the accounting keys went missing)")
+            _check(p.get("tok_per_s_on", 0.0) > 0.0
+                   and p.get("tok_per_s_off", 0.0) > 0.0,
+                   "context_stages[accum]: missing tok/s for the parity pair")
+            continue
+        if "analytic_boundary" in row:
+            boundaries += 1
+            b = row["analytic_boundary"]
+            tag = f"{b.get('from_seq', '?')}->{b.get('to_seq', '?')}"
+            _check(b.get("reshard_bytes_per_device", 10 ** 18)
+                   < b.get("replicate_bytes_per_device", -1),
+                   f"context_stages[{tag}]: stage-boundary reshard no longer "
+                   "undercuts gathering the TrainState replicated")
+            _check(b.get("reshard_beats_replicate") is True,
+                   f"context_stages[{tag}]: delta flag lost the ordering")
+    _check(measured >= 3,
+           "context_stages: expected >= 3 measured ladder stages")
+    _check(parity_rows >= 1, "context_stages: the accum_parity row is gone")
+    _check(boundaries >= 4,
+           "context_stages: expected 4 full-scale stage-boundary rows "
+           "(32K->128K->256K->512K->1M)")
+
+
 def main() -> int:
     check_ring_fused()
     check_decode_fused()
     check_serve_batching()
+    check_context_stages()
     if _errors:
         for e in _errors:
             print(f"FAIL: {e}")
         return 1
     print("ok: committed BENCH_*.json accounting holds (fused beats xla; no "
           "materialized logits buffers; continuous batching wastes fewer "
-          "pad-token steps than static)")
+          "pad-token steps than static; stage-boundary reshard beats "
+          "replicate with accum token parity)")
     return 0
 
 
