@@ -30,7 +30,8 @@ if __package__ in (None, ""):
         os.path.abspath(__file__))))
 
 from benchmarks import (chat_mix, context_stages, decode_fused, mfu_roofline,
-                        needle, packing_ablation, ring_fused, serve_batching)
+                        needle, packing_ablation, ring_fused, serve_batching,
+                        serve_paged)
 
 # name -> (runner(quick), dry_runner(quick) | None). Benches with a dry
 # runner validate their setup (shape-level traces + analytic models) in
@@ -54,6 +55,9 @@ BENCHES = {
     # static-vs-continuous batching accounting -> BENCH_serve_batching.json
     "serve_batching": (lambda q: serve_batching.run(quick=q),
                        lambda q: serve_batching.run(quick=q, dry_run=True)),
+    # contiguous-vs-paged KV residency accounting -> BENCH_serve_paged.json
+    "serve_paged": (lambda q: serve_paged.run(quick=q),
+                    lambda q: serve_paged.run(quick=q, dry_run=True)),
 }
 
 

@@ -5,7 +5,15 @@ vision tokens are constrained to the VQGAN codebook range and terminated by
 <eov></vision>.
 
     PYTHONPATH=src python examples/multimodal_chat_serve.py
+    PYTHONPATH=src python examples/multimodal_chat_serve.py \
+        --decode-impl interpret --paged    # CI examples-smoke configuration
+
+``--decode-impl`` forces the decode-attention engine (interpret = the
+Pallas kernels on CPU); ``--paged`` serves from the block-paged KV pool
+with prefix sharing instead of the contiguous slot caches.
 """
+import argparse
+
 import jax
 import numpy as np
 
@@ -17,11 +25,20 @@ from repro.serve import Request, ServeEngine
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--decode-impl", default=None,
+                    choices=["auto", "pallas", "interpret", "xla", "ref"])
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged KV-cache pool")
+    args = ap.parse_args()
+
     cfg = get_reduced("lwm-7b")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     vocab = build_vocab(cfg.vocab_size, codebook_size=cfg.vocab_size // 4)
-    eng = ServeEngine(cfg, params, max_len=256, bos_id=vocab.bos)
+    eng = ServeEngine(cfg, params, max_len=256, bos_id=vocab.bos,
+                      decode_impl=args.decode_impl, paged=args.paged,
+                      block_size=32)
 
     # 1) text chat request
     text_req = Request(prompt=np.arange(20, 60, dtype=np.int32),

@@ -132,6 +132,104 @@ def decode_attention_unsharded(
     return out.astype(out_dtype or q.dtype)
 
 
+def paged_gather(cache: jnp.ndarray, block_tables: jnp.ndarray):
+    """Materialize each row's virtual cache from a paged physical store.
+
+    ``cache`` is the physical block pool ``(num_blocks, block_size, Hkv, D)``
+    (or ``(num_blocks, block_size)`` for positions-like leaves);
+    ``block_tables`` is ``(B, NB)`` with -1 marking unallocated tail entries.
+    Returns ``(B, NB * block_size, ...)`` plus the matching ``(B, NB * bs)``
+    virtual kv_positions (position = virtual index; -1 under dead blocks) —
+    the explicit-gather oracle the Pallas paged kernel is tested against.
+    """
+    b, nb = block_tables.shape
+    bs = cache.shape[1]
+    safe = jnp.clip(block_tables, 0, cache.shape[0] - 1)
+    flat = cache[safe.reshape(-1)]                      # (B*NB, bs, ...)
+    virt = flat.reshape((b, nb * bs) + cache.shape[2:])
+    alive = (block_tables >= 0)[:, :, None]             # (B, NB, 1)
+    pos = jnp.broadcast_to(jnp.arange(nb * bs, dtype=jnp.int32).reshape(
+        1, nb, bs), (b, nb, bs))
+    kv_positions = jnp.where(alive, pos, -1).reshape(b, nb * bs)
+    return virt, kv_positions
+
+
+def paged_decode_attention(
+    q, k_cache, v_cache, block_tables, *, q_position, cache_len,
+    logits_soft_cap=None, out_dtype=None, impl: str | None = None,
+    block_size: int | None = None,
+) -> jnp.ndarray:
+    """Single-device decode attention against a paged KV cache.
+
+    ``k_cache``/``v_cache`` are the physical pools ``(num_blocks,
+    block_size, Hkv, D)`` shared by every batch row; ``block_tables``
+    ``(B, NB)`` maps each row's virtual block index to a physical block
+    (-1 = unallocated). A row's token j lives at virtual position j — the
+    paged pool is append-only, so positions are implicit (no sentinel
+    leaf) and ``cache_len`` (B,) is required: it is the only bound that
+    separates a row's live span from a recycled block's stale bytes.
+
+    Dispatch mirrors ``decode_attention_unsharded``: "pallas"/"interpret"
+    run the block-table split-K kernel (``kernels.flash_decode.
+    paged_flash_decode``) which gathers each KV tile through the table's
+    index map; "xla" is the explicit ``paged_gather`` + einsum oracle.
+    """
+    assert cache_len is not None, "paged decode requires per-row cache_len"
+    impl = resolve_decode_impl(
+        impl, logits_soft_cap=logits_soft_cap,
+        asymmetric=v_cache.shape[-1] != q.shape[-1])
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import flash_decode as fdk  # lazy: avoids cycle
+        return fdk.paged_flash_decode(
+            q, k_cache, v_cache, block_tables, q_position,
+            interpret=impl == "interpret", out_dtype=out_dtype,
+            cache_len=cache_len, logits_soft_cap=logits_soft_cap)
+    k_virt, kv_positions = paged_gather(k_cache, block_tables)
+    v_virt, _ = paged_gather(v_cache, block_tables)
+    acc, m, l = decode_attend_local(
+        q, k_virt, v_virt, kv_positions=kv_positions, q_position=q_position,
+        logits_soft_cap=logits_soft_cap, cache_len=cache_len)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(out_dtype or q.dtype)
+
+
+def paged_cache_update(
+    k_cache: jnp.ndarray,       # (num_blocks, block_size, Hkv, D)
+    v_cache: jnp.ndarray,
+    k_new: jnp.ndarray,         # (B, 1, Hkv, D)
+    v_new: jnp.ndarray,
+    position: jnp.ndarray,      # (B,) virtual position to write
+    block_tables: jnp.ndarray,  # (B, NB) physical block per virtual block
+    *,
+    valid: jnp.ndarray | None = None,  # (B,) bool; False rows skip the write
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter each row's new K/V through its block table.
+
+    Row i writes at physical ``table[i, pos // bs] * bs + pos % bs``. Rows
+    that are invalid, out of table range, or point at an unallocated (-1)
+    entry are dropped (out-of-bounds scatter index + mode="drop") — the
+    paged mirror of ``cache_update(valid=)``'s masked write. The pool
+    guarantees exclusive ownership of a row's write block (copy-on-write
+    un-shares it first), so no two rows ever scatter to the same index.
+    """
+    nb_phys, bs = k_cache.shape[0], k_cache.shape[1]
+    b, nb = block_tables.shape
+    blk = position // bs                                    # (B,) virtual
+    off = position % bs
+    in_table = (blk >= 0) & (blk < nb)
+    entry = jnp.take_along_axis(
+        block_tables, jnp.clip(blk, 0, nb - 1)[:, None], axis=1)[:, 0]
+    ok = in_table & (entry >= 0)
+    if valid is not None:
+        ok &= valid
+    flat = jnp.where(ok, entry * bs + off, nb_phys * bs)    # OOB => dropped
+    kf = k_cache.reshape((nb_phys * bs,) + k_cache.shape[2:])
+    vf = v_cache.reshape((nb_phys * bs,) + v_cache.shape[2:])
+    kf = kf.at[flat].set(k_new[:, 0].astype(kf.dtype), mode="drop")
+    vf = vf.at[flat].set(v_new[:, 0].astype(vf.dtype), mode="drop")
+    return kf.reshape(k_cache.shape), vf.reshape(v_cache.shape)
+
+
 def cache_update(
     k_cache: jnp.ndarray,       # (B, L, Hkv, D)
     v_cache: jnp.ndarray,

@@ -255,9 +255,13 @@ def flash_decode_partial(
         name="lwm_flash_decode",
     )(kv_positions, qpos2d, clen2d, qg, k_cache, v_cache)
 
-    # Merge the split partials (tiny: num_splits x G x D). Same LSE fold as
-    # the ring carry; a fully-masked split has m = NEG_INF, l = 0 and drops
-    # out of the sum.
+    return _merge_splits(acc, m, l, b, h, d)
+
+
+def _merge_splits(acc, m, l, b, h, d):
+    """Merge the per-split partials (tiny: num_splits x G x D) with the same
+    LSE fold as the ring carry; a fully-masked split has m = NEG_INF, l = 0
+    and drops out of the sum. Returns (B, 1, H, ·)-shaped raw statistics."""
     m_glob = jnp.max(m, axis=2)                                # (B, Hkv, G)
     corr = jnp.exp(m - m_glob[:, :, None])
     acc = jnp.sum(acc * corr[..., None], axis=2)               # (B, Hkv, G, D)
@@ -267,6 +271,197 @@ def flash_decode_partial(
     m_glob = m_glob.reshape(b, 1, h)
     l = l.reshape(b, 1, h)
     return acc, m_glob, l
+
+
+def _paged_decode_kernel(
+    tbl_ref,                   # scalar-prefetch (B, NB) int32 block table
+    qpos_ref,                  # (1, 1) int32 — the query's absolute position
+    clen_ref,                  # (1, 1) int32 — row's filled cache length
+    q_ref,                     # (1, 1, G, D)
+    k_ref, v_ref,              # (1, Bs, 1, D) — one physical cache block
+    acc_ref, m_ref, l_ref,     # per-split partials
+    acc_s, m_s, l_s,           # VMEM scratch (G, D) / (G, 1) / (G, 1) f32
+    *,
+    sm_scale: float,
+    block_size: int,
+    blocks_per_split: int,
+    num_virt_blocks: int,
+    logits_soft_cap: float | None,
+):
+    """Paged twin of ``_decode_kernel``: the KV tile arrives through the
+    block table's index map, and kv positions are *implicit* — the paged
+    pool is append-only, so virtual block ``lb`` holds exactly positions
+    ``[lb * Bs, (lb + 1) * Bs)``. Validity therefore needs no sentinel
+    leaf: a lane is attendable iff its virtual position is causally
+    visible and inside the row's live span, and a whole tile is dead when
+    its table entry is -1 (unallocated tail) — stale bytes in a recycled
+    physical block are never read because ``cache_len`` bounds the span."""
+    ib = pl.program_id(0)
+    isp = pl.program_id(2)
+    ibk = pl.program_id(3)
+
+    @pl.when(ibk == 0)
+    def _init():
+        acc_s[...] = jnp.zeros_like(acc_s)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    lb = isp * blocks_per_split + ibk               # virtual block index
+    lb_c = jnp.minimum(lb, num_virt_blocks - 1)
+    entry = tbl_ref[ib, lb_c]                       # physical block or -1
+    qpos = qpos_ref[0, 0]
+    clen = clen_ref[0, 0]
+    # (1, Bs) iota — TPU requires >= 2D; broadcasts against (G, Bs) logits.
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1)
+    pos = lb_c * block_size + lane                  # (1, Bs) virtual positions
+    valid = (pos <= qpos) & (pos < clen)            # (1, Bs)
+
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)         # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)   # (Bs, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        if logits_soft_cap is not None:
+            s = logits_soft_cap * jnp.tanh(s / logits_soft_cap)
+        s = jnp.where(valid, s, NEG_INF)            # (G, Bs)
+        m_prev = m_s[...]                           # (G, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(valid, p, 0.0)                # kill exp(NEG_INF - NEG_INF)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    # Dead-block skip: grid padding past the last virtual block, an
+    # unallocated table entry (-1), or a block whose first position is
+    # already past the causal horizon / ragged fill — append-only layout
+    # means position lb*Bs is the *earliest* in the tile, so one scalar
+    # compare replaces the contiguous kernel's min-reduction.
+    first = lb_c * block_size
+    alive = ((lb < num_virt_blocks) & (entry >= 0)
+             & (first <= qpos) & (first < clen))
+    pl.when(alive)(_update)
+
+    @pl.when(ibk == blocks_per_split - 1)
+    def _finalize():
+        acc_ref[0, 0, 0] = acc_s[...]
+        m_ref[0, 0, 0] = m_s[...][:, 0]
+        l_ref[0, 0, 0] = l_s[...][:, 0]
+
+
+def paged_flash_decode_partial(
+    q: jnp.ndarray,            # (B, 1, H, D)
+    k_cache: jnp.ndarray,      # (num_blocks, block_size, Hkv, D) physical
+    v_cache: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (B, NB) int32; -1 = unallocated
+    q_position: jnp.ndarray,    # (B,) int32 virtual (= absolute) position
+    *,
+    num_splits: int = DEFAULT_NUM_SPLITS,
+    interpret: bool = False,
+    cache_len: jnp.ndarray | None = None,   # (B,) ragged fill
+    logits_soft_cap: float | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Split-K decode attention through a block table (paged KV cache).
+
+    Same raw ``(acc, m, l)`` contract as ``flash_decode_partial``, but the
+    grid walks each row's *virtual* blocks and the K/V BlockSpec index map
+    resolves them to physical tiles via the scalar-prefetched block table —
+    the physical pool streams through VMEM one block at a time and no
+    per-row gather of the virtual sequence ever materializes. The KV tile
+    size is pinned to the pool's ``block_size`` (pick a TPU-friendly one:
+    a multiple of 128 lanes for production, anything for interpret tests).
+    """
+    b, _, h, d = q.shape
+    bs, hkv = k_cache.shape[1], k_cache.shape[2]
+    group = h // hkv
+    nb = block_tables.shape[1]
+    num_splits = max(min(num_splits, nb), 1)
+    bps = pl.cdiv(nb, num_splits)
+    sm_scale = d ** -0.5
+
+    qg = q[:, 0].reshape(b, hkv, group, d)
+    block_tables = block_tables.astype(jnp.int32)
+    qpos2d = q_position.astype(jnp.int32).reshape(b, 1)
+    if cache_len is None:
+        clen2d = jnp.full((b, 1), _FAR_FUTURE, jnp.int32)
+    else:
+        clen2d = cache_len.astype(jnp.int32).reshape(b, 1)
+
+    def kv_index(ib, ih, isp, ibk, tbl):
+        # Physical block for this step's virtual block; -1 (dead) and grid
+        # padding clamp to 0 — the kernel's `alive` guard skips compute.
+        lb = jnp.minimum(isp * bps + ibk, nb - 1)
+        return (jnp.maximum(tbl[ib, lb], 0), 0, ih, 0)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, sm_scale=sm_scale, block_size=bs,
+        blocks_per_split=bps, num_virt_blocks=nb,
+        logits_soft_cap=logits_soft_cap)
+
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, hkv, num_splits, bps),
+            in_specs=[
+                pl.BlockSpec((1, 1), lambda ib, ih, isp, ibk, tbl: (ib, 0)),
+                pl.BlockSpec((1, 1), lambda ib, ih, isp, ibk, tbl: (ib, 0)),
+                pl.BlockSpec((1, 1, group, d),
+                             lambda ib, ih, isp, ibk, tbl: (ib, ih, 0, 0)),
+                pl.BlockSpec((1, bs, 1, d), kv_index),
+                pl.BlockSpec((1, bs, 1, d), kv_index),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, 1, group, d),
+                             lambda ib, ih, isp, ibk, tbl: (ib, ih, isp, 0, 0)),
+                pl.BlockSpec((1, 1, 1, group),
+                             lambda ib, ih, isp, ibk, tbl: (ib, ih, isp, 0)),
+                pl.BlockSpec((1, 1, 1, group),
+                             lambda ib, ih, isp, ibk, tbl: (ib, ih, isp, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((group, d), jnp.float32),
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, 1), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, num_splits, group, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, num_splits, group), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, num_splits, group), jnp.float32),
+        ],
+        compiler_params=pc.compiler_params(
+            pc.PARALLEL, pc.PARALLEL, pc.PARALLEL, pc.ARBITRARY),
+        interpret=interpret,
+        name="lwm_paged_flash_decode",
+    )(block_tables, qpos2d, clen2d, qg, k_cache, v_cache)
+
+    return _merge_splits(acc, m, l, b, h, d)
+
+
+def paged_flash_decode(
+    q, k_cache, v_cache, block_tables, q_position, *,
+    num_splits: int = DEFAULT_NUM_SPLITS,
+    interpret: bool = False,
+    carry: tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray] | None = None,
+    out_dtype=None,
+    cache_len=None,
+    logits_soft_cap: float | None = None,
+):
+    """Normalized paged decode attention (B,1,H,D) -> (B,1,H,D)."""
+    partial = paged_flash_decode_partial(
+        q, k_cache, v_cache, block_tables, q_position,
+        num_splits=num_splits, interpret=interpret, cache_len=cache_len,
+        logits_soft_cap=logits_soft_cap)
+    if carry is not None:
+        partial = merge_partials(carry, partial)
+    acc, _, l = partial
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(out_dtype or q.dtype)
 
 
 def flash_decode(

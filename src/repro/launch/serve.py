@@ -34,6 +34,13 @@ def main(argv=None) -> int:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the block-paged KV pool (prefix "
+                         "sharing; attention-cache families only)")
+    ap.add_argument("--block-size", type=int, default=256,
+                    help="paged pool block size in tokens")
+    ap.add_argument("--decode-impl", default=None,
+                    choices=["auto", "pallas", "interpret", "xla", "ref"])
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -45,7 +52,9 @@ def main(argv=None) -> int:
     print(f"serving {cfg.name} ({cfg.family}) — "
           f"{model.param_count():,} params, max_len={args.max_len}")
 
-    eng = ServeEngine(cfg, params, max_len=args.max_len, seed=args.seed)
+    eng = ServeEngine(cfg, params, max_len=args.max_len, seed=args.seed,
+                      paged=args.paged, block_size=args.block_size,
+                      decode_impl=args.decode_impl)
     rng = np.random.default_rng(args.seed)
     reqs = [Request(
         prompt=rng.integers(16, cfg.vocab_size // 2,

@@ -91,6 +91,41 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
     return caches
 
 
+def paged_families(cfg: ModelConfig) -> bool:
+    """True iff every decode cache of this config is a plain attention KV
+    cache — the only layout the paged pool pages. Recurrent state (mamba /
+    rwkv / hybrid), MLA's asymmetric latents, and audio cross-attention
+    keep per-slot contiguous storage."""
+    return (cfg.family not in ("ssm", "hybrid", "audio")
+            and cfg.mla is None)
+
+
+def init_paged_caches(cfg: ModelConfig, num_blocks: int, block_size: int,
+                      ctx: RuntimeCtx = NULL_CTX) -> dict:
+    """Paged decode caches: per layer group, K/V physical block pools of
+    shape ``(count, num_blocks, block_size, Hkv, hd)`` shared by every
+    batch row through a block table. No ``positions`` leaf — the paged
+    layout is append-only, so a row's token j sits at virtual position j
+    and validity derives from the per-row ``cache_len`` alone."""
+    if not paged_families(cfg):
+        raise NotImplementedError(
+            f"paged KV cache supports attention-cache families only; "
+            f"{cfg.name} ({cfg.family}) keeps contiguous slots")
+    hd = cfg.resolved_head_dim
+    caches: dict[str, Any] = {}
+    for i, (kind, count) in enumerate(tfm.layer_groups(cfg)):
+        if count == 0:
+            continue
+        assert kind in ("attn_dense", "attn_moe"), kind
+        caches[f"layers_{i}_{kind}"] = {
+            "k": jnp.zeros((count, num_blocks, block_size, cfg.num_kv_heads,
+                            hd), cfg.compute_dtype),
+            "v": jnp.zeros((count, num_blocks, block_size, cfg.num_kv_heads,
+                            hd), cfg.compute_dtype),
+        }
+    return caches
+
+
 # ---------------------------------------------------------------------------
 # Decode attention (single token vs cache)
 # ---------------------------------------------------------------------------
@@ -130,12 +165,15 @@ def _decode_attend(cfg: ModelConfig, q, cache_k, cache_v, cache_pos,
 
 def _attn_decode_block(cfg: ModelConfig, p, x, cache, position,
                        ctx: RuntimeCtx, cross_kv=None, token_valid=None,
-                       cache_lens=None):
+                       cache_lens=None, block_tables=None):
     """One attention block decode step. x: (B,1,D).
 
     ``token_valid`` (B,) masks the cache write per row (continuous batching:
     pad columns of a prefill chunk and empty slots must not touch the
     cache); ``cache_lens`` (B,) bounds each row's attendable cache span.
+    With ``block_tables`` (B, NB) the cache leaves are the *paged* physical
+    block pools (num_blocks, block_size, Hkv, hd): writes scatter through
+    the table and attention gathers through it (implicit positions).
     """
     b = x.shape[0]
     hd = cfg.resolved_head_dim
@@ -150,6 +188,26 @@ def _attn_decode_block(cfg: ModelConfig, p, x, cache, position,
     h = norm1(x)
     pos2d = position[:, None]
     q, k_new, v_new = tfm._project_qkv(cfg, p["attn"], h, pos2d)
+    if block_tables is not None:
+        if ctx.decode_ring:
+            raise NotImplementedError(
+                "paged KV cache x ring-sharded decode is not implemented: "
+                "the block table indexes one device's physical pool (see "
+                "docs/serving.md, 'Paged cache')")
+        k_c, v_c = dec_mod.paged_cache_update(
+            cache["k"], cache["v"], k_new, v_new, position, block_tables,
+            valid=token_valid)
+        att = dec_mod.paged_decode_attention(
+            q, k_c, v_c, block_tables, q_position=position,
+            cache_len=cache_lens, logits_soft_cap=cfg.logits_soft_cap,
+            impl=ctx.decode_impl or cfg.decode_impl)
+        x = x + L.linear(att.reshape(b, 1, -1), p["attn"]["wo"])
+        h = norm2(x)
+        if "moe" in p:
+            ffn, _ = moe_mod.moe_apply(cfg, p["moe"], h, ctx)
+        else:
+            ffn = tfm.mlp_apply(cfg, p["mlp"], h)
+        return x + ffn, {"k": k_c, "v": v_c}
     k_c, v_c, pos_c = dec_mod.cache_update(
         cache["k"], cache["v"], cache["positions"], k_new, v_new, position,
         valid=token_valid)
@@ -211,6 +269,7 @@ def decode_step(
     ctx: RuntimeCtx = NULL_CTX,
     token_valid: jnp.ndarray | None = None,   # (B,) bool slot mask
     cache_lens: jnp.ndarray | None = None,    # (B,) ragged attendable span
+    block_tables: jnp.ndarray | None = None,  # (B, NB) paged block tables
 ) -> tuple[jnp.ndarray, dict]:
     """One autoregressive step. Returns (logits (B,1,V), new caches).
 
@@ -218,8 +277,15 @@ def decode_step(
     batching: a pad column / empty slot must not write); recurrent-state
     families additionally rely on the caller selecting old-vs-new caches per
     row (``prefill_step`` does). ``cache_lens`` threads the per-row ragged
-    cache span into decode attention.
+    cache span into decode attention. With ``block_tables`` the caches are
+    the paged physical block pools from ``init_paged_caches`` (attention
+    families only) and ``cache_lens`` is required.
     """
+    if block_tables is not None:
+        assert cache_lens is not None, "paged decode requires cache_lens"
+        if not paged_families(cfg):
+            raise NotImplementedError(
+                f"paged decode unsupported for family {cfg.family!r}")
     x = L.embed_lookup(params["embed"], token, cfg.compute_dtype)
     new_caches = dict(caches)
 
@@ -240,7 +306,8 @@ def decode_step(
                     lp, lc = pc
                     x, nc = _attn_decode_block(cfg, lp, x, lc, position, ctx,
                                                token_valid=token_valid,
-                                               cache_lens=cache_lens)
+                                               cache_lens=cache_lens,
+                                               block_tables=block_tables)
                     return x, nc
             elif kind == "dec_attn":
                 cross = caches["cross"]
@@ -365,6 +432,7 @@ def prefill_step(
     lengths: jnp.ndarray,      # (B,) valid tokens per row (0 = idle slot)
     *,
     ctx: RuntimeCtx = NULL_CTX,
+    block_tables: jnp.ndarray | None = None,  # (B, NB) paged block tables
 ) -> tuple[jnp.ndarray, dict]:
     """Append a multi-token chunk to each slot's cache through the decode
     path (continuous batching's chunked prefill).
@@ -381,6 +449,10 @@ def prefill_step(
     each row's logits at its *last valid* column — the next-token logits a
     sampler needs, whether the row decoded one token or just finished its
     prompt.
+
+    With ``block_tables`` the caches are the paged physical pools and every
+    per-column write scatters through the table — a chunk freely spans
+    block boundaries because each column resolves its own (block, offset).
     """
     b, c = tokens.shape
     offsets = offsets.astype(jnp.int32)
@@ -397,9 +469,14 @@ def prefill_step(
         pos = offsets + col
         lg, new_caches = decode_step(
             cfg, params, tok[:, None], caches, pos, ctx=ctx,
-            token_valid=valid, cache_lens=upper)
-        new_caches = jax.tree.map(
-            functools.partial(_select_rows, valid), new_caches, caches)
+            token_valid=valid, cache_lens=upper, block_tables=block_tables)
+        if block_tables is None:
+            # Per-row old/new select for recurrent-state families. Paged
+            # caches skip it: they are attention-only (the masked scatter
+            # already dropped invalid rows) and their physical leaves have
+            # no batch axis to select over.
+            new_caches = jax.tree.map(
+                functools.partial(_select_rows, valid), new_caches, caches)
         last = jnp.where(valid[:, None, None], lg, last)
         return (new_caches, last), None
 

@@ -1,5 +1,5 @@
 from repro.serve.engine import ServeEngine, Request, Result
-from repro.serve.pool import CachePool
+from repro.serve.pool import BlockAllocator, CachePool, PagedCachePool
 from repro.serve.scheduler import Scheduler, SlotState, StepPlan
 from repro.serve.sampling import (greedy, temperature_sample, cfg_logits,
                                   sample_batch)

@@ -38,7 +38,7 @@ from repro.models.config import ModelConfig
 from repro.models.context import NULL_CTX, RuntimeCtx
 from repro.models import decoding, transformer
 from repro.serve import sampling
-from repro.serve.pool import CachePool
+from repro.serve.pool import CachePool, PagedCachePool
 from repro.serve.scheduler import Scheduler
 
 
@@ -80,7 +80,9 @@ class ServeEngine:
                  ctx: RuntimeCtx = NULL_CTX, max_len: int = 4096,
                  bos_id: int = 0, seed: int = 0,
                  decode_impl: str | None = None,
-                 num_slots: int | None = None, prefill_chunk: int = 8):
+                 num_slots: int | None = None, prefill_chunk: int = 8,
+                 paged: bool = False, block_size: int = 256,
+                 num_blocks: int | None = None):
         """``decode_impl`` selects the decode-attention engine for every
         step this engine runs (overrides ``ctx.decode_impl`` and
         ``cfg.decode_impl``): "auto" (default) = the split-K Pallas
@@ -92,9 +94,21 @@ class ServeEngine:
         ``serve`` (default: per-call, min(len(requests), 8));
         ``prefill_chunk`` is the number of prompt tokens a prefilling slot
         consumes per interleaved step.
+
+        ``paged=True`` swaps the contiguous per-slot caches for the
+        block-paged pool (``PagedCachePool``): per-slot block tables over
+        ``num_blocks`` physical blocks of ``block_size`` tokens, with
+        refcounted copy-on-write prefix sharing and free-block admission
+        (``paged=False`` keeps the measured contiguous baseline).
+        Paged serving is single-device: it is incompatible with
+        ``ctx.decode_ring`` (the block table indexes one device's pool).
         """
         if decode_impl is not None:
             ctx = dataclasses.replace(ctx, decode_impl=decode_impl)
+        if paged and ctx.decode_ring:
+            raise NotImplementedError(
+                "paged KV cache x ring-sharded decode is unsupported; see "
+                "docs/serving.md ('Paged cache')")
         self.cfg = cfg
         self.params = params
         self.ctx = ctx
@@ -102,6 +116,9 @@ class ServeEngine:
         self.bos_id = bos_id
         self.num_slots = num_slots
         self.prefill_chunk = prefill_chunk
+        self.paged = paged
+        self.block_size = block_size
+        self.num_blocks = num_blocks
         self._base_key = jax.random.PRNGKey(seed)
         self._req_counter = 0
         self.stats: dict = {}
@@ -110,6 +127,13 @@ class ServeEngine:
         # (decode is the C == 1 case); compiled once per (slots, C) shape.
         self._step = jax.jit(functools.partial(
             decoding.prefill_step, cfg, ctx=ctx), donate_argnums=(2,))
+        # Paged twin: same step with the block tables threaded through
+        # (tables ride as a device arg, so table churn never recompiles).
+        self._step_paged = jax.jit(
+            lambda params, tokens, caches, offsets, lengths, tables:
+            decoding.prefill_step(cfg, params, tokens, caches, offsets,
+                                  lengths, ctx=ctx, block_tables=tables),
+            donate_argnums=(2,))
         # Single-token step for the static baseline's lockstep loop.
         self._decode = jax.jit(functools.partial(
             decoding.decode_step, cfg, ctx=ctx), donate_argnums=(2,))
@@ -135,8 +159,14 @@ class ServeEngine:
         n_slots = int(num_slots or self.num_slots or min(len(reqs), 8))
         chunk = int(prefill_chunk or self.prefill_chunk)
 
-        pool = CachePool(n_slots, cfg=self.cfg, max_len=self.max_len,
-                         ctx=self.ctx)
+        if self.paged:
+            pool = PagedCachePool(n_slots, cfg=self.cfg,
+                                  max_len=self.max_len,
+                                  block_size=self.block_size,
+                                  num_blocks=self.num_blocks, ctx=self.ctx)
+        else:
+            pool = CachePool(n_slots, cfg=self.cfg, max_len=self.max_len,
+                             ctx=self.ctx)
         sched = Scheduler(pool, prefill_chunk=chunk,
                           vocab_size=self.cfg.vocab_size, bos_id=self.bos_id)
         req_keys = []
@@ -147,15 +177,19 @@ class ServeEngine:
             self._req_counter += 1
         uncond_pool = None
         if any(r.cfg_scale is not None for r in reqs):
+            # The CFG unconditional branch stays on a contiguous pool even
+            # when the main pool is paged: it is <bos>-rooted and short, so
+            # paging buys nothing there.
             uncond_pool = CachePool(n_slots, cfg=self.cfg,
                                     max_len=self.max_len, ctx=self.ctx)
 
         results: list[Result | None] = [None] * len(reqs)
         stats = dict(engine="continuous", num_slots=n_slots,
-                     prefill_chunk=chunk, model_calls=0, scan_columns=0,
-                     token_slots=0, useful_tokens=0, prefill_tokens=0,
-                     decode_tokens=0, admissions=0, uncond_calls=0,
-                     uncond_token_slots=0)
+                     prefill_chunk=chunk, paged=self.paged, model_calls=0,
+                     scan_columns=0, token_slots=0, useful_tokens=0,
+                     prefill_tokens=0, decode_tokens=0, admissions=0,
+                     uncond_calls=0, uncond_token_slots=0,
+                     prefix_hit_tokens=0, peak_live_blocks=0)
         while True:
             for st in sched.retire():
                 results[st.req_id] = Result(
@@ -164,6 +198,8 @@ class ServeEngine:
                     finish_reason=st.finish_reason)
             admitted = sched.admit()
             stats["admissions"] += len(admitted)
+            stats["prefix_hit_tokens"] += sum(st.prefix_hit
+                                              for st in admitted)
             if uncond_pool is not None:
                 for st in admitted:
                     if st.req.cfg_scale is not None:
@@ -174,9 +210,17 @@ class ServeEngine:
             plan = sched.plan()
             if plan is None:        # only pre-finished slots; retire them
                 continue
-            logits, pool.caches = self._step(
-                self.params, jnp.asarray(plan.tokens), pool.caches,
-                jnp.asarray(plan.offsets), jnp.asarray(plan.lengths))
+            if self.paged:
+                stats["peak_live_blocks"] = max(stats["peak_live_blocks"],
+                                                pool.live_blocks)
+                logits, pool.caches = self._step_paged(
+                    self.params, jnp.asarray(plan.tokens), pool.caches,
+                    jnp.asarray(plan.offsets), jnp.asarray(plan.lengths),
+                    jnp.asarray(pool.block_tables))
+            else:
+                logits, pool.caches = self._step(
+                    self.params, jnp.asarray(plan.tokens), pool.caches,
+                    jnp.asarray(plan.offsets), jnp.asarray(plan.lengths))
             if uncond_pool is not None:
                 logits = self._cfg_combine(logits, sched, uncond_pool, stats)
             if any(sched.temperature[slot] > 0 for slot in sched.active):

@@ -19,19 +19,29 @@ replay admission policy against it without touching a device.
 """
 from __future__ import annotations
 
+import hashlib
+import heapq
+
 import jax
 import numpy as np
 
 from repro.models.context import NULL_CTX, RuntimeCtx
 
+# Cache-length bookkeeping is int32 end-to-end (the kernels consume int32
+# rows); the guard below rejects the 2^31 token boundary explicitly instead
+# of silently wrapping.
+INT32_MAX = np.iinfo(np.int32).max
+
 
 class CachePool:
+    paged = False   # PagedCachePool flips this; schedulers key off it
+
     def __init__(self, num_slots: int, *, cfg=None, max_len: int = 0,
                  ctx: RuntimeCtx = NULL_CTX):
         assert num_slots >= 1, "pool needs at least one slot"
         self.num_slots = num_slots
         self.max_len = max_len
-        self.cache_len = np.zeros(num_slots, np.int64)
+        self.cache_len = np.zeros(num_slots, np.int32)
         # pop() from the tail => lowest slot ids are handed out first.
         self._free = list(range(num_slots - 1, -1, -1))
         self.caches = None
@@ -70,8 +80,13 @@ class CachePool:
 
     def advance(self, slot: int, n: int) -> None:
         """Record ``n`` tokens written into the slot this step."""
-        self.cache_len[slot] += n
-        assert self.max_len == 0 or self.cache_len[slot] <= self.max_len, (
+        new = int(self.cache_len[slot]) + int(n)
+        if new > INT32_MAX:
+            raise OverflowError(
+                f"slot {slot}: cache_len {new} crosses the int32 boundary — "
+                "the decode kernels consume int32 cache-length rows")
+        self.cache_len[slot] = new
+        assert self.max_len == 0 or new <= self.max_len, (
             f"slot {slot} overflowed max_len={self.max_len}")
 
     # -- jitted slot reset -----------------------------------------------------
@@ -85,3 +100,309 @@ class CachePool:
             lambda f, t: jax.lax.dynamic_update_slice_in_dim(
                 f, t.astype(f.dtype), slot, axis=1),
             caches, template)
+
+
+# ---------------------------------------------------------------------------
+# Paged pool: block allocator + refcounted prefix sharing
+# ---------------------------------------------------------------------------
+
+class BlockAllocator:
+    """Refcounted free-list allocator over a fixed population of physical
+    cache blocks. ``alloc`` hands out a block at refcount 1, ``share`` adds
+    a reference (prefix sharing), ``deref`` drops one and returns the block
+    to the free list when the count hits zero. Host-pure — the hypothesis
+    property test in tests/test_serve_paged.py drives it with random
+    alloc/free/share/CoW sequences."""
+
+    def __init__(self, num_blocks: int):
+        assert num_blocks >= 1
+        self.num_blocks = num_blocks
+        self.ref = np.zeros(num_blocks, np.int32)
+        # Min-heap: lowest block ids are handed out first, and retiring a
+        # 1M-context slot (thousands of derefs) stays O(log n) per free.
+        self._free = list(range(num_blocks))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int | None:
+        if not self._free:
+            return None
+        blk = heapq.heappop(self._free)
+        assert self.ref[blk] == 0, f"block {blk} on free list with live refs"
+        self.ref[blk] = 1
+        return blk
+
+    def share(self, block: int) -> None:
+        assert self.ref[block] >= 1, f"sharing unreferenced block {block}"
+        self.ref[block] += 1
+
+    def deref(self, block: int) -> bool:
+        """Drop one reference; True iff the block was freed by this call."""
+        assert self.ref[block] >= 1, f"block {block} double-freed"
+        self.ref[block] -= 1
+        if self.ref[block] == 0:
+            heapq.heappush(self._free, block)
+            return True
+        return False
+
+
+def _chain_digest(parent: bytes, block_bytes: bytes) -> bytes:
+    """Content digest of one full block *in its prefix chain* — hashing the
+    parent digest ties a block to everything before it, so equal digests
+    mean equal whole-prefixes, not just equal block contents."""
+    return hashlib.sha1(parent + block_bytes).digest()
+
+
+class PagedCachePool(CachePool):
+    """Block-paged KV cache pool with refcounted copy-on-write prefix
+    sharing.
+
+    Physical storage is ``num_blocks`` fixed-size blocks per layer
+    (``decoding.init_paged_caches``: ``(count, num_blocks, block_size,
+    Hkv, hd)``), shared by every slot through per-slot *block tables*
+    ``(num_slots, blocks_per_slot)`` mapping virtual block index ->
+    physical block (-1 = unallocated). A slot's token j lives at virtual
+    position j, so a slot's resident footprint is ``ceil(live_tokens /
+    block_size)`` blocks instead of a contiguous ``max_len`` reservation —
+    admission is bounded by *live* tokens.
+
+    Prefix sharing: full prompt blocks register under a chained content
+    digest; a new prompt walks the registry and ``share``s every matched
+    block (refcount++), paying neither memory nor prefill compute for the
+    shared span. The partially-filled last block of a fully-matched prompt
+    is shared too and un-shared lazily: the first write into a block with
+    refcount > 1 copies it (``ensure_capacity``'s copy-on-write) so the
+    original's bytes are never clobbered.
+
+    ``PagedCachePool(...)`` without ``cfg`` is bookkeeping-only (no device
+    arrays) — the serve_paged benchmark replays the real scheduler against
+    it at 1M-token scale.
+    """
+
+    paged = True
+
+    def __init__(self, num_slots: int, *, cfg=None, max_len: int,
+                 block_size: int = 256, num_blocks: int | None = None,
+                 ctx: RuntimeCtx = NULL_CTX):
+        assert block_size >= 1 and max_len >= 1
+        super().__init__(num_slots, max_len=max_len)   # slot bookkeeping only
+        self.block_size = block_size
+        self.blocks_per_slot = -(-max_len // block_size)
+        self.num_blocks = (num_blocks if num_blocks is not None
+                           else num_slots * self.blocks_per_slot)
+        self.allocator = BlockAllocator(self.num_blocks)
+        self.block_tables = np.full((num_slots, self.blocks_per_slot), -1,
+                                    np.int32)
+        # digest-key -> live physical blocks holding that content (several
+        # slots may have raced identical prefills; keeping every copy means
+        # the prefix survives any one of them retiring), and the inverse
+        # for free-time cleanup. Keys: ("f", chain_digest) for full blocks;
+        # ("p", chain_digest, tail_bytes) for the partial prompt-tail block.
+        self._registry: dict[tuple, list[int]] = {}
+        self._block_key: dict[int, tuple] = {}
+        # Bumped on every registration/unregistration: lets the scheduler
+        # cache a queued request's prefix match instead of re-hashing its
+        # (possibly 1M-token) prompt every step it waits for admission.
+        self.registry_version = 0
+        # Per-slot registration cursor: (#full blocks registered, digest).
+        self._reg: dict[int, tuple[int, bytes]] = {}
+        # Admission reservations: blocks promised to an admitted slot but
+        # not yet allocated (chunked prefill draws them down). Without the
+        # ledger two admissions in one pass would double-count the same
+        # free blocks.
+        self._reserved: dict[int, int] = {}
+        self._copy_jit = None
+        if cfg is not None:
+            from repro.models import decoding  # lazy: keeps bookkeeping light
+            self.caches = decoding.init_paged_caches(
+                cfg, self.num_blocks, block_size, ctx)
+            self._copy_jit = jax.jit(self._copy_block, donate_argnums=(0,))
+
+    # -- slot lifecycle --------------------------------------------------------
+
+    def reset(self, slot: int) -> None:
+        """No device work: a freshly-allocated slot's table is empty and
+        ``cache_len`` masks any stale bytes in recycled physical blocks."""
+        assert (self.block_tables[slot] < 0).all(), (
+            f"slot {slot} reset with live blocks")
+        self.cache_len[slot] = 0
+        self._reg[slot] = (0, b"")
+
+    def free(self, slot: int) -> None:
+        for i in range(self.blocks_per_slot):
+            blk = int(self.block_tables[slot, i])
+            if blk >= 0:
+                self._deref_block(blk)
+                self.block_tables[slot, i] = -1
+        self._reg.pop(slot, None)
+        self._reserved.pop(slot, None)
+        super().free(slot)
+
+    def _deref_block(self, blk: int) -> None:
+        if self.allocator.deref(blk):          # freed: drop its registration
+            key = self._block_key.pop(blk, None)
+            if key is not None:
+                copies = self._registry[key]
+                copies.remove(blk)
+                if not copies:
+                    del self._registry[key]
+                self.registry_version += 1
+
+    # -- capacity --------------------------------------------------------------
+
+    def blocks_for(self, tokens: int) -> int:
+        return -(-tokens // self.block_size)
+
+    @property
+    def live_blocks(self) -> int:
+        return self.num_blocks - self.allocator.num_free
+
+    @property
+    def free_unreserved(self) -> int:
+        """Free blocks not already promised to an admitted slot — the
+        quantity admission compares against."""
+        return self.allocator.num_free - sum(self._reserved.values())
+
+    def reserve(self, slot: int, blocks: int) -> None:
+        self._reserved[slot] = max(blocks, 0)
+
+    def ensure_capacity(self, slot: int, new_len: int) -> bool:
+        """Make positions ``[cache_len, new_len)`` writable for ``slot``:
+        copy-on-write the current last block if it is shared, then allocate
+        every missing table entry up to ``new_len``. False (with no state
+        change) when the pool cannot supply the blocks."""
+        bs = self.block_size
+        if new_len > self.max_len:
+            return False
+        cur = int(self.cache_len[slot])
+        if new_len <= cur:
+            return True
+        first = cur // bs
+        last = (new_len - 1) // bs
+        # The next write lands inside an existing, partially-filled block:
+        # un-share it first so the write never touches another slot's bytes.
+        if cur % bs and self.block_tables[slot, first] >= 0:
+            blk = int(self.block_tables[slot, first])
+            if self.allocator.ref[blk] > 1:
+                copy = self.allocator.alloc()
+                if copy is None:
+                    return False
+                if self._copy_jit is not None:
+                    self.caches = self._copy_jit(self.caches, blk, copy)
+                self.allocator.deref(blk)      # ref > 1: never frees here
+                self.block_tables[slot, first] = copy
+                self._draw_reservation(slot)
+        newly: list[tuple[int, int, bool]] = []
+        for i in range(first, last + 1):
+            if self.block_tables[slot, i] < 0:
+                blk = self.allocator.alloc()
+                if blk is None:                # roll back this call's allocs
+                    for j, b, drew in newly:
+                        self.allocator.deref(b)
+                        self.block_tables[slot, j] = -1
+                        if drew:
+                            self._reserved[slot] += 1
+                    return False
+                self.block_tables[slot, i] = blk
+                newly.append((i, blk, self._draw_reservation(slot)))
+        return True
+
+    def _draw_reservation(self, slot: int) -> bool:
+        left = self._reserved.get(slot, 0)
+        if left:
+            self._reserved[slot] = left - 1
+        return bool(left)
+
+    # -- prefix sharing --------------------------------------------------------
+
+    def match_prefix(self, prompt: np.ndarray) -> tuple[int, list[int]]:
+        """Longest registered prefix of ``prompt``: walks full blocks down
+        the digest chain, then tries the partial-tail entry when every full
+        block matched. Returns (matched token count, physical blocks)."""
+        prompt = np.ascontiguousarray(prompt, np.int32)
+        bs = self.block_size
+        n_full = len(prompt) // bs
+        digest = b""
+        blocks: list[int] = []
+        for i in range(n_full):
+            nxt = _chain_digest(digest, prompt[i * bs:(i + 1) * bs].tobytes())
+            copies = self._registry.get(("f", nxt))
+            if not copies:
+                break
+            digest = nxt
+            blocks.append(copies[0])
+        if len(blocks) == n_full:
+            tail = prompt[n_full * bs:]
+            if len(tail):
+                copies = self._registry.get(("p", digest, tail.tobytes()))
+                if copies:
+                    blocks.append(copies[0])
+                    return n_full * bs + len(tail), blocks
+        return len(blocks) * bs, blocks
+
+    def adopt_prefix(self, slot: int, prompt: np.ndarray, matched: int,
+                     blocks: list[int]) -> None:
+        """Install a matched prefix into ``slot``: refcount++ each shared
+        block, point the table at them, and fast-forward ``cache_len`` and
+        the registration cursor past the shared span."""
+        if not blocks:
+            self.reset(slot)
+            return
+        assert matched <= INT32_MAX
+        prompt = np.ascontiguousarray(prompt, np.int32)
+        bs = self.block_size
+        for i, blk in enumerate(blocks):
+            self.allocator.share(blk)
+            self.block_tables[slot, i] = blk
+        self.cache_len[slot] = matched
+        n_full = min(matched // bs, len(blocks))
+        digest = b""
+        for i in range(n_full):
+            digest = _chain_digest(digest,
+                                   prompt[i * bs:(i + 1) * bs].tobytes())
+        self._reg[slot] = (n_full, digest)
+
+    def register_prefix(self, slot: int, consumed: np.ndarray, *,
+                        final: bool = False) -> None:
+        """Register ``slot``'s freshly-written prompt blocks for future
+        sharing. ``consumed`` is the prompt span written so far; call after
+        each committed prefill chunk (the per-slot cursor makes it
+        incremental). ``final`` additionally registers the partial tail.
+        First registration wins — a concurrent identical prompt that raced
+        its own prefill simply keeps its private copy."""
+        consumed = np.ascontiguousarray(consumed, np.int32)
+        bs = self.block_size
+        done, digest = self._reg.get(slot, (0, b""))
+        n_full = len(consumed) // bs
+        for i in range(done, n_full):
+            digest = _chain_digest(digest,
+                                   consumed[i * bs:(i + 1) * bs].tobytes())
+            self._register(("f", digest), int(self.block_tables[slot, i]))
+        self._reg[slot] = (n_full, digest)
+        if final and len(consumed) % bs:
+            tail = consumed[n_full * bs:]
+            self._register(("p", digest, tail.tobytes()),
+                           int(self.block_tables[slot, n_full]))
+
+    def _register(self, key: tuple, blk: int) -> None:
+        assert blk >= 0
+        if blk in self._block_key:     # adopted shared block: already listed
+            return
+        self._registry.setdefault(key, []).append(blk)
+        self._block_key[blk] = key
+        self.registry_version += 1
+
+    # -- jitted block copy (copy-on-write) -------------------------------------
+
+    @staticmethod
+    def _copy_block(caches, src, dst):
+        # Every paged leaf is (count, num_blocks, block_size, ...): splice
+        # one block along axis 1. src/dst stay traced so one compilation
+        # covers every copy-on-write.
+        return jax.tree.map(
+            lambda f: jax.lax.dynamic_update_slice_in_dim(
+                f, jax.lax.dynamic_slice_in_dim(f, src, 1, axis=1), dst,
+                axis=1),
+            caches)

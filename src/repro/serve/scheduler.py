@@ -20,6 +20,7 @@ analytic mode (a bookkeeping-only ``CachePool``).
 from __future__ import annotations
 
 import dataclasses
+import logging
 from collections import deque
 from typing import Any
 
@@ -29,6 +30,8 @@ from repro.serve.pool import CachePool
 
 PREFILL = "prefill"
 DECODE = "decode"
+
+logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -41,6 +44,8 @@ class SlotState:
     tokens: list = dataclasses.field(default_factory=list)   # generated
     next_token: int = -1       # decode input for the next step
     uncond_len: int = 0        # CFG unconditional-branch cache fill
+    max_new: int = 0           # admission-clamped generation budget
+    prefix_hit: int = 0        # prompt tokens skipped via shared blocks
     finish_reason: str | None = None   # "eos" | "length" | "cache_full"
 
     @property
@@ -70,6 +75,11 @@ class Scheduler:
         self.queue: deque[tuple[Any, int]] = deque()
         self.active: dict[int, SlotState] = {}
         self.finished: list[SlotState] = []
+        # Cached prefix match for the queue head: (req_id, registry
+        # version) -> (matched, blocks). Hashing a 1M-token prompt is not
+        # free, so a request waiting for admission only re-matches when the
+        # registry actually changed.
+        self._head_match: tuple | None = None
         b = pool.num_slots
         # Per-slot sampling params (vectorized sampler inputs), installed at
         # admission — every row applies its own request's knobs.
@@ -92,6 +102,16 @@ class Scheduler:
                 f"request {req_id}: prompt of {len(req.prompt)} tokens cannot "
                 f"fit a max_len={self.pool.max_len} cache slot (need >= 1 "
                 "decode position)")
+        if self.pool.paged:
+            # Even a fully-shared prefix occupies live physical blocks, so a
+            # prompt needing more blocks than the pool owns can NEVER become
+            # resident — admitting it would deadlock the queue head.
+            need = self.pool.blocks_for(len(req.prompt)) + 1
+            if need > self.pool.num_blocks:
+                raise ValueError(
+                    f"request {req_id}: prompt of {len(req.prompt)} tokens "
+                    f"needs {need} cache blocks (incl. decode headroom) but "
+                    f"the pool owns {self.pool.num_blocks}")
         self.queue.append((req, req_id))
 
     def retire(self) -> list[SlotState]:
@@ -103,16 +123,58 @@ class Scheduler:
         return done
 
     def admit(self) -> list[SlotState]:
-        """Move queued requests into free slots (mid-flight admission)."""
+        """Move queued requests into free slots (mid-flight admission).
+
+        Paged pools admit by *free-block count*: the head request's prompt
+        is first matched against the prefix registry (shared blocks cost
+        nothing), and admission requires enough free blocks for the
+        unshared prompt span plus one decode block — head-of-line FIFO, so
+        a large request waits rather than being starved by later small
+        ones. Every admission also clamps the generation budget so
+        ``prompt + max_new`` fits the slot's capacity (truncated with a
+        logged reason instead of dying mid-flight on the overflow assert).
+        """
         newly = []
         while self.queue:
+            if self.pool.num_free == 0:
+                break               # no slot: skip the (hashing) match work
+            req, req_id = self.queue[0]
+            matched, blocks = 0, []
+            if self.pool.paged:
+                matched, blocks = self._match_head(req, req_id)
+                # Keep >= 1 prompt token to run: its logits seed sampling.
+                matched = min(matched, len(req.prompt) - 1)
+                bs = self.pool.block_size
+                keep = blocks[:matched // bs]
+                if matched % bs:
+                    keep.append(blocks[matched // bs])
+                blocks = keep
+                needed = (self.pool.blocks_for(len(req.prompt))
+                          - len(blocks) + 1)
+                if self.pool.free_unreserved < needed:
+                    break               # admission bounded by live tokens
             slot = self.pool.alloc()
             if slot is None:
                 break
-            req, req_id = self.queue.popleft()
+            self.queue.popleft()
             self.pool.reset(slot)
             st = SlotState(req=req, req_id=req_id, slot=slot)
+            if self.pool.paged:
+                self.pool.reserve(slot, needed)
+                if blocks:
+                    self.pool.adopt_prefix(slot, req.prompt, matched, blocks)
+                    st.cursor = matched  # shared span skips prefill compute
+                    st.prefix_hit = matched
             self.active[slot] = st
+            st.max_new = req.max_new_tokens
+            cap = self.pool.max_len
+            if cap and len(req.prompt) + st.max_new > cap:
+                st.max_new = cap - len(req.prompt)
+                logger.warning(
+                    "request %d: prompt %d + max_new %d exceeds cache "
+                    "capacity %d; generation truncated to %d tokens",
+                    req_id, len(req.prompt), req.max_new_tokens, cap,
+                    st.max_new)
             self.temperature[slot] = req.temperature or 0.0
             self.top_k[slot] = req.top_k if req.top_k else self.vocab_size
             self.eos[slot] = req.eos_id if req.eos_id is not None else -1
@@ -121,10 +183,21 @@ class Scheduler:
             self.has_cfg[slot] = req.cfg_scale is not None
             lo, hi = req.vision_range or (0, self.vocab_size)
             self.vision_lo[slot], self.vision_hi[slot] = lo, hi
-            if req.max_new_tokens < 1:
+            if st.max_new < 1:
                 st.finish_reason = "length"   # nothing to generate; retire
             newly.append(st)
         return newly
+
+    def _match_head(self, req, req_id: int) -> tuple[int, list[int]]:
+        """Prefix-match the queue head against the registry, cached by
+        (request, registry version): a request that waits several steps for
+        blocks re-hashes its prompt only when the registry changed."""
+        tag = (req_id, self.pool.registry_version)
+        if self._head_match and self._head_match[0] == tag:
+            return self._head_match[1]
+        result = self.pool.match_prefix(req.prompt)
+        self._head_match = (tag, result)
+        return result
 
     @property
     def has_work(self) -> bool:
@@ -158,6 +231,16 @@ class Scheduler:
             offsets[slot] = self.pool.cache_len[slot]
             if st.phase == PREFILL:
                 take = min(c, len(st.req.prompt) - st.cursor)
+            else:
+                take = 1
+            if self.pool.paged and not self.pool.ensure_capacity(
+                    slot, int(self.pool.cache_len[slot]) + take):
+                # Mid-flight block exhaustion: retire with what we have
+                # (admission reserves full-prompt capacity, so this only
+                # fires when decode blocks outrun an over-committed pool).
+                st.finish_reason = "cache_full"
+                continue
+            if st.phase == PREFILL:
                 tokens[slot, :take] = st.req.prompt[st.cursor:st.cursor + take]
                 lengths[slot] = take
                 is_prefill[slot] = True
@@ -168,6 +251,8 @@ class Scheduler:
                 tokens[slot, 0] = st.next_token
                 lengths[slot] = 1
                 sample_rows[slot] = True
+        if not lengths.any():
+            return None                 # every runnable row just retired
         return StepPlan(tokens=tokens, offsets=offsets, lengths=lengths,
                         is_prefill=is_prefill, sample_rows=sample_rows,
                         columns=c)
@@ -183,6 +268,12 @@ class Scheduler:
             self.pool.advance(slot, n)
             if plan.is_prefill[slot]:
                 st.cursor += n
+                if self.pool.paged:
+                    # Freshly-written full prompt blocks become shareable;
+                    # the partial tail registers once the prompt completes.
+                    self.pool.register_prefix(
+                        slot, st.req.prompt[:st.cursor],
+                        final=st.cursor == len(st.req.prompt))
             if not plan.sample_rows[slot]:
                 continue
             tok = int(sampled[slot])
@@ -190,7 +281,7 @@ class Scheduler:
             st.next_token = tok
             if self.eos[slot] >= 0 and tok == self.eos[slot]:
                 st.finish_reason = "eos"
-            elif len(st.tokens) >= st.req.max_new_tokens:
+            elif len(st.tokens) >= st.max_new:
                 st.finish_reason = "length"
             elif (self.pool.max_len
                   and self.pool.cache_len[slot] + 1 > self.pool.max_len):

@@ -1,0 +1,332 @@
+"""Paged KV-cache serving: allocator invariants and token parity.
+
+Acceptance-level guarantees for the paged-pool refactor:
+
+  * allocator soundness — a hypothesis property test drives random
+    alloc/free/share/CoW sequences against ``PagedCachePool`` bookkeeping
+    and asserts no double-free, refcounts equal to live table references,
+    and freed blocks returning to the free list;
+  * paged == contiguous — the paged engine produces exactly the contiguous
+    slot engine's greedy tokens under ``decode_impl`` "xla" AND
+    "interpret", including chunked prefill spanning block boundaries and
+    shared-prefix requests that diverge after the fork point;
+  * the paged split-K kernel (block-table scalar prefetch) agrees with the
+    explicit block-gather oracle and with the contiguous decode oracle;
+  * admission-time length check — a request whose ``prompt + max_new``
+    exceeds capacity is truncated at admit time (logged) instead of dying
+    mid-flight on the pool overflow assert;
+  * cache-length bookkeeping is int32 end-to-end with an explicit overflow
+    guard at the 2^31 token boundary.
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies
+
+from repro.configs import get_reduced
+from repro.core import decode as dec
+from repro.models import decoding
+from repro.serve import PagedCachePool, Request, ServeEngine
+
+IMPLS = ["xla", "interpret"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced("lwm-7b")
+    from repro.models.registry import build_model
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Allocator / pool bookkeeping property test (host-side, no model).
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(strategies.integers(0, 2 ** 31 - 1))
+def test_block_allocator_properties(seed):
+    """Random alloc/free/share/CoW sequences keep the pool sound: refcounts
+    match the live references we hold, nothing double-frees, and every
+    freed block is reusable again."""
+    rng = random.Random(seed)
+    pool = PagedCachePool(4, max_len=64, block_size=4,
+                          num_blocks=rng.randint(4, 24))
+    alloc = pool.allocator
+    shadow: dict[int, int] = {}     # block -> references we believe we hold
+
+    for _ in range(200):
+        op = rng.random()
+        live = [b for b, r in shadow.items() if r > 0]
+        if op < 0.40 or not live:
+            blk = alloc.alloc()
+            if blk is None:
+                assert alloc.num_free == 0
+            else:
+                assert shadow.get(blk, 0) == 0, "allocated a live block"
+                shadow[blk] = 1
+        elif op < 0.60:
+            blk = rng.choice(live)
+            alloc.share(blk)                      # prefix adoption
+            shadow[blk] += 1
+        elif op < 0.85:
+            blk = rng.choice(live)
+            freed = alloc.deref(blk)              # slot retire
+            shadow[blk] -= 1
+            assert freed == (shadow[blk] == 0)
+        else:
+            # copy-on-write: deref the shared original, alloc a fresh copy
+            shared = [b for b in live if shadow[b] > 1]
+            if shared:
+                blk = rng.choice(shared)
+                copy = alloc.alloc()
+                if copy is not None:
+                    shadow[copy] = 1
+                    assert not alloc.deref(blk)   # ref > 1 never frees
+                    shadow[blk] -= 1
+        # invariants after every op
+        live_refs = {b: r for b, r in shadow.items() if r > 0}
+        assert {b: int(alloc.ref[b]) for b in live_refs} == live_refs
+        assert (alloc.ref >= 0).all()
+        assert alloc.num_free == alloc.num_blocks - len(live_refs)
+        for b in alloc._free:
+            assert alloc.ref[b] == 0
+
+    for b, r in sorted(shadow.items()):
+        for _ in range(r):
+            alloc.deref(b)
+    assert alloc.num_free == alloc.num_blocks    # everything returned
+
+
+def test_pool_prefix_share_and_free_bookkeeping():
+    """match/adopt/register/free keep table references, refcounts, and the
+    registry consistent; the registry never points at a dead block."""
+    pool = PagedCachePool(3, max_len=32, block_size=4)
+    prompt = np.arange(100, 111, dtype=np.int32)  # 11 tokens: 2 full + 3 tail
+
+    s0 = pool.alloc()
+    pool.reset(s0)
+    assert pool.ensure_capacity(s0, 11)
+    pool.advance(s0, 11)
+    pool.register_prefix(s0, prompt, final=True)
+    assert pool.live_blocks == 3
+    assert len(pool._registry) == 3              # 2 full + 1 partial
+
+    matched, blocks = pool.match_prefix(prompt)
+    assert matched == 11 and len(blocks) == 3
+    s1 = pool.alloc()
+    pool.reset(s1)
+    pool.adopt_prefix(s1, prompt, 10, blocks[:3])   # capped at len - 1
+    assert pool.cache_len[s1] == 10
+    assert pool.live_blocks == 3                 # fully shared, no new blocks
+    assert (pool.allocator.ref[blocks] == 2).all()
+
+    # CoW: s1's next write lands in the shared tail block -> private copy
+    assert pool.ensure_capacity(s1, 11)
+    tail = int(pool.block_tables[s1, 2])
+    assert tail != blocks[2] and pool.allocator.ref[tail] == 1
+    assert pool.allocator.ref[blocks[2]] == 1    # deref'd, s0 still owns it
+    assert pool.live_blocks == 4
+
+    pool.free(s0)
+    # s0's private tail freed and unregistered; shared full blocks survive
+    # because s1 still references them (and they stay matchable).
+    assert pool.live_blocks == 3
+    m2, b2 = pool.match_prefix(prompt)
+    assert m2 == 8 and b2 == blocks[:2]
+    pool.free(s1)
+    assert pool.live_blocks == 0 and not pool._registry
+    assert pool.allocator.num_free == pool.num_blocks
+
+
+def test_paged_admission_bounded_by_free_blocks():
+    """The scheduler admits by free-block count: a prompt that does not fit
+    the remaining blocks waits (head-of-line) until a retire frees them."""
+    from repro.serve import Scheduler
+    pool = PagedCachePool(2, max_len=32, block_size=4, num_blocks=6)
+    sched = Scheduler(pool, prefill_chunk=4, vocab_size=16)
+    sched.submit(Request(prompt=np.arange(12, dtype=np.int32),
+                         max_new_tokens=2), 0)   # 3 blocks + 1 headroom
+    sched.submit(Request(prompt=np.arange(50, 60, dtype=np.int32),
+                         max_new_tokens=2), 1)   # 3 blocks + 1 headroom
+    admitted = sched.admit()
+    assert [st.req_id for st in admitted] == [0]   # free slots, but no blocks
+    fake = np.ones(pool.num_slots, np.int32)
+    while sched.active.get(admitted[0].slot) is not None:
+        plan = sched.plan()
+        if plan is None:
+            break
+        sched.commit(plan, fake)
+        sched.retire()
+        if sched.admit():
+            break
+    assert any(st.req_id == 1 for st in sched.active.values())
+
+
+# ---------------------------------------------------------------------------
+# Paged kernel parity vs the gather oracle and the contiguous oracle.
+# ---------------------------------------------------------------------------
+
+def test_paged_decode_parity_across_impls(rng):
+    b, h, hkv, d = 3, 4, 2, 32
+    bs, nb, nphys = 8, 5, 12
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (b, 1, h, d))
+    kp = jax.random.normal(ks[1], (nphys, bs, hkv, d))
+    vp = jax.random.normal(ks[2], (nphys, bs, hkv, d))
+    rows = [[3, 1, 7], [0, 2], [11]]
+    tbl = np.full((b, nb), -1, np.int32)
+    for r, blocks in enumerate(rows):
+        tbl[r, :len(blocks)] = blocks
+    tbl = jnp.asarray(tbl)
+    clen = jnp.asarray([19, 16, 3], jnp.int32)
+    qpos = clen - 1
+    outs = {impl: dec.paged_decode_attention(
+        q, kp, vp, tbl, q_position=qpos, cache_len=clen, impl=impl)
+        for impl in IMPLS}
+    np.testing.assert_allclose(np.asarray(outs["interpret"], np.float32),
+                               np.asarray(outs["xla"], np.float32),
+                               atol=2e-5, rtol=1e-4)
+    # contiguous oracle per row: gather the virtual cache by hand
+    for r, blocks in enumerate(rows):
+        kc = jnp.concatenate([kp[x] for x in blocks])[None]
+        vc = jnp.concatenate([vp[x] for x in blocks])[None]
+        pos = jnp.arange(kc.shape[1], dtype=jnp.int32)[None]
+        ref = dec.decode_attention_unsharded(
+            q[r:r + 1], kc, vc, kv_positions=pos, q_position=qpos[r:r + 1],
+            impl="xla", cache_len=clen[r:r + 1])
+        np.testing.assert_allclose(np.asarray(outs["xla"][r:r + 1]),
+                                   np.asarray(ref), atol=2e-5, rtol=1e-4)
+
+
+def test_paged_cache_update_masked_scatter(rng):
+    hkv, d, bs, nphys, nb = 2, 8, 4, 6, 3
+    ks = jax.random.split(rng, 4)
+    kp = jax.random.normal(ks[0], (nphys, bs, hkv, d))
+    vp = jax.random.normal(ks[1], (nphys, bs, hkv, d))
+    knew = jax.random.normal(ks[2], (3, 1, hkv, d))
+    vnew = jax.random.normal(ks[3], (3, 1, hkv, d))
+    tbl = jnp.asarray([[2, 4, -1], [5, -1, -1], [0, 1, 3]], jnp.int32)
+    pos = jnp.asarray([6, 4, 2], jnp.int32)   # rows: blk1+2, dead blk, blk0+2
+    valid = jnp.asarray([True, True, False])
+    k2, v2 = dec.paged_cache_update(kp, vp, knew, vnew, pos, tbl, valid=valid)
+    want_k = kp.at[4, 2].set(knew[0, 0])      # row0 -> phys 4, offset 2
+    np.testing.assert_array_equal(np.asarray(k2), np.asarray(want_k))
+    want_v = vp.at[4, 2].set(vnew[0, 0])      # row1 dead entry, row2 invalid
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(want_v))
+
+
+# ---------------------------------------------------------------------------
+# Engine-level greedy parity: paged vs contiguous, both decode impls.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_paged_matches_contiguous_with_shared_prefixes(setup, impl):
+    """Mixed workload with an identical-prompt pair and a shared-prefix
+    pair diverging after the fork point; prompts and chunk sizes straddle
+    block boundaries (bs=8, chunk=4, prompt lens 21/9). Paged tokens must
+    equal the contiguous engine's exactly."""
+    cfg, params = setup
+    p_shared = np.arange(10, 31, dtype=np.int32)           # 21 tokens
+    reqs = [Request(prompt=p_shared, max_new_tokens=4),
+            Request(prompt=p_shared.copy(), max_new_tokens=5),
+            Request(prompt=np.concatenate([p_shared[:16],
+                                           np.arange(70, 75)]).astype(
+                np.int32), max_new_tokens=4),              # forks after 16
+            Request(prompt=np.arange(40, 49, dtype=np.int32),
+                    max_new_tokens=3)]
+    cont = ServeEngine(cfg, params, max_len=48, decode_impl=impl).serve(
+        reqs, num_slots=2, prefill_chunk=4)
+    eng = ServeEngine(cfg, params, max_len=48, decode_impl=impl,
+                      paged=True, block_size=8)
+    pag = eng.serve(reqs, num_slots=2, prefill_chunk=4)
+    for c, p in zip(cont, pag):
+        np.testing.assert_array_equal(c.tokens, p.tokens)
+    assert eng.stats["paged"] is True
+    assert eng.stats["prefix_hit_tokens"] > 0   # sharing actually engaged
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_paged_cow_divergence_after_full_tail_share(setup, impl):
+    """A twin of a still-decoding request adopts its full prompt (incl. the
+    partially-filled tail block) and copy-on-writes on its first write; the
+    original has meanwhile appended decode tokens into that same physical
+    block. Both streams must match their solo runs."""
+    cfg, params = setup
+    p_long = np.arange(10, 31, dtype=np.int32)
+    r_long = Request(prompt=p_long, max_new_tokens=12)
+    r_mid = Request(prompt=np.arange(50, 62, dtype=np.int32),
+                    max_new_tokens=6)
+    r_twin = Request(prompt=p_long.copy(), max_new_tokens=6)
+    base = ServeEngine(cfg, params, max_len=64, decode_impl=impl)
+    solo = [base.serve([r], num_slots=1)[0].tokens
+            for r in (r_long, r_mid, r_twin)]
+    eng = ServeEngine(cfg, params, max_len=64, decode_impl=impl,
+                      paged=True, block_size=8)
+    out = eng.serve([r_long, r_mid, r_twin], num_slots=2, prefill_chunk=4)
+    for got, want in zip(out, solo):
+        np.testing.assert_array_equal(got.tokens, want)
+    assert eng.stats["prefix_hit_tokens"] >= 20   # 2 full blocks + tail - 1
+
+
+def test_paged_midflight_block_exhaustion_retires_cache_full(setup):
+    """With decode headroom under-provisioned, a slot that outruns the free
+    blocks mid-decode retires as "cache_full" instead of crashing."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, max_len=32, decode_impl="xla",
+                      paged=True, block_size=4, num_blocks=3)
+    res = eng.serve([Request(prompt=np.arange(10, 17, dtype=np.int32),
+                             max_new_tokens=20)], num_slots=1)[0]
+    assert res.finish_reason == "cache_full"
+    assert 0 < len(res.tokens) < 20   # 3 blocks = 12 positions, prompt 7
+
+
+def test_paged_submit_rejects_never_fitting_prompt():
+    """A prompt needing more blocks than the whole pool owns can never be
+    resident (shared blocks are live blocks too); it must be rejected at
+    submit instead of deadlocking the queue head forever."""
+    from repro.serve import Scheduler
+    pool = PagedCachePool(1, max_len=64, block_size=4, num_blocks=3)
+    sched = Scheduler(pool, prefill_chunk=4, vocab_size=16)
+    with pytest.raises(ValueError, match="cache blocks"):
+        sched.submit(Request(prompt=np.arange(20, dtype=np.int32),
+                             max_new_tokens=2), 0)
+
+
+def test_paged_rejects_recurrent_families():
+    cfg = get_reduced("zamba2-7b")   # hybrid: mamba state has no pages
+    with pytest.raises(NotImplementedError):
+        decoding.init_paged_caches(cfg, num_blocks=4, block_size=4)
+
+
+# ---------------------------------------------------------------------------
+# Satellites: admission-time length check, int32 bookkeeping.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_admission_truncates_oversized_generation(setup, paged):
+    """prompt + max_new > capacity used to sail past admission and die on
+    the pool overflow assert mid-flight; it must now be clamped at admit
+    time and finish as "length" with exactly the capacity's tokens."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, max_len=16, decode_impl="xla",
+                      paged=paged, block_size=4)
+    res = eng.serve([Request(prompt=np.arange(10, 22, dtype=np.int32),
+                             max_new_tokens=50)], num_slots=1)[0]
+    assert res.finish_reason == "length"
+    assert len(res.tokens) == 16 - 12
+
+
+def test_cache_len_int32_with_overflow_guard():
+    from repro.serve import CachePool
+    for pool in (CachePool(2), PagedCachePool(2, max_len=8, block_size=4)):
+        assert pool.cache_len.dtype == np.int32
+        pool.cache_len[0] = np.iinfo(np.int32).max - 1
+        with pytest.raises(OverflowError):
+            pool.advance(0, 2)
+        pool.cache_len[0] = 0

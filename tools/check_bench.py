@@ -18,6 +18,12 @@ claims rest on:
     the static lockstep engine on the measured mixed workload with greedy
     token-level parity between the two, and the analytic 1M-context row
     must show the same strict ordering.
+  * BENCH_serve_paged.json — the paged cache pool must hold strictly fewer
+    resident KV bytes than the contiguous slot pool on the measured
+    shared-prefix workload with exact greedy token parity, and the
+    1M-context shared-prefix analytic row must show >= 8x resident bytes
+    per concurrent request with replayed token counts matching the
+    contiguous baseline.
   * BENCH_context_stages.json — every measured ladder stage reports a
     positive tok/s under a real stage policy; the accumulation-on/off pair
     consumed identical token budgets; and at every full-scale Appendix-F
@@ -146,6 +152,53 @@ def check_serve_batching() -> None:
            "serve_batching: the 1M-context analytic_paper_stage row is gone")
 
 
+def check_serve_paged() -> None:
+    rows = _load("BENCH_serve_paged.json")
+    if rows is None:
+        return
+    measured = 0
+    stage_rows = 0
+    for row in rows or []:
+        if "analytic_paper_stage" in row:
+            stage = row["analytic_paper_stage"]
+            stage_rows += 1
+            delta = stage.get("delta", {})
+            # Fail-closed defaults: a missing/renamed key must FAIL the gate.
+            _check(delta.get("tokens_match") is True,
+                   "serve_paged[1M-analytic]: paged replay token count no "
+                   "longer matches the contiguous baseline")
+            _check(delta.get("paged_strictly_fewer_resident_bytes") is True,
+                   "serve_paged[1M-analytic]: delta flag lost the strict "
+                   "bytes ordering")
+            _check(stage.get("paged", {}).get(
+                       "resident_kv_bytes_per_request", 10 ** 18)
+                   < stage.get("contiguous", {}).get(
+                       "resident_kv_bytes_per_request", -1),
+                   "serve_paged[1M-analytic]: paged resident bytes per "
+                   "request no longer undercut the contiguous reservation")
+            _check(delta.get("bytes_per_request_reduction", 0.0) >= 8.0,
+                   "serve_paged[1M-analytic]: shared-prefix residency "
+                   "reduction fell below 8x")
+            continue
+        measured += 1
+        delta = row.get("delta", {})
+        _check(delta.get("tokens_match") is True,
+               "serve_paged[measured]: paged and contiguous engines no "
+               "longer produce identical greedy tokens")
+        _check(delta.get("paged_strictly_fewer_resident_bytes") is True,
+               "serve_paged[measured]: delta flag lost the strict ordering")
+        _check(row.get("paged", {}).get("resident_kv_bytes", 10 ** 18)
+               < row.get("contiguous", {}).get("resident_kv_bytes", -1),
+               "serve_paged[measured]: paged resident KV bytes no longer "
+               "undercut the contiguous reservation")
+        _check(row.get("paged", {}).get("prefix_hit_tokens", 0) > 0,
+               "serve_paged[measured]: prefix sharing never engaged "
+               "(registry regression?)")
+    _check(measured >= 1, "serve_paged: no measured row at all")
+    _check(stage_rows >= 1,
+           "serve_paged: the 1M-context analytic_paper_stage row is gone")
+
+
 def check_context_stages() -> None:
     rows = _load("BENCH_context_stages.json")
     if rows is None:
@@ -196,6 +249,7 @@ def main() -> int:
     check_ring_fused()
     check_decode_fused()
     check_serve_batching()
+    check_serve_paged()
     check_context_stages()
     if _errors:
         for e in _errors:
@@ -203,7 +257,8 @@ def main() -> int:
         return 1
     print("ok: committed BENCH_*.json accounting holds (fused beats xla; no "
           "materialized logits buffers; continuous batching wastes fewer "
-          "pad-token steps than static; stage-boundary reshard beats "
+          "pad-token steps than static; paged cache beats contiguous "
+          "residency with token parity; stage-boundary reshard beats "
           "replicate with accum token parity)")
     return 0
 
