@@ -41,6 +41,17 @@ def main(argv=None) -> int:
                     help="paged pool block size in tokens")
     ap.add_argument("--decode-impl", default=None,
                     choices=["auto", "pallas", "interpret", "xla", "ref"])
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="re-attempts of a failed jitted step "
+                         "(capped exponential backoff)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock budget; past it the "
+                         "request retires with finish_reason='deadline'")
+    ap.add_argument("--preemption", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="evict-and-replay the lowest-priority request "
+                         "under paged-pool pressure instead of killing the "
+                         "requester (--no-preemption restores kill)")
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -54,7 +65,10 @@ def main(argv=None) -> int:
 
     eng = ServeEngine(cfg, params, max_len=args.max_len, seed=args.seed,
                       paged=args.paged, block_size=args.block_size,
-                      decode_impl=args.decode_impl)
+                      decode_impl=args.decode_impl,
+                      max_retries=args.max_retries,
+                      deadline_s=args.deadline_s,
+                      preemption=args.preemption)
     rng = np.random.default_rng(args.seed)
     reqs = [Request(
         prompt=rng.integers(16, cfg.vocab_size // 2,

@@ -1,5 +1,7 @@
 from repro.serve.engine import ServeEngine, Request, Result
+from repro.serve.faults import FaultPlan, InjectedFault
 from repro.serve.pool import BlockAllocator, CachePool, PagedCachePool
-from repro.serve.scheduler import Scheduler, SlotState, StepPlan
+from repro.serve.scheduler import (PendingRequest, Scheduler, SlotState,
+                                   StepPlan)
 from repro.serve.sampling import (greedy, temperature_sample, cfg_logits,
-                                  sample_batch)
+                                  sample_batch, nonfinite_rows, poison_rows)

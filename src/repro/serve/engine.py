@@ -29,6 +29,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
+import time
 
 import jax
 import jax.numpy as jnp
@@ -38,8 +40,11 @@ from repro.models.config import ModelConfig
 from repro.models.context import NULL_CTX, RuntimeCtx
 from repro.models import decoding, transformer
 from repro.serve import sampling
+from repro.serve.faults import FaultPlan, InjectedFault
 from repro.serve.pool import CachePool, PagedCachePool
 from repro.serve.scheduler import Scheduler
+
+logger = logging.getLogger(__name__)
 
 
 def _finish_stats(stats: dict) -> dict:
@@ -65,6 +70,8 @@ class Request:
     eos_id: int | None = None
     cfg_scale: float | None = None        # classifier-free guidance
     vision_range: tuple[int, int] | None = None
+    priority: int = 0                     # higher keeps blocks under pressure
+    deadline_s: float | None = None       # wall-clock budget (None = engine's)
 
 
 @dataclasses.dataclass
@@ -72,7 +79,9 @@ class Result:
     tokens: np.ndarray                    # generated tokens (without prompt)
     steps: int
     prefill_len: int
-    finish_reason: str | None = None      # "eos" | "length" | "cache_full"
+    finish_reason: str | None = None
+    # "eos" | "length" | "cache_full" | "error" | "deadline"
+    preemptions: int = 0                  # times this request was evicted
 
 
 class ServeEngine:
@@ -82,7 +91,12 @@ class ServeEngine:
                  decode_impl: str | None = None,
                  num_slots: int | None = None, prefill_chunk: int = 8,
                  paged: bool = False, block_size: int = 256,
-                 num_blocks: int | None = None):
+                 num_blocks: int | None = None, max_retries: int = 2,
+                 retry_backoff_s: float = 0.05,
+                 retry_backoff_cap_s: float = 2.0,
+                 deadline_s: float | None = None, preemption: bool = True,
+                 max_preemptions: int = 8,
+                 faults: FaultPlan | None = None):
         """``decode_impl`` selects the decode-attention engine for every
         step this engine runs (overrides ``ctx.decode_impl`` and
         ``cfg.decode_impl``): "auto" (default) = the split-K Pallas
@@ -102,6 +116,18 @@ class ServeEngine:
         (``paged=False`` keeps the measured contiguous baseline).
         Paged serving is single-device: it is incompatible with
         ``ctx.decode_ring`` (the block table indexes one device's pool).
+
+        Fault tolerance (see docs/serving.md, "Failure handling"):
+        ``max_retries`` bounds re-attempts of a failed jitted step, backed
+        off ``retry_backoff_s * 2**attempt`` capped at
+        ``retry_backoff_cap_s``; ``deadline_s`` is a per-request wall-clock
+        budget (overridable per ``Request.deadline_s``) after which the
+        request retires "deadline" wherever it is; ``preemption=True`` lets
+        the scheduler evict-and-replay the lowest-priority slot when the
+        paged pool runs out of blocks (up to ``max_preemptions`` per
+        request) instead of killing the requester; ``faults`` attaches a
+        deterministic ``serve.faults.FaultPlan`` (single ``serve()`` run —
+        its schedule is consumed as it fires).
         """
         if decode_impl is not None:
             ctx = dataclasses.replace(ctx, decode_impl=decode_impl)
@@ -119,6 +145,13 @@ class ServeEngine:
         self.paged = paged
         self.block_size = block_size
         self.num_blocks = num_blocks
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.retry_backoff_cap_s = retry_backoff_cap_s
+        self.deadline_s = deadline_s
+        self.preemption = preemption
+        self.max_preemptions = max_preemptions
+        self.faults = faults
         self._base_key = jax.random.PRNGKey(seed)
         self._req_counter = 0
         self.stats: dict = {}
@@ -139,6 +172,10 @@ class ServeEngine:
             decoding.decode_step, cfg, ctx=ctx), donate_argnums=(2,))
         self._sample = jax.jit(sampling.sample_batch)
         self._greedy = jax.jit(sampling.greedy_batch)
+        # Poison guard: (B,) mask of rows whose logits went NaN/Inf — those
+        # requests retire "error" instead of streaming argmax-of-NaN junk.
+        self._nonfinite = jax.jit(sampling.nonfinite_rows)
+        self._poison = jax.jit(sampling.poison_rows)
         # One batched fold per step (not one dispatch per slot): request key
         # x token index -> per-row sampling key.
         self._fold = jax.jit(jax.vmap(jax.random.fold_in))
@@ -168,10 +205,17 @@ class ServeEngine:
             pool = CachePool(n_slots, cfg=self.cfg, max_len=self.max_len,
                              ctx=self.ctx)
         sched = Scheduler(pool, prefill_chunk=chunk,
-                          vocab_size=self.cfg.vocab_size, bos_id=self.bos_id)
+                          vocab_size=self.cfg.vocab_size, bos_id=self.bos_id,
+                          preemption=self.preemption,
+                          max_preemptions=self.max_preemptions)
         req_keys = []
+        deadlines: dict[int, float] = {}   # req_id -> absolute expiry
+        t0 = time.monotonic()
         for i, r in enumerate(reqs):
             sched.submit(r, i)
+            dl = r.deadline_s if r.deadline_s is not None else self.deadline_s
+            if dl is not None:
+                deadlines[i] = t0 + dl
             req_keys.append(np.asarray(jax.random.fold_in(
                 self._base_key, self._req_counter)))
             self._req_counter += 1
@@ -189,13 +233,27 @@ class ServeEngine:
                      scan_columns=0, token_slots=0, useful_tokens=0,
                      prefill_tokens=0, decode_tokens=0, admissions=0,
                      uncond_calls=0, uncond_token_slots=0,
-                     prefix_hit_tokens=0, peak_live_blocks=0)
+                     prefix_hit_tokens=0, peak_live_blocks=0,
+                     step_retries=0, poisoned=0, deadline_expired=0)
+        faults = self.faults
         while True:
+            if deadlines:
+                # Watchdog: a request past its wall-clock budget terminates
+                # NOW — active slots retire "deadline" with partial output,
+                # queued entries (incl. preempted replays) never run.
+                now = time.monotonic()
+                expired = [rid for rid, t in deadlines.items() if now >= t]
+                if expired:
+                    stats["deadline_expired"] += sched.expire(expired)
+                    for rid in expired:
+                        del deadlines[rid]
             for st in sched.retire():
                 results[st.req_id] = Result(
                     tokens=np.asarray(st.tokens, np.int32),
                     steps=len(st.tokens), prefill_len=len(st.req.prompt),
-                    finish_reason=st.finish_reason)
+                    finish_reason=st.finish_reason,
+                    preemptions=st.preemptions)
+                deadlines.pop(st.req_id, None)
             admitted = sched.admit()
             stats["admissions"] += len(admitted)
             stats["prefix_hit_tokens"] += sum(st.prefix_hit
@@ -204,25 +262,47 @@ class ServeEngine:
                 for st in admitted:
                     if st.req.cfg_scale is not None:
                         uncond_pool.reset(st.slot)
-            if not sched.active:
+            if not sched.has_work:
                 break
+            if not sched.active:
+                continue    # queued work is waiting on capacity/slots
 
+            step_idx = stats["model_calls"]
+            if faults is not None and faults.take_oom(step_idx):
+                sched.inject_oom()
             plan = sched.plan()
             if plan is None:        # only pre-finished slots; retire them
                 continue
             if self.paged:
                 stats["peak_live_blocks"] = max(stats["peak_live_blocks"],
                                                 pool.live_blocks)
-                logits, pool.caches = self._step_paged(
-                    self.params, jnp.asarray(plan.tokens), pool.caches,
-                    jnp.asarray(plan.offsets), jnp.asarray(plan.lengths),
-                    jnp.asarray(pool.block_tables))
+                logits, pool.caches = self._try_step(
+                    step_idx, stats,
+                    lambda: self._step_paged(
+                        self.params, jnp.asarray(plan.tokens), pool.caches,
+                        jnp.asarray(plan.offsets), jnp.asarray(plan.lengths),
+                        jnp.asarray(pool.block_tables)))
             else:
-                logits, pool.caches = self._step(
-                    self.params, jnp.asarray(plan.tokens), pool.caches,
-                    jnp.asarray(plan.offsets), jnp.asarray(plan.lengths))
+                logits, pool.caches = self._try_step(
+                    step_idx, stats,
+                    lambda: self._step(
+                        self.params, jnp.asarray(plan.tokens), pool.caches,
+                        jnp.asarray(plan.offsets), jnp.asarray(plan.lengths)))
             if uncond_pool is not None:
                 logits = self._cfg_combine(logits, sched, uncond_pool, stats)
+            if faults is not None:
+                live = {st.req_id: slot for slot, st in sched.active.items()
+                        if plan.lengths[slot] > 0}
+                bad_slots = faults.take_poison(step_idx, live)
+                if bad_slots:
+                    mask = np.zeros(pool.num_slots, bool)
+                    mask[bad_slots] = True
+                    logits = self._poison(logits, jnp.asarray(mask))
+            bad = np.asarray(self._nonfinite(logits)) & (plan.lengths > 0)
+            if bad.any():
+                for slot in np.nonzero(bad)[0]:
+                    sched.fail(int(slot), "error")
+                stats["poisoned"] += int(bad.sum())
             if any(sched.temperature[slot] > 0 for slot in sched.active):
                 keys = self._step_keys(sched, req_keys)
                 toks = self._sample(
@@ -241,8 +321,51 @@ class ServeEngine:
             stats["prefill_tokens"] += int(plan.lengths[plan.is_prefill].sum())
             stats["decode_tokens"] += int(plan.lengths[~plan.is_prefill].sum())
 
+        stats["preemptions"] = sched.preemptions
+        stats["preempted_tokens"] = sched.preempted_tokens
+        stats["recompute_tokens"] = sched.recompute_tokens
+        stats["preempted_blocks_freed"] = sched.preempted_blocks_freed
+        if faults is not None:
+            stats["faults"] = faults.summary()
         self.stats = _finish_stats(stats)
         return results  # type: ignore[return-value]
+
+    def _try_step(self, step_idx: int, stats: dict, thunk):
+        """Run one jitted step with bounded retry + exponential backoff.
+
+        Injected faults (``FaultPlan.step_errors``) raise *before* the
+        jitted call, so the donated cache buffers are never consumed by a
+        doomed attempt and the retry replays against intact state. Real
+        device errors are retried best-effort: an exception raised after
+        XLA consumed the donated caches cannot be replayed, and the final
+        attempt's exception propagates to the caller either way.
+        """
+        injected = (self.faults.error_attempts(step_idx)
+                    if self.faults is not None else 0)
+        attempt = 0
+        while True:
+            try:
+                if attempt < injected:
+                    self.faults.record("step_error", step_idx,
+                                       attempt=attempt)
+                    raise InjectedFault(
+                        f"injected step failure (step {step_idx}, "
+                        f"attempt {attempt})")
+                return thunk()
+            except Exception as e:
+                if attempt >= self.max_retries:
+                    raise
+                delay = min(self.retry_backoff_s * (2 ** attempt),
+                            self.retry_backoff_cap_s)
+                logger.warning(
+                    "step %d attempt %d failed (%s: %s); retrying in "
+                    "%.3fs (%d retries left)", step_idx, attempt,
+                    type(e).__name__, e, delay,
+                    self.max_retries - attempt)
+                stats["step_retries"] += 1
+                attempt += 1
+                if delay > 0:
+                    time.sleep(delay)
 
     def _cfg_combine(self, logits, sched, uncond_pool, stats):
         """Run the CFG unconditional branch (same chunked step, <bos>-rooted

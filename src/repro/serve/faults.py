@@ -1,0 +1,119 @@
+"""Deterministic fault injection for the serving stack.
+
+Recovery code that only runs when hardware misbehaves is recovery code that
+has never run. A ``FaultPlan`` makes every failure path in the serve engine
+exercisable on demand and *reproducibly*: the same plan against the same
+workload takes the same recovery actions and produces the same tokens, so
+tests and ``benchmarks/serve_chaos.py`` can assert bit-level parity between
+a faulted run and a fault-free one.
+
+Three fault kinds, each keyed by the engine's executed-step index (the
+value of ``stats["model_calls"]`` when the fault is consulted):
+
+  * **allocator OOM** (``oom_steps``) — at step ``s`` the scheduler behaves
+    as if the paged pool could not satisfy the next append: with preemption
+    enabled it evicts the victim the real OOM path would pick (blocks
+    dealloc'd, request requeued carrying ``prompt + tokens_so_far`` for
+    replay); with preemption disabled the requesting slot retires
+    ``cache_full`` — the legacy kill behavior. If no victim exists at step
+    ``s`` (e.g. a single active slot) the injection *defers* to the next
+    step where one does, so an injected OOM never manufactures a spurious
+    kill that a real OOM could have survived.
+  * **step exceptions** (``step_errors``: step -> failing attempts) — the
+    first N attempts of the jitted step at that index raise
+    ``InjectedFault`` *before* the device call (so donated cache buffers
+    are never consumed by a doomed attempt); the engine's capped-backoff
+    retry loop must absorb them.
+  * **NaN logits** (``nan_requests``: req_id -> step) — at the first
+    executed step >= ``step`` where the request occupies a planned row, its
+    logits row is overwritten with NaN. The engine's non-finite detector
+    (``sampling.nonfinite_rows``) must retire the request with an "error"
+    status instead of crashing the batch.
+
+``FaultPlan.seeded`` derives a schedule from a seed (``np.random.
+default_rng`` — platform-stable), for randomized chaos harnesses; explicit
+construction pins exact steps for regression tests. ``fired`` records what
+actually happened, for the bench's accounting.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """Raised in place of a device-step failure by ``FaultPlan``."""
+
+
+class FaultPlan:
+    def __init__(self, *, oom_steps=(), step_errors=None, nan_requests=None):
+        self.oom_steps = sorted(int(s) for s in oom_steps)
+        self.step_errors = {int(k): int(v)
+                            for k, v in dict(step_errors or {}).items()}
+        self.nan_requests = {int(k): int(v)
+                             for k, v in dict(nan_requests or {}).items()}
+        self._oom_pending = set(self.oom_steps)
+        self._nan_pending = dict(self.nan_requests)
+        self.fired: list[dict] = []
+
+    @classmethod
+    def seeded(cls, seed: int, *, horizon: int, n_oom: int = 1,
+               n_errors: int = 1, error_attempts: int = 1,
+               nan_req_ids=()) -> "FaultPlan":
+        """Draw a random schedule over ``horizon`` engine steps. The same
+        seed always yields the same plan; distinct fault kinds draw from
+        one stream so their steps interleave differently per seed."""
+        rng = np.random.default_rng(seed)
+        n = min(n_oom + n_errors, max(horizon, 1))
+        steps = sorted(int(s) for s in
+                       rng.choice(max(horizon, 1), size=n, replace=False))
+        rng.shuffle(steps)
+        oom = steps[:n_oom]
+        err = {s: error_attempts for s in steps[n_oom:]}
+        nan = {int(r): int(rng.integers(0, max(horizon, 1)))
+               for r in nan_req_ids}
+        return cls(oom_steps=oom, step_errors=err, nan_requests=nan)
+
+    def describe(self) -> dict:
+        """The full (immutable) schedule — two plans with equal describe()
+        inject identically."""
+        return {"oom_steps": list(self.oom_steps),
+                "step_errors": dict(self.step_errors),
+                "nan_requests": dict(self.nan_requests)}
+
+    # -- consumption (engine-facing) -------------------------------------------
+
+    def take_oom(self, step: int) -> bool:
+        """True once for each scheduled OOM step that ``step`` has reached.
+        Deferred semantics: an OOM scheduled at 5 consulted first at 7
+        (e.g. the engine skipped plan-less iterations) still fires."""
+        due = [s for s in self._oom_pending if s <= step]
+        if not due:
+            return False
+        self._oom_pending.discard(min(due))
+        self.record("oom", step)
+        return True
+
+    def error_attempts(self, step: int) -> int:
+        return self.step_errors.get(step, 0)
+
+    def take_poison(self, step: int, active_rows: dict) -> list[int]:
+        """Rows (slots) to poison this step. ``active_rows`` maps req_id ->
+        slot for requests with a live planned row; a scheduled request not
+        yet (or no longer) in the batch stays pending."""
+        slots = []
+        for rid, at in list(self._nan_pending.items()):
+            if step >= at and rid in active_rows:
+                slots.append(int(active_rows[rid]))
+                del self._nan_pending[rid]
+                self.record("nan", step, req_id=rid)
+        return slots
+
+    def record(self, kind: str, step: int, **detail) -> None:
+        self.fired.append({"kind": kind, "step": int(step), **detail})
+
+    def summary(self) -> dict:
+        """Counts of faults that actually fired, for stats/bench rows."""
+        out = {"oom": 0, "step_error": 0, "nan": 0}
+        for f in self.fired:
+            out[f["kind"]] = out.get(f["kind"], 0) + 1
+        return out

@@ -65,11 +65,15 @@ class CachePool:
             return None
         return self._free.pop()
 
-    def free(self, slot: int) -> None:
+    def free(self, slot: int) -> int:
+        """Release the slot. Returns the number of physical blocks this
+        free actually returned to the allocator (0 for contiguous pools,
+        where capacity is per-slot and nothing is refcounted)."""
         assert slot not in self._free, f"slot {slot} double-freed"
         self._free.append(slot)
         self._free.sort(reverse=True)
         self.cache_len[slot] = 0
+        return 0
 
     def reset(self, slot: int) -> None:
         """Restore one slot's cache rows to their init state (positions -1,
@@ -230,17 +234,23 @@ class PagedCachePool(CachePool):
         self.cache_len[slot] = 0
         self._reg[slot] = (0, b"")
 
-    def free(self, slot: int) -> None:
+    def free(self, slot: int) -> int:
+        """Release the slot's table. Returns the number of physical blocks
+        whose refcount hit zero — blocks still shared with other slots
+        (prefix sharing) survive this slot's departure and don't count."""
+        released = 0
         for i in range(self.blocks_per_slot):
             blk = int(self.block_tables[slot, i])
             if blk >= 0:
-                self._deref_block(blk)
+                released += self._deref_block(blk)
                 self.block_tables[slot, i] = -1
         self._reg.pop(slot, None)
         self._reserved.pop(slot, None)
         super().free(slot)
+        return released
 
-    def _deref_block(self, blk: int) -> None:
+    def _deref_block(self, blk: int) -> int:
+        """Drop one reference; 1 iff the block was actually freed."""
         if self.allocator.deref(blk):          # freed: drop its registration
             key = self._block_key.pop(blk, None)
             if key is not None:
@@ -249,6 +259,8 @@ class PagedCachePool(CachePool):
                 if not copies:
                     del self._registry[key]
                 self.registry_version += 1
+            return 1
+        return 0
 
     # -- capacity --------------------------------------------------------------
 

@@ -80,6 +80,25 @@ def sample_batch(
     return jnp.where((temperature > 0)[:, None], sampled, greedy_tok)
 
 
+def nonfinite_rows(logits: jnp.ndarray) -> jnp.ndarray:
+    """(B, 1, V) -> (B,) bool: rows whose logits contain any NaN/Inf.
+
+    A poisoned row's argmax/categorical output is garbage (argmax of an
+    all-NaN row is 0, silently emitting token 0 forever) — the serve engine
+    checks this mask every step and retires flagged requests with an
+    "error" status instead of streaming junk or crashing the batch.
+    """
+    return jnp.any(~jnp.isfinite(logits.astype(jnp.float32)), axis=(1, 2))
+
+
+def poison_rows(logits: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+    """Overwrite the given rows' logits with NaN ((B,) bool mask) — the
+    fault-injection hook that simulates a numerically-exploded forward for
+    exactly one batch row; see ``serve.faults.FaultPlan.nan_requests``."""
+    bad = jnp.where(rows[:, None, None], jnp.nan, 0.0)
+    return logits.astype(jnp.float32) + bad
+
+
 def mask_to_vision_range(logits: jnp.ndarray, vision_start: int,
                          vision_end: int) -> jnp.ndarray:
     """Constrain sampling to vision-token ids (generation inside <vision>)."""

@@ -1,4 +1,4 @@
-"""Continuous-batching scheduler: admit, plan, commit, retire.
+"""Continuous-batching scheduler: admit, plan, commit, retire — and preempt.
 
 Pure host-side control plane (no jax): each engine iteration the scheduler
 
@@ -13,9 +13,26 @@ Pure host-side control plane (no jax): each engine iteration the scheduler
      ``models.decoding.prefill_step``,
   4. ``commit()``s the sampled tokens back into per-slot state.
 
+Preemption (``preemption=True``): when the paged pool cannot supply the
+blocks a slot's next append needs, the scheduler evicts a victim instead of
+killing the requester — lowest ``Request.priority`` first, most recently
+admitted among ties (the request that has sunk the least compute). The
+victim's blocks return to the ``BlockAllocator`` (shared-prefix blocks
+survive via their surviving holders' refcounts) and the victim re-enters
+the queue *front* carrying ``prompt + tokens_so_far`` as its replay prompt.
+Replaying that prompt through chunked prefill reproduces the evicted cache
+exactly — the last sampled token was never written to the cache (it is the
+pending decode input), so prefilling through it lands on precisely the
+logits the interrupted decode step would have produced, and generation
+resumes bit-identically. ``SlotState.tokens`` is primed with the
+pre-preemption tokens so sampling-key indices (request key folded with
+``len(tokens)``) continue unbroken. A replay that can never fit (or one
+past ``max_preemptions``) retires ``cache_full`` instead of thrashing.
+
 Because the scheduler never touches device arrays, the same class replays
-admission policy at 1M-token scale in the serve_batching benchmark's
-analytic mode (a bookkeeping-only ``CachePool``).
+admission *and preemption* policy at 1M-token scale in the serve benchmarks'
+analytic modes (bookkeeping-only pools); ``inject_oom()`` lets the fault
+harness (``serve.faults``) force the eviction path on demand.
 """
 from __future__ import annotations
 
@@ -35,22 +52,42 @@ logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
+class PendingRequest:
+    """One queue entry. Fresh submissions carry the request's own prompt;
+    a preempted request re-enters with its *replay* prompt (original prompt
+    + every token generated so far) plus the state needed to resume exactly:
+    generated tokens (sampling-key continuity), the admission-clamped
+    budget, and the cache fill it lost (recompute accounting)."""
+    req: Any
+    req_id: int
+    prompt: Any                # replay prompt (== req.prompt when fresh)
+    tokens: list = dataclasses.field(default_factory=list)
+    preemptions: int = 0
+    max_new: int | None = None  # carried budget; None => clamp at admission
+    lost: int = 0               # cache tokens freed at preemption
+
+
+@dataclasses.dataclass
 class SlotState:
     """Host-side state of one occupied slot."""
     req: Any                   # serve.Request (duck-typed)
     req_id: int                # caller's index for result ordering
     slot: int
+    prompt: Any = None         # tokens to prefill (replay prompt if resumed)
     cursor: int = 0            # prompt tokens fed so far
     tokens: list = dataclasses.field(default_factory=list)   # generated
     next_token: int = -1       # decode input for the next step
     uncond_len: int = 0        # CFG unconditional-branch cache fill
     max_new: int = 0           # admission-clamped generation budget
     prefix_hit: int = 0        # prompt tokens skipped via shared blocks
-    finish_reason: str | None = None   # "eos" | "length" | "cache_full"
+    preemptions: int = 0       # times this request was evicted so far
+    admit_seq: int = 0         # admission order (victim-selection tiebreak)
+    finish_reason: str | None = None
+    # "eos" | "length" | "cache_full" | "error" | "deadline"
 
     @property
     def phase(self) -> str:
-        return PREFILL if self.cursor < len(self.req.prompt) else DECODE
+        return PREFILL if self.cursor < len(self.prompt) else DECODE
 
 
 @dataclasses.dataclass
@@ -66,20 +103,34 @@ class StepPlan:
 
 class Scheduler:
     def __init__(self, pool: CachePool, *, prefill_chunk: int = 8,
-                 vocab_size: int, bos_id: int = 0):
+                 vocab_size: int, bos_id: int = 0,
+                 preemption: bool = False, max_preemptions: int = 8):
         assert prefill_chunk >= 1
         self.pool = pool
         self.prefill_chunk = prefill_chunk
         self.vocab_size = vocab_size
         self.bos_id = bos_id
-        self.queue: deque[tuple[Any, int]] = deque()
+        self.preemption = preemption
+        self.max_preemptions = max_preemptions
+        self.queue: deque[PendingRequest] = deque()
         self.active: dict[int, SlotState] = {}
         self.finished: list[SlotState] = []
-        # Cached prefix match for the queue head: (req_id, registry
-        # version) -> (matched, blocks). Hashing a 1M-token prompt is not
-        # free, so a request waiting for admission only re-matches when the
-        # registry actually changed.
+        # Requests retired off-slot (dropped replay, expired while queued);
+        # drained by retire() alongside finished slots.
+        self._dropped: list[SlotState] = []
+        # Cached prefix match for the queue head: (req_id, prompt length,
+        # registry version) -> (matched, blocks). Hashing a 1M-token prompt
+        # is not free, so a request waiting for admission only re-matches
+        # when the registry actually changed (length distinguishes a replay
+        # prompt from the same request's original).
         self._head_match: tuple | None = None
+        # Fault-tolerance accounting.
+        self.preemptions = 0            # evictions performed
+        self.preempted_tokens = 0       # cache tokens freed by evictions
+        self.recompute_tokens = 0       # replay tokens re-prefilled (wasted)
+        self.preempted_blocks_freed = 0  # physical blocks actually freed
+        self._admit_seq = 0
+        self._force_oom = False         # armed by inject_oom()
         b = pool.num_slots
         # Per-slot sampling params (vectorized sampler inputs), installed at
         # admission — every row applies its own request's knobs.
@@ -112,7 +163,8 @@ class Scheduler:
                     f"request {req_id}: prompt of {len(req.prompt)} tokens "
                     f"needs {need} cache blocks (incl. decode headroom) but "
                     f"the pool owns {self.pool.num_blocks}")
-        self.queue.append((req, req_id))
+        self.queue.append(PendingRequest(req=req, req_id=req_id,
+                                         prompt=req.prompt))
 
     def retire(self) -> list[SlotState]:
         done = [st for st in self.active.values() if st.finish_reason]
@@ -120,7 +172,49 @@ class Scheduler:
             del self.active[st.slot]
             self.pool.free(st.slot)
             self.finished.append(st)
+        if self._dropped:               # retired off-slot: nothing to free
+            done.extend(self._dropped)
+            self.finished.extend(self._dropped)
+            self._dropped = []
         return done
+
+    def fail(self, slot: int, reason: str = "error") -> None:
+        """Mark an active slot failed (e.g. non-finite logits detected by
+        the engine); it retires with ``reason`` on the next ``retire()``."""
+        st = self.active.get(slot)
+        if st is not None and st.finish_reason is None:
+            st.finish_reason = reason
+            logger.warning("request %d: failed (%s) after %d tokens",
+                           st.req_id, reason, len(st.tokens))
+
+    def expire(self, req_ids) -> int:
+        """Expire requests past their wall-clock deadline, wherever they
+        are: active slots retire "deadline" with their partial output;
+        queued entries (including preempted replays) drop without ever
+        taking a slot. Returns the number of requests expired."""
+        want = set(req_ids)
+        if not want:
+            return 0
+        n = 0
+        for st in self.active.values():
+            if st.req_id in want and st.finish_reason is None:
+                st.finish_reason = "deadline"
+                n += 1
+        if any(p.req_id in want for p in self.queue):
+            keep: deque[PendingRequest] = deque()
+            for pend in self.queue:
+                if pend.req_id in want:
+                    self._dropped.append(SlotState(
+                        req=pend.req, req_id=pend.req_id, slot=-1,
+                        prompt=pend.prompt, tokens=list(pend.tokens),
+                        preemptions=pend.preemptions,
+                        finish_reason="deadline"))
+                    n += 1
+                else:
+                    keep.append(pend)
+            self.queue = keep
+            self._head_match = None
+        return n
 
     def admit(self) -> list[SlotState]:
         """Move queued requests into free slots (mid-flight admission).
@@ -133,23 +227,29 @@ class Scheduler:
         ones. Every admission also clamps the generation budget so
         ``prompt + max_new`` fits the slot's capacity (truncated with a
         logged reason instead of dying mid-flight on the overflow assert).
+
+        A preempted replay re-admits through the same path: its replay
+        prompt re-matches the registry (surviving shared-prefix blocks are
+        re-adopted for free), its generated tokens prime the slot, and its
+        already-clamped budget is carried rather than re-derived.
         """
         newly = []
         while self.queue:
             if self.pool.num_free == 0:
                 break               # no slot: skip the (hashing) match work
-            req, req_id = self.queue[0]
-            matched, blocks = 0, []
+            pend = self.queue[0]
+            req, req_id, prompt = pend.req, pend.req_id, pend.prompt
+            matched, blocks, needed = 0, [], 0
             if self.pool.paged:
-                matched, blocks = self._match_head(req, req_id)
+                matched, blocks = self._match_head(pend)
                 # Keep >= 1 prompt token to run: its logits seed sampling.
-                matched = min(matched, len(req.prompt) - 1)
+                matched = min(matched, len(prompt) - 1)
                 bs = self.pool.block_size
                 keep = blocks[:matched // bs]
                 if matched % bs:
                     keep.append(blocks[matched // bs])
                 blocks = keep
-                needed = (self.pool.blocks_for(len(req.prompt))
+                needed = (self.pool.blocks_for(len(prompt))
                           - len(blocks) + 1)
                 if self.pool.free_unreserved < needed:
                     break               # admission bounded by live tokens
@@ -158,23 +258,34 @@ class Scheduler:
                 break
             self.queue.popleft()
             self.pool.reset(slot)
-            st = SlotState(req=req, req_id=req_id, slot=slot)
+            st = SlotState(req=req, req_id=req_id, slot=slot, prompt=prompt,
+                           tokens=list(pend.tokens),
+                           preemptions=pend.preemptions,
+                           admit_seq=self._admit_seq)
+            self._admit_seq += 1
             if self.pool.paged:
                 self.pool.reserve(slot, needed)
                 if blocks:
-                    self.pool.adopt_prefix(slot, req.prompt, matched, blocks)
+                    self.pool.adopt_prefix(slot, prompt, matched, blocks)
                     st.cursor = matched  # shared span skips prefill compute
                     st.prefix_hit = matched
             self.active[slot] = st
-            st.max_new = req.max_new_tokens
-            cap = self.pool.max_len
-            if cap and len(req.prompt) + st.max_new > cap:
-                st.max_new = cap - len(req.prompt)
-                logger.warning(
-                    "request %d: prompt %d + max_new %d exceeds cache "
-                    "capacity %d; generation truncated to %d tokens",
-                    req_id, len(req.prompt), req.max_new_tokens, cap,
-                    st.max_new)
+            if pend.max_new is not None:
+                st.max_new = pend.max_new   # replay: budget already clamped
+            else:
+                st.max_new = req.max_new_tokens
+                cap = self.pool.max_len
+                if cap and len(prompt) + st.max_new > cap:
+                    st.max_new = cap - len(prompt)
+                    logger.warning(
+                        "request %d: prompt %d + max_new %d exceeds cache "
+                        "capacity %d; generation truncated to %d tokens",
+                        req_id, len(prompt), req.max_new_tokens, cap,
+                        st.max_new)
+            if pend.preemptions and pend.lost:
+                # Wasted recompute = cache the eviction threw away minus the
+                # span the replay re-adopted from surviving shared blocks.
+                self.recompute_tokens += max(0, pend.lost - matched)
             self.temperature[slot] = req.temperature or 0.0
             self.top_k[slot] = req.top_k if req.top_k else self.vocab_size
             self.eos[slot] = req.eos_id if req.eos_id is not None else -1
@@ -183,25 +294,127 @@ class Scheduler:
             self.has_cfg[slot] = req.cfg_scale is not None
             lo, hi = req.vision_range or (0, self.vocab_size)
             self.vision_lo[slot], self.vision_hi[slot] = lo, hi
-            if st.max_new < 1:
+            if st.max_new - len(st.tokens) < 1:
                 st.finish_reason = "length"   # nothing to generate; retire
             newly.append(st)
         return newly
 
-    def _match_head(self, req, req_id: int) -> tuple[int, list[int]]:
+    def _match_head(self, pend: PendingRequest) -> tuple[int, list[int]]:
         """Prefix-match the queue head against the registry, cached by
-        (request, registry version): a request that waits several steps for
-        blocks re-hashes its prompt only when the registry changed."""
-        tag = (req_id, self.pool.registry_version)
+        (request, prompt length, registry version): a request that waits
+        several steps for blocks re-hashes its prompt only when the
+        registry changed."""
+        tag = (pend.req_id, len(pend.prompt), self.pool.registry_version)
         if self._head_match and self._head_match[0] == tag:
             return self._head_match[1]
-        result = self.pool.match_prefix(req.prompt)
+        result = self.pool.match_prefix(pend.prompt)
         self._head_match = (tag, result)
         return result
 
     @property
     def has_work(self) -> bool:
         return bool(self.queue) or bool(self.active)
+
+    # -- preemption ------------------------------------------------------------
+
+    def inject_oom(self) -> None:
+        """Arm one simulated allocation failure: the next ``plan()`` treats
+        the first runnable slot's append as if the pool were exhausted
+        (fault-injection hook; see ``serve.faults``). Stays armed until the
+        eviction path actually runs — with preemption on and no eligible
+        victim yet, the injection defers rather than fabricating a kill a
+        real OOM could have survived."""
+        self._force_oom = True
+
+    def _pick_victim(self, requester: SlotState) -> SlotState | None:
+        """Victim policy: lowest ``Request.priority`` first, most recently
+        admitted among ties — the request that has banked the least compute.
+        CFG requests are never evicted (their <bos>-rooted unconditional
+        cache lives outside the replay prompt, so exact replay cannot be
+        guaranteed); neither is anything already at ``max_preemptions``.
+        The requester itself is eligible — evicting it parks it in the
+        queue until pressure clears — except when it is the only runnable
+        slot, where eviction cannot relieve anything (the pool is already
+        as empty as it can get) and would only livelock."""
+        cands = [st for st in self.active.values()
+                 if st.finish_reason is None
+                 and st.preemptions < self.max_preemptions
+                 and not self.has_cfg[st.slot]]
+        if not cands:
+            return None
+        victim = min(cands, key=lambda st: (getattr(st.req, "priority", 0),
+                                            -st.admit_seq))
+        runnable = sum(st.finish_reason is None
+                       for st in self.active.values())
+        if victim is requester and runnable == 1:
+            return None
+        return victim
+
+    def _preempt(self, st: SlotState, rows: tuple) -> None:
+        """Evict ``st``: free its blocks (shared-prefix blocks survive via
+        surviving holders' refcounts), zero any plan row already built for
+        it this step, and requeue it at the queue *front* carrying its
+        replay prompt. A replay that can never fit retires ``cache_full``
+        instead of cycling forever."""
+        slot = st.slot
+        lost = int(self.pool.cache_len[slot])
+        del self.active[slot]
+        freed = self.pool.free(slot)
+        self.preemptions += 1
+        self.preempted_tokens += lost
+        self.preempted_blocks_freed += int(freed or 0)
+        tokens, offsets, lengths, is_prefill, sample_rows = rows
+        tokens[slot] = 0
+        offsets[slot] = 0
+        lengths[slot] = 0
+        is_prefill[slot] = False
+        sample_rows[slot] = False
+        if st.tokens:
+            replay = np.concatenate([
+                np.asarray(st.req.prompt, np.int32),
+                np.asarray(st.tokens, np.int32)])
+        else:
+            replay = np.asarray(st.prompt, np.int32)
+        pend = PendingRequest(req=st.req, req_id=st.req_id, prompt=replay,
+                              tokens=list(st.tokens),
+                              preemptions=st.preemptions + 1,
+                              max_new=st.max_new, lost=lost)
+        bad = pend.preemptions > self.max_preemptions
+        if not bad and self.pool.max_len:
+            bad = len(replay) >= self.pool.max_len
+        if not bad and self.pool.paged:
+            bad = (self.pool.blocks_for(len(replay)) + 1
+                   > self.pool.num_blocks)
+        if bad:
+            st.finish_reason = "cache_full"
+            self._dropped.append(st)
+            logger.warning(
+                "request %d: preempted replay of %d tokens cannot be "
+                "re-admitted; retired cache_full", st.req_id, len(replay))
+            return
+        self.queue.appendleft(pend)
+        self._head_match = None
+        logger.warning(
+            "request %d: preempted (freed %d cached tokens, %d blocks); "
+            "requeued for replay (preemption %d/%d)", st.req_id, lost,
+            int(freed or 0), pend.preemptions, self.max_preemptions)
+
+    def _apply_injected_oom(self, st: SlotState, rows: tuple) -> bool:
+        """Resolve an armed ``inject_oom()`` against requester ``st``.
+        Returns True when ``st`` itself left the batch (row must not be
+        planned)."""
+        if not self.preemption:
+            self._force_oom = False
+            st.finish_reason = "cache_full"
+            logger.warning("request %d: injected OOM with preemption "
+                           "disabled; retired cache_full", st.req_id)
+            return True
+        victim = self._pick_victim(st)
+        if victim is None:
+            return False        # stays armed; fires when a victim exists
+        self._force_oom = False
+        self._preempt(victim, rows)
+        return victim is st
 
     # -- step planning ---------------------------------------------------------
 
@@ -213,7 +426,7 @@ class Scheduler:
         # drags every decoding slot through a full chunk of dead pad
         # columns, while the jitted step compiles at most log2(chunk) + 1
         # distinct widths; 1 when the batch is decode-only.
-        need = max((min(self.prefill_chunk, len(st.req.prompt) - st.cursor)
+        need = max((min(self.prefill_chunk, len(st.prompt) - st.cursor)
                     for st in self.active.values()
                     if st.phase == PREFILL and not st.finish_reason),
                    default=1)
@@ -225,28 +438,43 @@ class Scheduler:
         lengths = np.zeros(b, np.int32)
         is_prefill = np.zeros(b, bool)
         sample_rows = np.zeros(b, bool)
-        for slot, st in self.active.items():
+        rows = (tokens, offsets, lengths, is_prefill, sample_rows)
+        for slot, st in list(self.active.items()):
+            if slot not in self.active:  # preempted earlier this plan
+                continue
             if st.finish_reason:        # admitted pre-finished (max_new < 1)
                 continue
-            offsets[slot] = self.pool.cache_len[slot]
             if st.phase == PREFILL:
-                take = min(c, len(st.req.prompt) - st.cursor)
+                take = min(c, len(st.prompt) - st.cursor)
             else:
                 take = 1
-            if self.pool.paged and not self.pool.ensure_capacity(
-                    slot, int(self.pool.cache_len[slot]) + take):
-                # Mid-flight block exhaustion: retire with what we have
-                # (admission reserves full-prompt capacity, so this only
-                # fires when decode blocks outrun an over-committed pool).
-                st.finish_reason = "cache_full"
-                continue
+            if self._force_oom and self._apply_injected_oom(st, rows):
+                continue                # requester itself was evicted/killed
+            if self.pool.paged:
+                while not self.pool.ensure_capacity(
+                        slot, int(self.pool.cache_len[slot]) + take):
+                    # Mid-flight block exhaustion: evict a victim and retry
+                    # (its freed blocks satisfy this append), or — without
+                    # preemption, or with nothing evictable — retire the
+                    # requester with what it has.
+                    victim = (self._pick_victim(st) if self.preemption
+                              else None)
+                    if victim is None:
+                        st.finish_reason = "cache_full"
+                        break
+                    self._preempt(victim, rows)
+                    if victim is st:
+                        break           # requester parked in the queue
+                if st.finish_reason or slot not in self.active:
+                    continue
+            offsets[slot] = self.pool.cache_len[slot]
             if st.phase == PREFILL:
-                tokens[slot, :take] = st.req.prompt[st.cursor:st.cursor + take]
+                tokens[slot, :take] = st.prompt[st.cursor:st.cursor + take]
                 lengths[slot] = take
                 is_prefill[slot] = True
                 # Completing the prompt this step => its last-column logits
                 # are the first next-token logits; sample immediately.
-                sample_rows[slot] = st.cursor + take == len(st.req.prompt)
+                sample_rows[slot] = st.cursor + take == len(st.prompt)
             else:
                 tokens[slot, 0] = st.next_token
                 lengths[slot] = 1
@@ -260,10 +488,12 @@ class Scheduler:
     def commit(self, plan: StepPlan, sampled: np.ndarray) -> None:
         """Fold one executed step back into slot state. ``sampled`` is the
         (num_slots,) vector from the vectorized sampler; only rows with
-        ``plan.sample_rows`` keep theirs."""
+        ``plan.sample_rows`` keep theirs. A row failed between plan and
+        commit (``fail()``: poisoned logits) is left untouched — it retires
+        next, and its sampled garbage is never stored."""
         for slot, st in self.active.items():
             n = int(plan.lengths[slot])
-            if n == 0:
+            if n == 0 or st.finish_reason:
                 continue
             self.pool.advance(slot, n)
             if plan.is_prefill[slot]:
@@ -272,8 +502,8 @@ class Scheduler:
                     # Freshly-written full prompt blocks become shareable;
                     # the partial tail registers once the prompt completes.
                     self.pool.register_prefix(
-                        slot, st.req.prompt[:st.cursor],
-                        final=st.cursor == len(st.req.prompt))
+                        slot, st.prompt[:st.cursor],
+                        final=st.cursor == len(st.prompt))
             if not plan.sample_rows[slot]:
                 continue
             tok = int(sampled[slot])

@@ -21,11 +21,15 @@ Two layers:
 from __future__ import annotations
 
 import json
+import logging
 import os
+import zipfile
 from typing import Any
 
 import jax
 import numpy as np
+
+logger = logging.getLogger(__name__)
 
 
 def _key(path_elems) -> str:
@@ -44,11 +48,36 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
 
 
 def save_checkpoint(path: str, tree: Any, *, metadata: dict | None = None):
+    """Crash-safe save: the npz is written to a ``.tmp`` sibling and
+    ``os.replace``d into place, so a preemption mid-write leaves either the
+    previous complete file or no file — never a truncated one at the final
+    name (``np.savez`` on an open file object does not re-append ``.npz``)."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
     flat["__metadata__"] = np.frombuffer(
         json.dumps(metadata or {}).encode(), dtype=np.uint8)
-    np.savez(path, **flat)
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    tmp = path + ".tmp"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def checkpoint_ok(path: str) -> bool:
+    """True iff ``path`` is a structurally-complete npz: the zip central
+    directory parses and every member passes its CRC. A write truncated by
+    preemption fails both cheaply — npz's central directory lives at the
+    end of the file."""
+    try:
+        with zipfile.ZipFile(path) as z:
+            return z.testzip() is None
+    except Exception:
+        return False
 
 
 def load_checkpoint(path: str, target: Any) -> tuple[Any, dict]:
@@ -111,17 +140,33 @@ def save_train_state(
 
 
 def latest_checkpoint(ckpt_dir: str) -> str | None:
-    """Path of the newest resumable checkpoint in ``ckpt_dir`` (or None)."""
+    """Path of the newest *valid* resumable checkpoint in ``ckpt_dir``.
+
+    The LATEST pointer is tried first; if it dangles or points at a
+    truncated/corrupt file (a crash can outrun ``save_checkpoint``'s
+    atomic rename on another machine, or the disk can rot), resume falls
+    back through every ``ckpt-*.npz`` newest-first (names sort
+    lexicographically = chronologically) until one passes
+    ``checkpoint_ok``. Returns None when nothing valid remains."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    names = sorted((n for n in os.listdir(ckpt_dir)
+                    if n.startswith("ckpt-") and n.endswith(".npz")),
+                   reverse=True)
     pointer = os.path.join(ckpt_dir, LATEST)
     if os.path.exists(pointer):
         with open(pointer) as f:
-            name = f.read().strip()
+            pointed = f.read().strip()
+        if pointed in names:
+            names.remove(pointed)
+        names.insert(0, pointed)
+    for name in names:
         path = os.path.join(ckpt_dir, name)
-        return path if os.path.exists(path) else None
-    names = sorted(n for n in os.listdir(ckpt_dir)
-                   if n.startswith("ckpt-") and n.endswith(".npz")) \
-        if os.path.isdir(ckpt_dir) else []
-    return os.path.join(ckpt_dir, names[-1]) if names else None
+        if os.path.exists(path) and checkpoint_ok(path):
+            return path
+        logger.warning("skipping invalid/missing checkpoint %s "
+                       "(truncated write?); falling back", path)
+    return None
 
 
 def peek_metadata(path: str) -> dict:

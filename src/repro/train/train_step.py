@@ -16,7 +16,8 @@ from repro.core import losses
 from repro.models.config import ModelConfig
 from repro.models.context import NULL_CTX, RuntimeCtx
 from repro.models import transformer
-from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               global_norm)
 
 
 class TrainState(NamedTuple):
@@ -131,11 +132,28 @@ def make_train_step(
             grads, metrics_seq = jax.lax.scan(micro, acc0, batch)
             grads = jax.tree.map(lambda g: g / accum_steps, grads)
             metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics_seq)
+        # Non-finite grad guard: one loss spike at 1M context must not nuke
+        # the AdamW moments. The check is on the GLOBAL norm of the (accum-
+        # mean) gradient — exactly one check per optimizer update, so the
+        # accumulated path skips iff the equivalent big batch would have.
+        # On a skip the whole update (params, moments, AdamW step counter)
+        # is the identity; grads are zeroed first so the poisoned values
+        # can't propagate NaN through the moment update before the select.
+        gnorm = global_norm(grads)
+        finite = jnp.isfinite(gnorm)
+        safe_grads = jax.tree.map(
+            lambda g: jnp.where(finite, g, jnp.zeros_like(g)), grads)
         params, opt, opt_metrics = adamw_update(
-            grads, state.opt, state.params,
+            safe_grads, state.opt, state.params,
             learning_rate=learning_rate, weight_decay=weight_decay,
             clip_norm=clip_norm)
+        params = jax.tree.map(lambda new, old: jnp.where(finite, new, old),
+                              params, state.params)
+        opt = jax.tree.map(lambda new, old: jnp.where(finite, new, old),
+                           opt, state.opt)
         metrics.update(opt_metrics)
+        metrics["grad_norm"] = gnorm        # raw norm, even when skipped
+        metrics["skipped_nonfinite"] = 1.0 - finite.astype(jnp.float32)
         return TrainState(params, opt), metrics
 
     return train_step

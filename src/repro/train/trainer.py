@@ -226,11 +226,17 @@ class Trainer:
 
         losses_log, t0 = [], time.time()
         tokens_done = 0
+        skipped_steps = 0
         for step in range(start_step, stage.steps):
             self.state, metrics = step_fn(self.state, batch)
             loss = float(metrics["loss"])
             losses_log.append(loss)
             tokens_done += batch["tokens"].size
+            if float(metrics.get("skipped_nonfinite", 0.0)) > 0:
+                # Non-finite grad: the step was a no-op (train_step guard).
+                skipped_steps += 1
+                self.log(f"[{stage.name}] step {step:5d} SKIPPED: non-finite "
+                         f"grad norm {float(metrics['grad_norm'])}")
             if step % self.log_every == 0 or step == stage.steps - 1:
                 self.log(f"[{stage.name}] step {step:5d} loss {loss:.4f} "
                          f"grad_norm {float(metrics['grad_norm']):.3f} "
@@ -257,6 +263,7 @@ class Trainer:
                            if losses_log else float("nan")),
             "losses": losses_log,
             "tokens": tokens_done,
+            "skipped_steps": skipped_steps,
             "wall_s": time.time() - t0,
         }
         self.history.append(summary)

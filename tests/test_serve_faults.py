@@ -1,0 +1,402 @@
+"""Fault-tolerant serving: preemption & replay, retry, poisoning, deadlines.
+
+Acceptance-level guarantees for the fault-tolerance subsystem:
+
+  * deterministic injection — a seeded ``FaultPlan`` always derives the
+    same fault schedule, and its consumption semantics (one-shot OOMs,
+    per-step error attempt counts, poison-when-active) are exact;
+  * preemption & replay — under injected or real allocator OOM the
+    scheduler evicts the lowest-priority / most-recently-admitted victim,
+    survivors' shared-prefix refcounts and tokens are untouched, and the
+    victim replays (prompt + tokens_so_far through chunked prefill) to
+    greedy tokens BIT-IDENTICAL to a fault-free run — under both ``xla``
+    and ``interpret`` decode, including a victim holding CoW-shared
+    prefix blocks;
+  * error isolation — a failing jitted step is retried with capped
+    backoff and the run recovers token-exact; exhausted retries propagate;
+    a NaN-poisoned request retires with finish_reason "error" while the
+    rest of the batch is unaffected;
+  * termination — wall-clock deadlines expire requests wherever they are
+    (active slot or still queued) instead of hanging the engine.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.serve import (FaultPlan, InjectedFault, PagedCachePool, Request,
+                         Scheduler, ServeEngine)
+
+IMPLS = ["xla", "interpret"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced("lwm-7b")
+    from repro.models.registry import build_model
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: deterministic schedules, exact consumption semantics.
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_seeded_deterministic():
+    mk = lambda s: FaultPlan.seeded(s, horizon=40, n_oom=2, n_errors=2,
+                                    error_attempts=1, nan_req_ids=(3,))
+    assert mk(7).describe() == mk(7).describe()
+    assert mk(7).describe() != mk(8).describe()
+    plan = mk(7)
+    assert len(plan.oom_steps) == 2 and len(plan.step_errors) == 2
+    assert set(plan.nan_requests) == {3}
+
+
+def test_fault_plan_consumption():
+    p = FaultPlan(oom_steps=(3,), step_errors={5: 2}, nan_requests={1: 4})
+    assert not p.take_oom(2)
+    assert p.take_oom(3)
+    assert not p.take_oom(4)                 # consumed: fires exactly once
+    assert p.take_oom(10) is False
+    assert p.error_attempts(5) == 2 and p.error_attempts(4) == 0
+    assert p.take_poison(3, {1: 0}) == []    # before the scheduled step
+    assert p.take_poison(4, {0: 2}) == []    # request 1 not in the batch
+    assert p.take_poison(6, {1: 2, 0: 0}) == [2]
+    assert p.take_poison(7, {1: 2}) == []    # consumed
+    assert p.summary() == {"oom": 1, "step_error": 0, "nan": 1}
+
+
+def test_fault_plan_oom_defers_to_reached_step():
+    p = FaultPlan(oom_steps=(5,))
+    assert not p.take_oom(4)
+    assert p.take_oom(7)    # first consultation past the scheduled step
+
+
+# ---------------------------------------------------------------------------
+# Scheduler-level preemption bookkeeping (host-pure, no model).
+# ---------------------------------------------------------------------------
+
+def test_preemption_preserves_shared_prefix_survivors():
+    """Evicting a request that holds CoW-shared prefix blocks leaves the
+    survivor's refcounts, blocks, and tokens untouched; the victim's
+    private blocks return to the allocator; the replay re-adopts the
+    surviving shared prefix so no recompute is wasted."""
+    pool = PagedCachePool(2, max_len=32, block_size=4, num_blocks=16)
+    sched = Scheduler(pool, prefill_chunk=4, vocab_size=64, preemption=True)
+    fake = np.full(pool.num_slots, 7, np.int32)
+    shared = np.arange(10, 22, dtype=np.int32)      # 12 tokens = 3 full blocks
+
+    sched.submit(Request(prompt=shared, max_new_tokens=6), 0)
+    sched.admit()
+    for _ in range(3):                               # r0 prefills + registers
+        sched.commit(sched.plan(), fake)
+    sched.submit(Request(prompt=shared.copy(), max_new_tokens=4), 1)
+    (st1,) = sched.admit()
+    assert st1.prefix_hit == 11                      # capped at len(prompt)-1
+    shared_blocks = [int(b) for b in pool.block_tables[st1.slot] if b >= 0]
+    assert all(pool.allocator.ref[b] == 2 for b in shared_blocks)
+
+    # One step: r0 decodes, r1 prefills its final prompt token (CoW's the
+    # shared tail block first).
+    sched.commit(sched.plan(), fake)
+    st0 = next(st for st in sched.active.values() if st.req_id == 0)
+    tokens_before = list(st0.tokens)
+
+    sched.inject_oom()
+    plan = sched.plan()                # victim = r1 (most recently admitted)
+    assert sched.preemptions == 1
+    assert [st.req_id for st in sched.active.values()] == [0]
+    assert st0.tokens == tokens_before
+    assert all(pool.allocator.ref[b] == 1
+               for b in pool.block_tables[st0.slot] if b >= 0)
+    assert sched.preempted_blocks_freed == 1         # only r1's CoW copy
+    assert len(sched.queue) == 1 and sched.queue[0].preemptions == 1
+    sched.commit(plan, fake)           # r0's very step proceeds un-harmed
+
+    guard = 0
+    while sched.has_work:
+        sched.retire()
+        sched.admit()
+        p = sched.plan()
+        if p is not None:
+            sched.commit(p, fake)
+        guard += 1
+        assert guard < 100, "drain did not terminate"
+    sched.retire()
+    done = {st.req_id: st for st in sched.finished}
+    assert done[0].finish_reason == "length" and len(done[0].tokens) == 6
+    assert done[1].finish_reason == "length" and len(done[1].tokens) == 4
+    assert done[1].preemptions == 1
+    # The replay re-matched the surviving shared prefix: zero wasted tokens.
+    assert sched.recompute_tokens == 0
+    assert pool.live_blocks == 0 and pool.allocator.num_free == 16
+
+
+def test_injected_oom_without_preemption_kills_requester():
+    pool = PagedCachePool(2, max_len=32, block_size=4, num_blocks=16)
+    sched = Scheduler(pool, prefill_chunk=4, vocab_size=64, preemption=False)
+    fake = np.full(pool.num_slots, 7, np.int32)
+    sched.submit(Request(prompt=np.arange(8, dtype=np.int32),
+                         max_new_tokens=4), 0)
+    sched.admit()
+    sched.inject_oom()
+    sched.plan()
+    (st,) = sched.retire()
+    assert st.finish_reason == "cache_full"
+
+
+def test_injected_oom_defers_until_victim_exists():
+    """With preemption on and a single runnable slot, an injected OOM must
+    not fabricate a kill (nor livelock on self-eviction): it stays armed
+    until a second slot gives the policy a victim."""
+    pool = PagedCachePool(2, max_len=32, block_size=4, num_blocks=16)
+    sched = Scheduler(pool, prefill_chunk=4, vocab_size=64, preemption=True)
+    fake = np.full(pool.num_slots, 7, np.int32)
+    sched.submit(Request(prompt=np.arange(8, dtype=np.int32),
+                         max_new_tokens=6), 0)
+    sched.admit()
+    sched.inject_oom()
+    sched.commit(sched.plan(), fake)
+    assert sched.preemptions == 0 and len(sched.active) == 1   # deferred
+    sched.submit(Request(prompt=np.arange(40, 48, dtype=np.int32),
+                         max_new_tokens=4), 1)
+    sched.admit()
+    sched.plan()
+    assert sched.preemptions == 1      # armed OOM fired on the newcomer
+    assert [st.req_id for st in sched.active.values()] == [0]
+
+
+def test_priority_protects_high_priority_requests():
+    pool = PagedCachePool(2, max_len=32, block_size=4, num_blocks=16)
+    sched = Scheduler(pool, prefill_chunk=4, vocab_size=64, preemption=True)
+    sched.submit(Request(prompt=np.arange(8, dtype=np.int32),
+                         max_new_tokens=4, priority=0), 0)
+    sched.submit(Request(prompt=np.arange(40, 48, dtype=np.int32),
+                         max_new_tokens=4, priority=5), 1)
+    sched.admit()
+    sched.inject_oom()
+    sched.plan()
+    # Victim is the LOW priority request even though the high-priority one
+    # was admitted more recently.
+    assert [st.req_id for st in sched.active.values()] == [1]
+
+
+def test_scheduler_expire_active_and_queued():
+    pool = PagedCachePool(1, max_len=32, block_size=4, num_blocks=8)
+    sched = Scheduler(pool, prefill_chunk=4, vocab_size=64, preemption=True)
+    sched.submit(Request(prompt=np.arange(8, dtype=np.int32),
+                         max_new_tokens=4), 0)
+    sched.submit(Request(prompt=np.arange(40, 48, dtype=np.int32),
+                         max_new_tokens=4), 1)
+    sched.admit()                      # one slot: req 1 stays queued
+    assert sched.expire([0, 1]) == 2
+    done = sched.retire()
+    assert {st.req_id: st.finish_reason for st in done} == {
+        0: "deadline", 1: "deadline"}
+    assert not sched.has_work
+    assert pool.num_free == 1 and pool.live_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: preemption replay is bit-identical, both decode impls.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_preemption_replay_token_parity(setup, impl):
+    """An injected mid-decode OOM evicts one of two running requests; the
+    evicted request replays through chunked prefill and must finish with
+    exactly the fault-free run's greedy tokens."""
+    cfg, params = setup
+    reqs = [Request(prompt=np.arange(10, 26, dtype=np.int32),
+                    max_new_tokens=6),
+            Request(prompt=np.arange(40, 52, dtype=np.int32),
+                    max_new_tokens=6)]
+    base = ServeEngine(cfg, params, max_len=48, decode_impl=impl,
+                       paged=True, block_size=4)
+    want = base.serve(reqs, num_slots=2, prefill_chunk=4)
+    eng = ServeEngine(cfg, params, max_len=48, decode_impl=impl,
+                      paged=True, block_size=4,
+                      faults=FaultPlan(oom_steps=(6,)))
+    got = eng.serve(reqs, num_slots=2, prefill_chunk=4)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g.tokens, w.tokens)
+        assert g.finish_reason == w.finish_reason
+    assert eng.stats["preemptions"] >= 1
+    assert max(r.preemptions for r in got) >= 1
+    assert eng.stats["recompute_tokens"] > 0     # the replay's cost is real
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_preempt_victim_holding_cow_shared_prefix(setup, impl):
+    """Satellite: the preempted victim holds CoW-shared prefix blocks (it
+    adopted another request's registered prompt). Survivors' tokens are
+    unaffected and the victim replays bit-identically — both impls."""
+    cfg, params = setup
+    p_long = np.arange(10, 31, dtype=np.int32)          # 21 tokens
+    r_long = Request(prompt=p_long, max_new_tokens=10)
+    r_mid = Request(prompt=np.arange(50, 62, dtype=np.int32),
+                    max_new_tokens=6)
+    r_twin = Request(prompt=p_long.copy(), max_new_tokens=6)
+    base = ServeEngine(cfg, params, max_len=64, decode_impl=impl)
+    solo = [base.serve([r], num_slots=1)[0].tokens
+            for r in (r_long, r_mid, r_twin)]
+    eng = ServeEngine(cfg, params, max_len=64, decode_impl=impl,
+                      paged=True, block_size=8,
+                      faults=FaultPlan(oom_steps=(12,)))
+    out = eng.serve([r_long, r_mid, r_twin], num_slots=2, prefill_chunk=4)
+    for got, want in zip(out, solo):
+        np.testing.assert_array_equal(got.tokens, want)
+    assert eng.stats["preemptions"] >= 1
+    assert eng.stats["prefix_hit_tokens"] >= 20     # twin adopted the prefix
+
+
+def test_natural_oom_preemption_vs_kill(setup):
+    """A genuinely under-provisioned block pool (no injection): with
+    preemption the engine evicts-and-replays and every request completes
+    with unconstrained-pool tokens; without it the legacy behavior kills
+    the requester with "cache_full"."""
+    cfg, params = setup
+    reqs = [Request(prompt=np.arange(10, 20, dtype=np.int32),
+                    max_new_tokens=8),
+            Request(prompt=np.arange(40, 50, dtype=np.int32),
+                    max_new_tokens=8)]
+    ample = ServeEngine(cfg, params, max_len=32, decode_impl="xla",
+                        paged=True, block_size=4)
+    want = ample.serve(reqs, num_slots=2, prefill_chunk=4)
+    # 2 requests x (10 prompt + 8 new) = 2 x 5 blocks > 8 blocks.
+    tight = ServeEngine(cfg, params, max_len=32, decode_impl="xla",
+                        paged=True, block_size=4, num_blocks=8)
+    got = tight.serve(reqs, num_slots=2, prefill_chunk=4)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g.tokens, w.tokens)
+        assert g.finish_reason == "length"
+    assert tight.stats["preemptions"] >= 1
+    kill = ServeEngine(cfg, params, max_len=32, decode_impl="xla",
+                       paged=True, block_size=4, num_blocks=8,
+                       preemption=False)
+    res = kill.serve(reqs, num_slots=2, prefill_chunk=4)
+    assert any(r.finish_reason == "cache_full" for r in res)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: retry/backoff, poisoning, deadlines.
+# ---------------------------------------------------------------------------
+
+def test_step_retry_recovers_token_exact(setup):
+    cfg, params = setup
+    reqs = [Request(prompt=np.arange(10, 18, dtype=np.int32),
+                    max_new_tokens=5),
+            Request(prompt=np.arange(40, 50, dtype=np.int32),
+                    max_new_tokens=4)]
+    base = ServeEngine(cfg, params, max_len=32, decode_impl="xla")
+    want = base.serve(reqs, num_slots=2, prefill_chunk=4)
+    eng = ServeEngine(cfg, params, max_len=32, decode_impl="xla",
+                      max_retries=2, retry_backoff_s=0.0,
+                      faults=FaultPlan(step_errors={2: 2}))
+    got = eng.serve(reqs, num_slots=2, prefill_chunk=4)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g.tokens, w.tokens)
+    assert eng.stats["step_retries"] == 2
+    assert eng.stats["faults"]["step_error"] == 2
+
+
+def test_step_retry_exhaustion_raises(setup):
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, max_len=32, decode_impl="xla",
+                      max_retries=2, retry_backoff_s=0.0,
+                      faults=FaultPlan(step_errors={1: 3}))
+    with pytest.raises(InjectedFault):
+        eng.serve([Request(prompt=np.arange(10, 18, dtype=np.int32),
+                           max_new_tokens=4)], num_slots=1, prefill_chunk=4)
+
+
+def test_nan_poisoned_request_retires_error(setup):
+    """A request whose logits go NaN mid-decode retires with finish_reason
+    "error"; every other request's tokens are bit-identical to a fault-free
+    run (per-request isolation — the batch never crashes)."""
+    cfg, params = setup
+    reqs = [Request(prompt=np.arange(10, 18, dtype=np.int32),
+                    max_new_tokens=6),
+            Request(prompt=np.arange(40, 50, dtype=np.int32),
+                    max_new_tokens=6),
+            Request(prompt=np.arange(70, 82, dtype=np.int32),
+                    max_new_tokens=6)]
+    base = ServeEngine(cfg, params, max_len=32, decode_impl="xla")
+    want = base.serve(reqs, num_slots=3, prefill_chunk=4)
+    eng = ServeEngine(cfg, params, max_len=32, decode_impl="xla",
+                      faults=FaultPlan(nan_requests={1: 5}))
+    got = eng.serve(reqs, num_slots=3, prefill_chunk=4)
+    assert got[1].finish_reason == "error"
+    assert len(got[1].tokens) < 6                   # cut off mid-stream
+    np.testing.assert_array_equal(
+        got[1].tokens, want[1].tokens[:len(got[1].tokens)])
+    for i in (0, 2):
+        np.testing.assert_array_equal(got[i].tokens, want[i].tokens)
+        assert got[i].finish_reason == want[i].finish_reason
+    assert eng.stats["poisoned"] == 1
+
+
+def test_engine_deadline_expires_requests(setup):
+    cfg, params = setup
+    reqs = [Request(prompt=np.arange(10, 18, dtype=np.int32),
+                    max_new_tokens=4),
+            Request(prompt=np.arange(40, 48, dtype=np.int32),
+                    max_new_tokens=4)]
+    eng = ServeEngine(cfg, params, max_len=32, decode_impl="xla",
+                      deadline_s=0.0)
+    got = eng.serve(reqs, num_slots=1, prefill_chunk=4)
+    assert all(r.finish_reason == "deadline" for r in got)
+    assert eng.stats["deadline_expired"] == 2
+
+
+def test_engine_per_request_deadline(setup):
+    cfg, params = setup
+    reqs = [Request(prompt=np.arange(10, 18, dtype=np.int32),
+                    max_new_tokens=4),
+            Request(prompt=np.arange(40, 48, dtype=np.int32),
+                    max_new_tokens=4, deadline_s=0.0)]
+    base = ServeEngine(cfg, params, max_len=32, decode_impl="xla")
+    want = base.serve(reqs[:1], num_slots=1, prefill_chunk=4)
+    eng = ServeEngine(cfg, params, max_len=32, decode_impl="xla")
+    got = eng.serve(reqs, num_slots=2, prefill_chunk=4)
+    assert got[0].finish_reason == "length"
+    np.testing.assert_array_equal(got[0].tokens, want[0].tokens)
+    assert got[1].finish_reason == "deadline" and len(got[1].tokens) == 0
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: seeded chaos run — every recovery path at once.
+# ---------------------------------------------------------------------------
+
+def test_seeded_chaos_all_paths_token_exact(setup):
+    """Under one seeded FaultPlan firing >= 1 OOM-preemption, >= 1 retried
+    step failure, and >= 1 NaN-poisoned request, every non-poisoned request
+    completes with greedy tokens bit-identical to the fault-free run."""
+    cfg, params = setup
+    shared = np.arange(10, 26, dtype=np.int32)
+    reqs = [Request(prompt=shared, max_new_tokens=6),
+            Request(prompt=np.arange(40, 52, dtype=np.int32),
+                    max_new_tokens=6),
+            Request(prompt=shared.copy(), max_new_tokens=5),
+            Request(prompt=np.arange(70, 80, dtype=np.int32),
+                    max_new_tokens=8)]
+    base = ServeEngine(cfg, params, max_len=48, decode_impl="xla",
+                       paged=True, block_size=4)
+    want = base.serve(reqs, num_slots=2, prefill_chunk=4)
+    # seed 1 @ horizon 20: oom at step 8 (both long prompts mid-flight),
+    # step error at 10, req 3 poisoned at its first planned row.
+    plan = FaultPlan.seeded(1, horizon=20, n_oom=1, n_errors=1,
+                            error_attempts=1, nan_req_ids=(3,))
+    eng = ServeEngine(cfg, params, max_len=48, decode_impl="xla",
+                      paged=True, block_size=4, retry_backoff_s=0.0,
+                      faults=plan)
+    got = eng.serve(reqs, num_slots=2, prefill_chunk=4)
+    fired = plan.summary()
+    assert fired["oom"] >= 1 and fired["step_error"] >= 1
+    assert fired["nan"] >= 1
+    assert eng.stats["preemptions"] >= 1
+    assert got[3].finish_reason == "error"
+    for i in (0, 1, 2):
+        np.testing.assert_array_equal(got[i].tokens, want[i].tokens)
+        assert got[i].finish_reason == want[i].finish_reason

@@ -24,7 +24,9 @@ from repro.models.registry import build_model
 from repro.optim import schedules
 from repro.optim.adamw import adamw_init, adamw_update
 from repro.train import StageSpec, Trainer
-from repro.train.checkpoint import load_checkpoint, save_checkpoint
+from repro.train.checkpoint import (checkpoint_ok, latest_checkpoint,
+                                    load_checkpoint, load_train_state,
+                                    save_checkpoint, save_train_state)
 from repro.train.train_step import init_train_state, make_train_step
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -88,6 +90,90 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
         jax.random.PRNGKey(0))
     with pytest.raises((ValueError, KeyError)):
         load_checkpoint(path, bigger)
+
+
+def test_checkpoint_atomic_write(tmp_path):
+    """Crash-safe save: the finished file is complete (zip CRCs pass) and no
+    ``.tmp`` staging sibling survives the rename."""
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, {"w": np.arange(4, dtype=np.float32)})
+    assert checkpoint_ok(path + ".npz")
+    assert [n for n in os.listdir(tmp_path) if n.endswith(".tmp")] == []
+
+
+def test_truncated_checkpoint_falls_back_to_previous(tmp_path):
+    """Regression: a checkpoint truncated mid-write (crash faster than the
+    atomic rename on another host, disk rot) must not wedge resume — the
+    loader skips it and falls back to the newest checkpoint that validates."""
+    state = {"w": np.arange(4, dtype=np.float32)}
+    save_train_state(str(tmp_path), state, stage_index=0, stage_name="a",
+                     step=2, data_cursor=2)
+    newest = save_train_state(str(tmp_path), {"w": state["w"] + 1},
+                              stage_index=0, stage_name="a",
+                              step=4, data_cursor=4)
+    assert latest_checkpoint(str(tmp_path)) == newest
+
+    blob = open(newest, "rb").read()
+    with open(newest, "wb") as f:          # truncate: central dir gone
+        f.write(blob[: len(blob) // 2])
+    assert not checkpoint_ok(newest)
+    fallback = latest_checkpoint(str(tmp_path))
+    assert fallback == os.path.join(str(tmp_path), "ckpt-00-000002.npz")
+    restored, meta = load_train_state(str(tmp_path), state)
+    assert meta["step"] == 2 and meta["data_cursor"] == 2
+    np.testing.assert_array_equal(restored["w"], state["w"])
+
+    with open(fallback, "wb") as f:        # nothing valid left
+        f.write(blob[:10])
+    assert latest_checkpoint(str(tmp_path)) is None
+
+
+def test_nonfinite_grad_guard_skips_update():
+    """A batch that produces non-finite gradients must leave the entire
+    TrainState (params, AdamW moments, step counter) bit-identical, report
+    the skip in metrics, and not poison subsequent good steps."""
+    cfg = get_reduced("granite-3-2b")
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, learning_rate=3e-3))
+    good = _uniform_batch(cfg, 2, 64)
+    state, m = step(state, good)
+    assert float(m["skipped_nonfinite"]) == 0.0
+
+    bad = dict(good)
+    bad["loss_weights"] = good["loss_weights"].copy()
+    bad["loss_weights"][0, 0] = np.nan
+    state2, m = step(state, bad)
+    assert float(m["skipped_nonfinite"]) == 1.0
+    assert not np.isfinite(float(m["grad_norm"]))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(state2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(state2.opt.step) == int(state.opt.step)  # LR schedule intact
+
+    state3, m = step(state2, good)
+    assert float(m["skipped_nonfinite"]) == 0.0
+    assert int(state3.opt.step) == int(state2.opt.step) + 1
+
+
+def test_nonfinite_grad_guard_accum_parity():
+    """Accumulated path: the guard checks the accum-MEAN gradient — one NaN
+    microbatch poisons the mean, so the whole update skips exactly as the
+    equivalent big batch would (never a partial apply)."""
+    cfg = get_reduced("granite-3-2b").replace(dtype="float32")
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    rows, s, accum = 4, 64, 2
+    big = _uniform_batch(cfg, rows, s)
+    micro = {k: v.reshape((accum, rows // accum) + v.shape[1:])
+             for k, v in big.items()}
+    micro["loss_weights"] = micro["loss_weights"].copy()
+    micro["loss_weights"][1, 0, 0] = np.inf
+    step = jax.jit(make_train_step(cfg, learning_rate=1e-3,
+                                   accum_steps=accum))
+    state2, m = step(state, micro)
+    assert float(m["skipped_nonfinite"]) == 1.0
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(state2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_schedules():

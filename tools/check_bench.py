@@ -29,6 +29,13 @@ claims rest on:
     consumed identical token budgets; and at every full-scale Appendix-F
     stage boundary the spec-diff reshard moves fewer bytes per device than
     gathering the TrainState replicated.
+  * BENCH_serve_chaos.json — under the injected fault plan (>= 1
+    OOM-preemption, >= 1 retried step failure, 1 NaN-poisoned request)
+    every request completes, every non-poisoned request's greedy tokens
+    are bit-identical to the fault-free baseline, the poisoned request
+    retires "error", and replay recompute stays bounded; the 1M-context
+    analytic row must show preemption recovery re-prefilling only the
+    non-shared tail (shared-prefix survival), not the full context.
 
 Run locally:  python tools/check_bench.py  (from the repo root)
 """
@@ -199,6 +206,59 @@ def check_serve_paged() -> None:
            "serve_paged: the 1M-context analytic_paper_stage row is gone")
 
 
+def check_serve_chaos() -> None:
+    rows = _load("BENCH_serve_chaos.json")
+    if rows is None:
+        return
+    measured = 0
+    stage_rows = 0
+    for row in rows or []:
+        if "analytic_paper_stage" in row:
+            stage = row["analytic_paper_stage"]
+            stage_rows += 1
+            delta = stage.get("delta", {})
+            # Fail-closed defaults: a missing/renamed key must FAIL the gate.
+            _check(delta.get("all_complete") is True,
+                   "serve_chaos[1M-analytic]: not every preempted user "
+                   "completed after replay")
+            _check(delta.get("preemptions", 0) >= 1,
+                   "serve_chaos[1M-analytic]: injected OOMs caused no "
+                   "preemption (injection path dead?)")
+            _check(delta.get("recompute_overhead", 1.0) <= 0.1,
+                   "serve_chaos[1M-analytic]: replay recompute overhead "
+                   "exceeds 10% of the fault-free work")
+            _check(delta.get("replay_tokens_saved_by_prefix", -1)
+                   > delta.get("naive_replay_tokens", 10 ** 18) // 2,
+                   "serve_chaos[1M-analytic]: shared-prefix survival no "
+                   "longer absorbs the bulk of replay recompute")
+            continue
+        measured += 1
+        delta = row.get("delta", {})
+        fired = row.get("fired", {})
+        _check(fired.get("oom", 0) >= 1 and fired.get("step_error", 0) >= 1
+               and fired.get("nan", 0) >= 1,
+               "serve_chaos[measured]: the fault plan no longer fires all "
+               "three fault kinds")
+        _check(delta.get("all_requests_complete") is True,
+               "serve_chaos[measured]: a request never finished under faults")
+        _check(delta.get("nonpoisoned_tokens_match") is True,
+               "serve_chaos[measured]: non-poisoned requests are no longer "
+               "bit-identical to the fault-free baseline")
+        _check(delta.get("poisoned_retired_error") is True,
+               "serve_chaos[measured]: the NaN-poisoned request did not "
+               "retire with finish_reason='error'")
+        _check(delta.get("preemptions", 0) >= 1,
+               "serve_chaos[measured]: injected OOM caused no preemption")
+        _check(delta.get("step_retries", 0) >= 1,
+               "serve_chaos[measured]: the retry loop never engaged")
+        _check(delta.get("recompute_overhead", 1.0) <= 0.5,
+               "serve_chaos[measured]: replay recompute overhead exceeds "
+               "50% of the fault-free work")
+    _check(measured >= 1, "serve_chaos: no measured row at all")
+    _check(stage_rows >= 1,
+           "serve_chaos: the 1M-context analytic_paper_stage row is gone")
+
+
 def check_context_stages() -> None:
     rows = _load("BENCH_context_stages.json")
     if rows is None:
@@ -250,6 +310,7 @@ def main() -> int:
     check_decode_fused()
     check_serve_batching()
     check_serve_paged()
+    check_serve_chaos()
     check_context_stages()
     if _errors:
         for e in _errors:
@@ -259,7 +320,8 @@ def main() -> int:
           "materialized logits buffers; continuous batching wastes fewer "
           "pad-token steps than static; paged cache beats contiguous "
           "residency with token parity; stage-boundary reshard beats "
-          "replicate with accum token parity)")
+          "replicate with accum token parity; chaos run recovers token-exact "
+          "with bounded replay recompute)")
     return 0
 
 
