@@ -151,12 +151,13 @@ def _measured_row(workload) -> dict:
 
     from repro.configs import get_reduced
     from repro.models.registry import build_model
-    from repro.serve import ServeEngine
+    from repro.serve import CacheConfig, ServeConfig, ServeEngine
 
     cfg = get_reduced("lwm-7b")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, max_len=MAX_LEN)
+    eng = ServeEngine(cfg, params,
+                      ServeConfig(cache=CacheConfig(max_len=MAX_LEN)))
 
     t0 = time.time()
     static_res = eng.generate_static(_requests(workload))

@@ -80,22 +80,25 @@ def _measured_row() -> dict:
 
     from repro.configs import get_reduced
     from repro.models.registry import build_model
-    from repro.serve import ServeEngine
+    from repro.serve import (CacheConfig, FaultConfig, ServeConfig,
+                             ServeEngine)
 
     cfg = get_reduced("lwm-7b")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    kw = dict(max_len=MAX_LEN, paged=True, block_size=BLOCK_SIZE,
-              retry_backoff_s=0.0)
+    sc = ServeConfig(
+        cache=CacheConfig(max_len=MAX_LEN, paged=True,
+                          block_size=BLOCK_SIZE),
+        faults=FaultConfig(retry_backoff_s=0.0))
 
-    base_eng = ServeEngine(cfg, params, **kw)
+    base_eng = ServeEngine(cfg, params, sc)
     t0 = time.time()
     base = base_eng.serve(_requests(), num_slots=NUM_SLOTS,
                           prefill_chunk=CHUNK)
     base_wall = round(time.time() - t0, 2)
 
     plan = _fault_plan()
-    chaos_eng = ServeEngine(cfg, params, faults=plan, **kw)
+    chaos_eng = ServeEngine(cfg, params, sc, faults=plan)
     t0 = time.time()
     chaos = chaos_eng.serve(_requests(), num_slots=NUM_SLOTS,
                             prefill_chunk=CHUNK)

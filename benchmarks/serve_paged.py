@@ -89,21 +89,22 @@ def _measured_row() -> dict:
 
     from repro.configs import get_reduced
     from repro.models.registry import build_model
-    from repro.serve import ServeEngine
+    from repro.serve import CacheConfig, ServeConfig, ServeEngine
 
     cfg = get_reduced("lwm-7b")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     bpt = _bytes_per_token(cfg)
 
-    cont_eng = ServeEngine(cfg, params, max_len=MAX_LEN)
+    cont_eng = ServeEngine(cfg, params,
+                           ServeConfig(cache=CacheConfig(max_len=MAX_LEN)))
     t0 = time.time()
     cont_res = cont_eng.serve(_requests(), num_slots=NUM_SLOTS,
                               prefill_chunk=CHUNK)
     cont_wall = round(time.time() - t0, 2)
 
-    paged_eng = ServeEngine(cfg, params, max_len=MAX_LEN, paged=True,
-                            block_size=BLOCK_SIZE)
+    paged_eng = ServeEngine(cfg, params, ServeConfig(cache=CacheConfig(
+        max_len=MAX_LEN, paged=True, block_size=BLOCK_SIZE)))
     t0 = time.time()
     paged_res = paged_eng.serve(_requests(), num_slots=NUM_SLOTS,
                                 prefill_chunk=CHUNK)

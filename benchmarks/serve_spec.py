@@ -1,0 +1,207 @@
+"""Speculative decoding economics: accepted tokens per target sweep.
+
+At the paper's serving scale the decode step is memory-bound: one new token
+costs a full split-K sweep over up to a million cached KV tokens (512 KiB
+per token for LWM-7B — half a terabyte of cache traffic per token at 1M).
+Verification through the chunked-prefill path prices k extra scan columns
+into the SAME sweep, so every accepted draft token amortizes the dominant
+cost. This bench prices that trade:
+
+  * measured rows (contiguous AND paged pools) — the reduced-LWM engine
+    serves a mixed workload twice: plain greedy baseline vs speculative
+    self-drafting (drafter == target: every honest proposal accepted) with
+    a ``FaultPlan`` draft-flip schedule forcing real rejections mid-run so
+    the rollback path is priced too. The contract: bit-identical greedy
+    tokens, > 1 accepted token per verify step, and strictly fewer target
+    model calls than the baseline.
+  * 1M-context analytic row — full-scale cache-sweep byte model for
+    granite-3-2b (160 KB/token cache) drafting for lwm-7b (512 KB/token):
+    expected accepted prefix under a per-token agreement rate, cost per
+    emitted token in target-sweep units, and the speedup bound.
+
+``--dry-run`` (CI smoke) computes the analytic row only — no model, no
+compile, no JSON write.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+HERE = os.path.dirname(__file__)
+OUT_PATH = os.path.join(HERE, "..", "BENCH_serve_spec.json")
+
+NUM_SLOTS = 2
+CHUNK = 4
+MAX_LEN = 96
+BLOCK_SIZE = 8
+DRAFT_LEN = 4
+# Draft flips scheduled early (spec runs take FEWER target steps than the
+# baseline — a late schedule would never fire; see FaultPlan.take_flip's
+# deferred semantics).
+FLIP_STEPS = (5, 8)
+
+# Analytic stage: cross-model drafting at the paper's 1M-token context.
+STAGE_CONTEXT = 1 << 20
+STAGE_AGREEMENT = 0.8          # assumed per-token drafter/target agreement
+
+
+def _requests():
+    from repro.serve import Request
+    return [
+        Request(prompt=np.arange(10, 24, dtype=np.int32), max_new_tokens=12),
+        Request(prompt=np.arange(40, 49, dtype=np.int32), max_new_tokens=10),
+        Request(prompt=(7 + np.arange(20, dtype=np.int32) * 3).astype(
+            np.int32) % 900, max_new_tokens=14),
+        Request(prompt=np.arange(200, 212, dtype=np.int32),
+                max_new_tokens=8),
+    ]
+
+
+def _measured_row(cfg, params, *, paged: bool) -> dict:
+    import jax
+
+    from repro.serve import (CacheConfig, FaultPlan, ServeConfig,
+                             ServeEngine, SpecConfig)
+
+    cache = CacheConfig(max_len=MAX_LEN, paged=paged, block_size=BLOCK_SIZE)
+    base_eng = ServeEngine(cfg, params, ServeConfig(cache=cache))
+    t0 = time.time()
+    base = base_eng.serve(_requests(), num_slots=NUM_SLOTS,
+                          prefill_chunk=CHUNK)
+    base_wall = round(time.time() - t0, 2)
+
+    plan = FaultPlan(flip_steps=FLIP_STEPS)
+    spec_eng = ServeEngine(cfg, params, ServeConfig(
+        cache=cache, spec=SpecConfig(drafter=cfg, drafter_params=params,
+                                     draft_len=DRAFT_LEN, enabled=True)),
+        faults=plan)
+    t0 = time.time()
+    spec = spec_eng.serve(_requests(), num_slots=NUM_SLOTS,
+                          prefill_chunk=CHUNK)
+    spec_wall = round(time.time() - t0, 2)
+
+    tokens_match = all(
+        np.array_equal(b.tokens, s.tokens)
+        and b.finish_reason == s.finish_reason
+        for b, s in zip(base, spec))
+    st = spec_eng.stats
+    return {
+        "bench": "serve_spec",
+        "backend": jax.default_backend(),
+        "pool": "paged" if paged else "contiguous",
+        "workload": {"requests": len(_requests()), "num_slots": NUM_SLOTS,
+                     "prefill_chunk": CHUNK, "max_len": MAX_LEN,
+                     "block_size": BLOCK_SIZE, "model": cfg.name,
+                     "draft_len": DRAFT_LEN,
+                     "drafter": "self (identical params)"},
+        "fault_plan": plan.describe(),
+        "fired": plan.summary(),
+        "baseline": {"model_calls": base_eng.stats["model_calls"],
+                     "useful_tokens": base_eng.stats["useful_tokens"],
+                     "wall_s": base_wall},
+        "spec": {"model_calls": st["model_calls"],
+                 "drafter_calls": st["drafter_calls"],
+                 "spec_steps": st["spec_steps"],
+                 "spec_drafted": st["spec_drafted"],
+                 "spec_accepted": st["spec_accepted"],
+                 "spec_rollbacks": st["spec_rollbacks"],
+                 "spec_rollback_tokens": st["spec_rollback_tokens"],
+                 "spec_blocks_freed": st["spec_blocks_freed"],
+                 "useful_tokens": st["useful_tokens"],
+                 "wall_s": spec_wall},
+        "delta": {
+            "tokens_match": tokens_match,
+            "accepted_per_spec_step": st["accepted_per_spec_step"],
+            "rollbacks": int(st["spec_rollbacks"]),
+            "target_calls_saved": int(base_eng.stats["model_calls"]
+                                      - st["model_calls"]),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# 1M-context analytic row: cross-model drafting byte economics (no arrays)
+# ---------------------------------------------------------------------------
+
+def _kv_bytes_per_token(cfg) -> int:
+    # K + V per layer, bf16.
+    return 2 * cfg.num_kv_heads * cfg.head_dim * 2 * cfg.num_layers
+
+
+def _paper_stage_row(*, context=STAGE_CONTEXT, draft_len=DRAFT_LEN,
+                     agreement=STAGE_AGREEMENT) -> dict:
+    from repro.configs import get_config
+
+    target = get_config("lwm-7b")
+    drafter = get_config("granite-3-2b")
+    tb = _kv_bytes_per_token(target)       # bytes swept per cached token
+    db = _kv_bytes_per_token(drafter)
+    r = db / tb                            # drafter sweep / target sweep
+    # Expected accepted prefix length under i.i.d. per-token agreement a:
+    # E[m] = a + a^2 + ... + a^k; every verify step emits m + 1 tokens.
+    e_accept = sum(agreement ** j for j in range(1, draft_len + 1))
+    emitted = e_accept + 1.0
+    # Cost per verify cycle in target-sweep units: the verify step is ONE
+    # sweep (extra chunk columns ride it) + k drafter sweeps at ratio r.
+    cycle_cost = 1.0 + draft_len * r
+    speedup = emitted / cycle_cost
+    plain_bytes = context * tb             # cache traffic per emitted token
+    spec_bytes = context * (tb + draft_len * db) / emitted
+    return {
+        "bench": "serve_spec",
+        "analytic_paper_stage": {
+            "workload": {"context_tokens": context, "draft_len": draft_len,
+                         "agreement_rate": agreement,
+                         "target": target.name, "drafter": drafter.name,
+                         "target_kv_bytes_per_token": tb,
+                         "drafter_kv_bytes_per_token": db},
+            "expected_accepted_per_step": round(e_accept, 4),
+            "tokens_per_target_sweep": round(emitted, 4),
+            "drafter_sweep_cost_ratio": round(r, 6),
+            "plain_sweep_bytes_per_token": int(plain_bytes),
+            "spec_sweep_bytes_per_token": int(spec_bytes),
+            "delta": {
+                "tokens_per_sweep_gt_1": emitted > 1.0,
+                "sweep_speedup": round(speedup, 4),
+                "sweep_bytes_reduction": round(plain_bytes / spec_bytes, 4),
+            },
+        },
+    }
+
+
+def run(*, quick: bool = False, dry_run: bool = False) -> list[dict]:
+    if dry_run:
+        # Analytic byte model only: same code path the gate reads, CI-sized.
+        return [{"bench": "serve_spec", "dry_run": True,
+                 **_paper_stage_row()}]
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models.registry import build_model
+
+    cfg = get_reduced("lwm-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rows = [_measured_row(cfg, params, paged=False),
+            _measured_row(cfg, params, paged=True),
+            _paper_stage_row()]
+    with open(OUT_PATH, "w") as f:
+        json.dump(rows, f, indent=2)
+    return rows
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--dry-run", action="store_true")
+    args = ap.parse_args(argv)
+    for row in run(quick=args.quick, dry_run=args.dry_run):
+        print(json.dumps(row, indent=2))
+
+
+if __name__ == "__main__":
+    main()

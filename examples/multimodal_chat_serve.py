@@ -21,7 +21,7 @@ from repro.configs import get_reduced
 from repro.data.vision import vision_block
 from repro.data.vocab import build_vocab
 from repro.models.registry import build_model
-from repro.serve import Request, ServeEngine
+from repro.serve import CacheConfig, Request, ServeConfig, ServeEngine
 
 
 def main():
@@ -36,9 +36,9 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     vocab = build_vocab(cfg.vocab_size, codebook_size=cfg.vocab_size // 4)
-    eng = ServeEngine(cfg, params, max_len=256, bos_id=vocab.bos,
-                      decode_impl=args.decode_impl, paged=args.paged,
-                      block_size=32)
+    eng = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=256, paged=args.paged, block_size=32),
+        bos_id=vocab.bos, decode_impl=args.decode_impl))
 
     # 1) text chat request
     text_req = Request(prompt=np.arange(20, 60, dtype=np.int32),

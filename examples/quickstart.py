@@ -10,7 +10,7 @@ from repro.configs import get_reduced
 from repro.data import build_vocab, data_iterator
 from repro.data.pipeline import LWM_1K
 from repro.models.registry import build_model
-from repro.serve import Request, ServeEngine
+from repro.serve import CacheConfig, Request, ServeConfig, ServeEngine
 from repro.train.train_step import init_train_state, make_train_step
 
 
@@ -33,7 +33,8 @@ def main():
               f"grad_norm {float(metrics['grad_norm']):.2f}")
 
     # --- serve ----------------------------------------------------------------
-    eng = ServeEngine(cfg, state.params, max_len=128)
+    eng = ServeEngine(cfg, state.params,
+                      ServeConfig(cache=CacheConfig(max_len=128)))
     res = eng.generate([
         Request(prompt=np.arange(10, 40, dtype=np.int32), max_new_tokens=12),
         Request(prompt=np.arange(50, 60, dtype=np.int32), max_new_tokens=12,

@@ -2,16 +2,27 @@
 
 Boots a model (reduced scale on CPU; full scale would restore a checkpoint
 on TPU), then serves batched requests through the ServeEngine — the paper's
-§5 inference stack. ``--long-context`` demonstrates the ring-decode
-configuration structurally (mesh + ring-sharded caches) on the host mesh.
+§5 inference stack.
+
+Every engine knob is a flag *derived* from the ``serve.config`` dataclasses
+(``add_config_flags``): ``--max-len``, ``--paged``, ``--block-size``,
+``--decode-impl``, ``--max-retries``, ``--deadline-s``,
+``--no-preemption``, ``--drafter``/``--draft-len``/``--spec``, ... — the
+flag schema cannot drift from ``ServeConfig`` because it IS ``ServeConfig``.
+
+``--drafter <arch>`` turns on speculative decoding: the named registry
+config (vocab-aligned to the target) drafts ``--draft-len`` tokens per
+decode step for the target to verify.
 
 Examples:
     python -m repro.launch.serve --arch lwm-7b --reduced --requests 4
-    python -m repro.launch.serve --arch rwkv6-3b --reduced --max-new 32
+    python -m repro.launch.serve --arch lwm-7b --reduced --paged \
+        --drafter granite-3-2b --draft-len 4
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -20,6 +31,7 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.models.registry import build_model
 from repro.serve import Request, ServeEngine
+from repro.serve.config import add_config_flags, config_from_args
 from repro.train.checkpoint import load_checkpoint
 
 
@@ -32,26 +44,8 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--max-len", type=int, default=256)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--paged", action="store_true",
-                    help="serve from the block-paged KV pool (prefix "
-                         "sharing; attention-cache families only)")
-    ap.add_argument("--block-size", type=int, default=256,
-                    help="paged pool block size in tokens")
-    ap.add_argument("--decode-impl", default=None,
-                    choices=["auto", "pallas", "interpret", "xla", "ref"])
-    ap.add_argument("--max-retries", type=int, default=2,
-                    help="re-attempts of a failed jitted step "
-                         "(capped exponential backoff)")
-    ap.add_argument("--deadline-s", type=float, default=None,
-                    help="per-request wall-clock budget; past it the "
-                         "request retires with finish_reason='deadline'")
-    ap.add_argument("--preemption", default=True,
-                    action=argparse.BooleanOptionalAction,
-                    help="evict-and-replay the lowest-priority request "
-                         "under paged-pool pressure instead of killing the "
-                         "requester (--no-preemption restores kill)")
+    add_config_flags(ap)                 # ServeConfig-derived engine flags
+    ap.set_defaults(max_len=256)         # launcher-friendly default
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -60,15 +54,24 @@ def main(argv=None) -> int:
     if args.checkpoint:
         params, meta = load_checkpoint(args.checkpoint, params)
         print(f"restored checkpoint ({meta})")
-    print(f"serving {cfg.name} ({cfg.family}) — "
-          f"{model.param_count():,} params, max_len={args.max_len}")
 
-    eng = ServeEngine(cfg, params, max_len=args.max_len, seed=args.seed,
-                      paged=args.paged, block_size=args.block_size,
-                      decode_impl=args.decode_impl,
-                      max_retries=args.max_retries,
-                      deadline_s=args.deadline_s,
-                      preemption=args.preemption)
+    overrides = {}
+    if args.drafter:
+        # Resolve the drafter arch and align its vocab with the target's
+        # (speculative proposals must be target tokens; reduced configs
+        # shrink vocabs differently per family).
+        dcfg = (get_reduced(args.drafter) if args.reduced
+                else get_config(args.drafter))
+        dcfg = dataclasses.replace(dcfg, vocab_size=cfg.vocab_size)
+        dparams = build_model(dcfg).init(jax.random.PRNGKey(args.seed + 1))
+        overrides = {"drafter": dcfg, "drafter_params": dparams}
+        print(f"drafter: {dcfg.name} ({dcfg.family}), "
+              f"draft_len={args.draft_len}")
+    config = config_from_args(args, **overrides)
+    print(f"serving {cfg.name} ({cfg.family}) — "
+          f"{model.param_count():,} params, max_len={config.cache.max_len}")
+
+    eng = ServeEngine(cfg, params, config)
     rng = np.random.default_rng(args.seed)
     reqs = [Request(
         prompt=rng.integers(16, cfg.vocab_size // 2,
@@ -85,6 +88,10 @@ def main(argv=None) -> int:
               f"{r.tokens[:12].tolist()}{'...' if r.steps > 12 else ''}")
     print(f"{total_new} tokens in {dt:.1f}s "
           f"({total_new / dt:.1f} tok/s batch decode)")
+    if eng.stats.get("spec_steps"):
+        print(f"speculative: {eng.stats['spec_steps']} verify steps, "
+              f"{eng.stats['accepted_per_spec_step']} accepted tokens/step, "
+              f"{eng.stats['spec_rollbacks']} rollbacks")
     return 0
 
 

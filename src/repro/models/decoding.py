@@ -433,6 +433,7 @@ def prefill_step(
     *,
     ctx: RuntimeCtx = NULL_CTX,
     block_tables: jnp.ndarray | None = None,  # (B, NB) paged block tables
+    all_logits: bool = False,
 ) -> tuple[jnp.ndarray, dict]:
     """Append a multi-token chunk to each slot's cache through the decode
     path (continuous batching's chunked prefill).
@@ -449,6 +450,14 @@ def prefill_step(
     each row's logits at its *last valid* column — the next-token logits a
     sampler needs, whether the row decoded one token or just finished its
     prompt.
+
+    With ``all_logits=True`` the scan instead stacks EVERY column's logits
+    and returns ``((B, C, V), new_caches)`` — the speculative-decoding
+    verify step: column j's logits are the target's next-token distribution
+    given the chunk through column j, exactly what a j-step decode loop
+    would have produced (same per-column causal masking, same ``upper``
+    cache bound), so comparing drafted tokens against their argmax IS
+    verification against plain greedy decoding.
 
     With ``block_tables`` the caches are the paged physical pools and every
     per-column write scatters through the table — a chunk freely spans
@@ -478,11 +487,13 @@ def prefill_step(
             new_caches = jax.tree.map(
                 functools.partial(_select_rows, valid), new_caches, caches)
         last = jnp.where(valid[:, None, None], lg, last)
-        return (new_caches, last), None
+        return (new_caches, last), (lg if all_logits else None)
 
-    (caches, last_logits), _ = jax.lax.scan(
+    (caches, last_logits), ys = jax.lax.scan(
         step, (caches, logits0),
         (tokens.T.astype(jnp.int32), jnp.arange(c, dtype=jnp.int32)))
+    if all_logits:
+        return jnp.swapaxes(ys[:, :, 0, :], 0, 1), caches   # (B, C, V)
     return last_logits, caches
 
 

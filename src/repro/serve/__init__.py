@@ -1,7 +1,12 @@
+from repro.serve.config import (CacheConfig, FaultConfig, ServeConfig,
+                                SpecConfig, add_config_flags,
+                                config_from_args, config_from_kwargs)
 from repro.serve.engine import ServeEngine, Request, Result
 from repro.serve.faults import FaultPlan, InjectedFault
 from repro.serve.pool import BlockAllocator, CachePool, PagedCachePool
 from repro.serve.scheduler import (PendingRequest, Scheduler, SlotState,
                                    StepPlan)
-from repro.serve.sampling import (greedy, temperature_sample, cfg_logits,
-                                  sample_batch, nonfinite_rows, poison_rows)
+from repro.serve.sampling import (greedy, greedy_tokens, temperature_sample,
+                                  cfg_logits, sample_batch, nonfinite_rows,
+                                  poison_rows)
+from repro.serve.spec import Drafter

@@ -1,0 +1,215 @@
+"""Grouped serving configuration (the ``ServeConfig`` API).
+
+``ServeEngine.__init__`` accreted one flat keyword per feature across PRs
+3-6 (cache shape, paging, retries, deadlines, preemption ...) and
+speculative decoding would have pushed it past twenty. The knobs now live
+in dataclasses grouped by the subsystem that consumes them:
+
+  * ``CacheConfig``  — cache-pool geometry (contiguous or paged),
+  * ``FaultConfig``  — retry / deadline / preemption policy,
+  * ``SpecConfig``   — speculative decoding (drafter model + draft length),
+  * ``ServeConfig``  — the composition, plus engine-level scalars
+                       (bos_id, seed, decode_impl).
+
+``ServeEngine(cfg, params, config=ServeConfig(...))`` is the canonical
+constructor. Legacy flat kwargs still work through a shim
+(``config_from_kwargs``) that maps them into the grouped form and emits a
+single ``DeprecationWarning``.
+
+CLI flags are *derived* from the dataclass fields (``add_config_flags`` /
+``config_from_args``) so ``launch/serve.py`` cannot drift from the config
+schema: adding a field here adds the flag everywhere.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+from typing import Any
+
+# decode_impl accepts the resolve_decode_impl vocabulary (None = inherit
+# from ctx/cfg). Kept here so the derived CLI flag gets real choices.
+DECODE_IMPL_CHOICES = ("auto", "pallas", "interpret", "xla", "ref")
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Cache-pool geometry. ``paged=True`` swaps the contiguous per-slot
+    caches for the block-paged pool (refcounted copy-on-write prefix
+    sharing over ``num_blocks`` physical blocks of ``block_size``)."""
+    max_len: int = 4096
+    num_slots: int | None = None       # None = per-call (min(len(reqs), 8))
+    prefill_chunk: int = 8
+    paged: bool = False
+    block_size: int = 256
+    num_blocks: int | None = None      # None = num_slots * blocks_per_slot
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Failure-handling policy (docs/serving.md, "Failure handling")."""
+    max_retries: int = 2
+    retry_backoff_s: float = 0.05
+    retry_backoff_cap_s: float = 2.0
+    deadline_s: float | None = None    # per-request wall-clock budget
+    preemption: bool = True
+    max_preemptions: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative decoding: a small drafter proposes ``draft_len`` tokens
+    per greedy decode-phase slot; the target verifies the chunk in ONE
+    step and rolls back the first disagreement (docs/serving.md,
+    "Speculative decoding").
+
+    ``drafter`` is the drafter's ``ModelConfig`` — it must share the
+    target's vocabulary and be an attention-cache family
+    (``decoding.paged_families``; rollback truncates positional caches,
+    which recurrent state does not have). ``drafter_params`` carries its
+    weights (skipped by the derived CLI — launchers resolve the arch name
+    and init/load params themselves)."""
+    drafter: Any = None                # ModelConfig | None
+    drafter_params: Any = None
+    draft_len: int = 4
+    enabled: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
+    faults: FaultConfig = dataclasses.field(default_factory=FaultConfig)
+    spec: SpecConfig = dataclasses.field(default_factory=SpecConfig)
+    bos_id: int = 0
+    seed: int = 0
+    decode_impl: str | None = None
+
+
+# Legacy flat kwarg -> (group attribute on ServeConfig, field name).
+# ``None`` group = top-level ServeConfig field.
+_LEGACY_MAP: dict[str, tuple[str | None, str]] = {
+    "max_len": ("cache", "max_len"),
+    "num_slots": ("cache", "num_slots"),
+    "prefill_chunk": ("cache", "prefill_chunk"),
+    "paged": ("cache", "paged"),
+    "block_size": ("cache", "block_size"),
+    "num_blocks": ("cache", "num_blocks"),
+    "max_retries": ("faults", "max_retries"),
+    "retry_backoff_s": ("faults", "retry_backoff_s"),
+    "retry_backoff_cap_s": ("faults", "retry_backoff_cap_s"),
+    "deadline_s": ("faults", "deadline_s"),
+    "preemption": ("faults", "preemption"),
+    "max_preemptions": ("faults", "max_preemptions"),
+    "drafter": ("spec", "drafter"),
+    "drafter_params": ("spec", "drafter_params"),
+    "draft_len": ("spec", "draft_len"),
+    "bos_id": (None, "bos_id"),
+    "seed": (None, "seed"),
+    "decode_impl": (None, "decode_impl"),
+}
+
+
+def config_from_kwargs(**kwargs) -> ServeConfig:
+    """Map legacy flat ``ServeEngine`` kwargs into a ``ServeConfig``.
+
+    Unknown names raise ``TypeError`` (same contract as a real keyword
+    mismatch). The caller — the engine's deprecation shim — owns the
+    warning; this function is also the single source of truth for which
+    flat spellings exist."""
+    unknown = set(kwargs) - set(_LEGACY_MAP)
+    if unknown:
+        raise TypeError(
+            f"ServeEngine got unexpected keyword argument(s): "
+            f"{sorted(unknown)}")
+    groups: dict[str | None, dict] = {"cache": {}, "faults": {},
+                                      "spec": {}, None: {}}
+    for name, value in kwargs.items():
+        group, field = _LEGACY_MAP[name]
+        groups[group][field] = value
+    if "drafter" in groups["spec"] and groups["spec"]["drafter"] is not None:
+        groups["spec"].setdefault("enabled", True)
+    return ServeConfig(cache=CacheConfig(**groups["cache"]),
+                       faults=FaultConfig(**groups["faults"]),
+                       spec=SpecConfig(**groups["spec"]),
+                       **groups[None])
+
+
+# ---------------------------------------------------------------------------
+# Derived CLI flags: the dataclass fields ARE the flag schema
+# ---------------------------------------------------------------------------
+
+# Fields that cannot ride the generic derivation.
+_CLI_SKIP = {"drafter_params"}         # weights are not a flag
+_CLI_SPECIAL = {
+    # decode_impl gets its resolve vocabulary as argparse choices.
+    "decode_impl": dict(type=str, choices=list(DECODE_IMPL_CHOICES)),
+    # drafter is a registry arch name on the CLI; the launcher resolves it
+    # to a ModelConfig + params (see launch/serve.py).
+    "drafter": dict(type=str, metavar="ARCH"),
+}
+# Field name -> flag spelling, where the raw name would read badly.
+_CLI_FLAG = {"enabled": "--spec"}      # --spec / --no-spec
+
+_GROUPS = (("cache", CacheConfig), ("faults", FaultConfig),
+           ("spec", SpecConfig), (None, ServeConfig))
+
+
+def _iter_cli_fields():
+    for group, cls in _GROUPS:
+        for f in dataclasses.fields(cls):
+            if f.name in _CLI_SKIP or dataclasses.is_dataclass(f.type) \
+                    or f.name in ("cache", "faults", "spec"):
+                continue
+            yield group, f
+
+
+def _scalar_type(f: dataclasses.Field):
+    if isinstance(f.default, bool):
+        return bool
+    if isinstance(f.default, int):
+        return int
+    if isinstance(f.default, float):
+        return float
+    # Optional numerics default to None: infer from the annotation string.
+    ann = str(f.type)
+    if "float" in ann:
+        return float
+    if "int" in ann:
+        return int
+    return str
+
+
+def add_config_flags(ap: argparse.ArgumentParser) -> None:
+    """Add one flag per ``ServeConfig`` field (``--max-len``,
+    ``--no-preemption``, ``--draft-len``, ...). Defaults come from the
+    dataclasses, so flags and config cannot drift."""
+    for _, f in _iter_cli_fields():
+        flag = _CLI_FLAG.get(f.name, "--" + f.name.replace("_", "-"))
+        if f.name in _CLI_SPECIAL:
+            ap.add_argument(flag, dest=f.name, default=f.default,
+                            **_CLI_SPECIAL[f.name])
+        elif isinstance(f.default, bool):
+            ap.add_argument(flag, dest=f.name, default=f.default,
+                            action=argparse.BooleanOptionalAction)
+        else:
+            ap.add_argument(flag, dest=f.name, type=_scalar_type(f),
+                            default=f.default)
+
+
+def config_from_args(args: argparse.Namespace, **overrides) -> ServeConfig:
+    """Rebuild a ``ServeConfig`` from parsed derived flags. ``overrides``
+    replace individual fields by flat name (e.g. a launcher passing the
+    resolved drafter ``ModelConfig`` + params for the ``--drafter`` arch
+    string)."""
+    flat = {}
+    for _, f in _iter_cli_fields():
+        flat[f.name] = getattr(args, f.name)
+    flat.update(overrides)
+    # A resolved drafter implies speculation on; --spec alone also requests
+    # it (the engine rejects spec-without-drafter with a clear error).
+    enabled = bool(flat.pop("enabled", False)) \
+        or flat.get("drafter") is not None
+    cfg = config_from_kwargs(**flat)
+    if enabled != cfg.spec.enabled:
+        cfg = dataclasses.replace(
+            cfg, spec=dataclasses.replace(cfg.spec, enabled=enabled))
+    return cfg

@@ -31,6 +31,7 @@ import dataclasses
 import functools
 import logging
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -40,9 +41,11 @@ from repro.models.config import ModelConfig
 from repro.models.context import NULL_CTX, RuntimeCtx
 from repro.models import decoding, transformer
 from repro.serve import sampling
+from repro.serve.config import ServeConfig, config_from_kwargs
 from repro.serve.faults import FaultPlan, InjectedFault
 from repro.serve.pool import CachePool, PagedCachePool
-from repro.serve.scheduler import Scheduler
+from repro.serve.scheduler import DECODE, Scheduler
+from repro.serve.spec import Drafter
 
 logger = logging.getLogger(__name__)
 
@@ -85,76 +88,106 @@ class Result:
 
 
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, *,
-                 ctx: RuntimeCtx = NULL_CTX, max_len: int = 4096,
-                 bos_id: int = 0, seed: int = 0,
-                 decode_impl: str | None = None,
-                 num_slots: int | None = None, prefill_chunk: int = 8,
-                 paged: bool = False, block_size: int = 256,
-                 num_blocks: int | None = None, max_retries: int = 2,
-                 retry_backoff_s: float = 0.05,
-                 retry_backoff_cap_s: float = 2.0,
-                 deadline_s: float | None = None, preemption: bool = True,
-                 max_preemptions: int = 8,
-                 faults: FaultPlan | None = None):
-        """``decode_impl`` selects the decode-attention engine for every
-        step this engine runs (overrides ``ctx.decode_impl`` and
-        ``cfg.decode_impl``): "auto" (default) = the split-K Pallas
-        flash-decode kernel on TPU with a clean XLA fallback elsewhere;
-        "interpret"/"pallas"/"xla" force a path (see
-        ``core.decode.resolve_decode_impl``).
+    def __init__(self, cfg: ModelConfig, params,
+                 config: ServeConfig | None = None, *,
+                 ctx: RuntimeCtx = NULL_CTX,
+                 faults: FaultPlan | None = None, **legacy):
+        """``ServeEngine(cfg, params, config=ServeConfig(...))`` is the
+        canonical constructor: every policy knob lives in the grouped
+        ``serve.config`` dataclasses —
 
-        ``num_slots`` fixes the continuous-batching slot count for
-        ``serve`` (default: per-call, min(len(requests), 8));
-        ``prefill_chunk`` is the number of prompt tokens a prefilling slot
-        consumes per interleaved step.
+          * ``config.cache`` (``CacheConfig``): cache geometry.
+            ``paged=True`` swaps the contiguous per-slot caches for the
+            block-paged pool (``PagedCachePool``): per-slot block tables
+            over ``num_blocks`` physical blocks of ``block_size`` tokens,
+            refcounted copy-on-write prefix sharing, free-block admission.
+            Paged serving is single-device: incompatible with
+            ``ctx.decode_ring`` (the block table indexes one device's
+            pool).
+          * ``config.faults`` (``FaultConfig``): retry / deadline /
+            preemption policy (docs/serving.md, "Failure handling").
+          * ``config.spec`` (``SpecConfig``): speculative decoding — a
+            drafter model proposes ``draft_len`` tokens per greedy
+            decode-phase slot, the target verifies the chunk in one step
+            and rolls back the first disagreement (docs/serving.md,
+            "Speculative decoding"). Requires attention-cache families
+            (rollback truncates positional caches) and a shared vocab.
+          * ``config.decode_impl`` selects the decode-attention engine
+            (overrides ``ctx.decode_impl`` and ``cfg.decode_impl``):
+            "auto" = split-K Pallas flash-decode on TPU, XLA elsewhere;
+            see ``core.decode.resolve_decode_impl``.
 
-        ``paged=True`` swaps the contiguous per-slot caches for the
-        block-paged pool (``PagedCachePool``): per-slot block tables over
-        ``num_blocks`` physical blocks of ``block_size`` tokens, with
-        refcounted copy-on-write prefix sharing and free-block admission
-        (``paged=False`` keeps the measured contiguous baseline).
-        Paged serving is single-device: it is incompatible with
-        ``ctx.decode_ring`` (the block table indexes one device's pool).
+        ``ctx`` and ``faults`` stay direct kwargs — they are runtime
+        objects (mesh context; a single-run consumable fault schedule),
+        not configuration.
 
-        Fault tolerance (see docs/serving.md, "Failure handling"):
-        ``max_retries`` bounds re-attempts of a failed jitted step, backed
-        off ``retry_backoff_s * 2**attempt`` capped at
-        ``retry_backoff_cap_s``; ``deadline_s`` is a per-request wall-clock
-        budget (overridable per ``Request.deadline_s``) after which the
-        request retires "deadline" wherever it is; ``preemption=True`` lets
-        the scheduler evict-and-replay the lowest-priority slot when the
-        paged pool runs out of blocks (up to ``max_preemptions`` per
-        request) instead of killing the requester; ``faults`` attaches a
-        deterministic ``serve.faults.FaultPlan`` (single ``serve()`` run —
-        its schedule is consumed as it fires).
+        Legacy flat kwargs (``ServeEngine(cfg, params, max_len=...,
+        paged=True)``) still construct an identical engine through
+        ``config_from_kwargs`` but emit one ``DeprecationWarning``.
         """
-        if decode_impl is not None:
-            ctx = dataclasses.replace(ctx, decode_impl=decode_impl)
-        if paged and ctx.decode_ring:
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass either config=ServeConfig(...) or legacy flat "
+                    f"kwargs, not both (got {sorted(legacy)})")
+            warnings.warn(
+                "flat ServeEngine kwargs are deprecated; pass "
+                "config=ServeConfig(cache=CacheConfig(...), ...) "
+                "(see repro.serve.config)", DeprecationWarning,
+                stacklevel=2)
+            config = config_from_kwargs(**legacy)
+        if config is None:
+            config = ServeConfig()
+        if config.decode_impl is not None:
+            ctx = dataclasses.replace(ctx, decode_impl=config.decode_impl)
+        cache, fault, spec = config.cache, config.faults, config.spec
+        if cache.paged and ctx.decode_ring:
             raise NotImplementedError(
                 "paged KV cache x ring-sharded decode is unsupported; see "
                 "docs/serving.md ('Paged cache')")
+        if spec.enabled:
+            if spec.drafter is None:
+                raise ValueError("SpecConfig.enabled=True needs a drafter "
+                                 "ModelConfig (+ drafter_params)")
+            if not decoding.paged_families(cfg):
+                raise NotImplementedError(
+                    "speculative decoding needs an attention-cache target "
+                    f"(rollback truncates positional caches); {cfg.name} "
+                    f"({cfg.family}) keeps recurrent state")
+            if spec.drafter.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"drafter vocab {spec.drafter.vocab_size} != target "
+                    f"vocab {cfg.vocab_size}: speculative proposals must "
+                    "be target tokens")
+            if spec.draft_len < 1:
+                raise ValueError(f"draft_len must be >= 1, got "
+                                 f"{spec.draft_len}")
         self.cfg = cfg
         self.params = params
+        self.config = config
         self.ctx = ctx
-        self.max_len = max_len
-        self.bos_id = bos_id
-        self.num_slots = num_slots
-        self.prefill_chunk = prefill_chunk
-        self.paged = paged
-        self.block_size = block_size
-        self.num_blocks = num_blocks
-        self.max_retries = max_retries
-        self.retry_backoff_s = retry_backoff_s
-        self.retry_backoff_cap_s = retry_backoff_cap_s
-        self.deadline_s = deadline_s
-        self.preemption = preemption
-        self.max_preemptions = max_preemptions
+        # Flat attribute mirrors (read by benches/tests and internal code).
+        self.max_len = cache.max_len
+        self.bos_id = config.bos_id
+        self.num_slots = cache.num_slots
+        self.prefill_chunk = cache.prefill_chunk
+        self.paged = cache.paged
+        self.block_size = cache.block_size
+        self.num_blocks = cache.num_blocks
+        self.max_retries = fault.max_retries
+        self.retry_backoff_s = fault.retry_backoff_s
+        self.retry_backoff_cap_s = fault.retry_backoff_cap_s
+        self.deadline_s = fault.deadline_s
+        self.preemption = fault.preemption
+        self.max_preemptions = fault.max_preemptions
+        self.spec = spec
         self.faults = faults
-        self._base_key = jax.random.PRNGKey(seed)
+        self._base_key = jax.random.PRNGKey(config.seed)
         self._req_counter = 0
         self.stats: dict = {}
+        # Drafters are cached per slot count: the drafter's own pool and
+        # jit caches survive across serve() calls with the same shape.
+        self._drafters: dict[int, Drafter] = {}
 
         # One jitted chunk step serves prefill, decode, and mixed batches
         # (decode is the C == 1 case); compiled once per (slots, C) shape.
@@ -167,6 +200,26 @@ class ServeEngine:
             decoding.prefill_step(cfg, params, tokens, caches, offsets,
                                   lengths, ctx=ctx, block_tables=tables),
             donate_argnums=(2,))
+        # All-logits twins for speculative verify steps: same scan, but
+        # every column's logits come back ((B, C, V)) so commit can score
+        # each drafted token against the target's greedy choice. Only
+        # invoked on steps that carry >= 1 verify row — ordinary steps
+        # never materialize the (B, C, V) block.
+        self._step_all = jax.jit(functools.partial(
+            decoding.prefill_step, cfg, ctx=ctx, all_logits=True),
+            donate_argnums=(2,))
+        self._step_paged_all = jax.jit(
+            lambda params, tokens, caches, offsets, lengths, tables:
+            decoding.prefill_step(cfg, params, tokens, caches, offsets,
+                                  lengths, ctx=ctx, block_tables=tables,
+                                  all_logits=True),
+            donate_argnums=(2,))
+        # Last-valid-column gather: (B, C, V) -> (B, 1, V), the next-token
+        # logits the ordinary sample/CFG path consumes on verify steps.
+        self._last_col = jax.jit(
+            lambda logits, lengths: jnp.take_along_axis(
+                logits, jnp.clip(lengths - 1, 0)[:, None, None]
+                .astype(jnp.int32), axis=1))
         # Single-token step for the static baseline's lockstep loop.
         self._decode = jax.jit(functools.partial(
             decoding.decode_step, cfg, ctx=ctx), donate_argnums=(2,))
@@ -179,6 +232,15 @@ class ServeEngine:
         # One batched fold per step (not one dispatch per slot): request key
         # x token index -> per-row sampling key.
         self._fold = jax.jit(jax.vmap(jax.random.fold_in))
+
+    def _get_drafter(self, n_slots: int, chunk: int) -> Drafter:
+        d = self._drafters.get(n_slots)
+        if d is None:
+            d = Drafter(self.spec.drafter, self.spec.drafter_params,
+                        num_slots=n_slots, max_len=self.max_len,
+                        sync_chunk=chunk, ctx=self.ctx)
+            self._drafters[n_slots] = d
+        return d
 
     # -- continuous engine -----------------------------------------------------
 
@@ -236,6 +298,8 @@ class ServeEngine:
                      prefix_hit_tokens=0, peak_live_blocks=0,
                      step_retries=0, poisoned=0, deadline_expired=0)
         faults = self.faults
+        drafter = (self._get_drafter(n_slots, chunk)
+                   if self.spec.enabled else None)
         while True:
             if deadlines:
                 # Watchdog: a request past its wall-clock budget terminates
@@ -262,6 +326,9 @@ class ServeEngine:
                 for st in admitted:
                     if st.req.cfg_scale is not None:
                         uncond_pool.reset(st.slot)
+            if drafter is not None:
+                for st in admitted:
+                    drafter.reset(st.slot, st)
             if not sched.has_work:
                 break
             if not sched.active:
@@ -270,24 +337,40 @@ class ServeEngine:
             step_idx = stats["model_calls"]
             if faults is not None and faults.take_oom(step_idx):
                 sched.inject_oom()
-            plan = sched.plan()
+            drafts: dict[int, list[int]] = {}
+            if drafter is not None:
+                drafts = self._draft(sched, drafter, faults, step_idx)
+            plan = sched.plan(drafts)
             if plan is None:        # only pre-finished slots; retire them
                 continue
+            verify = (plan.draft_counts is not None
+                      and bool(plan.draft_counts.any()))
             if self.paged:
                 stats["peak_live_blocks"] = max(stats["peak_live_blocks"],
                                                 pool.live_blocks)
-                logits, pool.caches = self._try_step(
+                step = self._step_paged_all if verify else self._step_paged
+                out, pool.caches = self._try_step(
                     step_idx, stats,
-                    lambda: self._step_paged(
+                    lambda: step(
                         self.params, jnp.asarray(plan.tokens), pool.caches,
                         jnp.asarray(plan.offsets), jnp.asarray(plan.lengths),
                         jnp.asarray(pool.block_tables)))
             else:
-                logits, pool.caches = self._try_step(
+                step = self._step_all if verify else self._step
+                out, pool.caches = self._try_step(
                     step_idx, stats,
-                    lambda: self._step(
+                    lambda: step(
                         self.params, jnp.asarray(plan.tokens), pool.caches,
                         jnp.asarray(plan.offsets), jnp.asarray(plan.lengths)))
+            if verify:
+                # out is (B, C, V): the sample/CFG path consumes each row's
+                # last-valid-column logits (exactly what the non-verify
+                # step returns); commit additionally scores every column.
+                all_logits = out
+                logits = self._last_col(all_logits,
+                                        jnp.asarray(plan.lengths))
+            else:
+                all_logits, logits = None, out
             if uncond_pool is not None:
                 logits = self._cfg_combine(logits, sched, uncond_pool, stats)
             if faults is not None:
@@ -312,12 +395,28 @@ class ServeEngine:
             else:   # all-greedy step: skip the full-vocab sort + draw
                 toks = self._greedy(logits, jnp.asarray(sched.vision_lo),
                                     jnp.asarray(sched.vision_hi))
-            sched.commit(plan, np.asarray(toks[:, 0]))
+            greedy_cols = None
+            if verify:
+                # Per-column greedy tokens of the verify step — the
+                # acceptance comparator (sampling.greedy_tokens under the
+                # same per-slot vision mask the plain path applies).
+                greedy_cols = np.asarray(self._greedy(
+                    all_logits, jnp.asarray(sched.vision_lo),
+                    jnp.asarray(sched.vision_hi)))
+            rejected_before = sched.spec_rollback_tokens
+            sched.commit(plan, np.asarray(toks[:, 0]), greedy_cols)
+            rejected = sched.spec_rollback_tokens - rejected_before
+            if drafter is not None:
+                # Uniform post-commit truncation: the drafter's cache never
+                # runs ahead of the target's (handles accept, reject,
+                # degrade-to-plain-decode, and preemption in one rule).
+                for slot in sched.active:
+                    drafter.truncate(slot, sched.pool.cache_len[slot])
 
             stats["model_calls"] += 1
             stats["scan_columns"] += plan.columns
             stats["token_slots"] += int(plan.tokens.size)
-            stats["useful_tokens"] += int(plan.lengths.sum())
+            stats["useful_tokens"] += int(plan.lengths.sum()) - rejected
             stats["prefill_tokens"] += int(plan.lengths[plan.is_prefill].sum())
             stats["decode_tokens"] += int(plan.lengths[~plan.is_prefill].sum())
 
@@ -325,10 +424,63 @@ class ServeEngine:
         stats["preempted_tokens"] = sched.preempted_tokens
         stats["recompute_tokens"] = sched.recompute_tokens
         stats["preempted_blocks_freed"] = sched.preempted_blocks_freed
+        stats["spec_steps"] = sched.spec_steps
+        stats["spec_drafted"] = sched.spec_drafted
+        stats["spec_accepted"] = sched.spec_accepted
+        stats["spec_rollbacks"] = sched.spec_rollbacks
+        stats["spec_rollback_tokens"] = sched.spec_rollback_tokens
+        stats["spec_blocks_freed"] = sched.spec_blocks_freed
+        stats["drafter_calls"] = drafter.calls if drafter is not None else 0
+        stats["accepted_per_spec_step"] = round(
+            (sched.spec_accepted + sched.spec_steps)
+            / max(sched.spec_steps, 1), 4)
         if faults is not None:
             stats["faults"] = faults.summary()
         self.stats = _finish_stats(stats)
         return results  # type: ignore[return-value]
+
+    def _draft(self, sched: Scheduler, drafter: Drafter,
+               faults: FaultPlan | None, step_idx: int
+               ) -> dict[int, list[int]]:
+        """One speculative round: sync the drafter's caches toward the
+        target's, then propose up to ``draft_len`` tokens for every
+        eligible slot. Eligible = decode phase with a pending token,
+        greedy (temperature 0 — acceptance compares argmax), no CFG (the
+        unconditional branch advances one token per step), fully synced,
+        and with budget/capacity headroom for at least one draft.
+        A ``FaultPlan.flip_steps`` injection corrupts every proposal
+        ((d + 1) mod vocab) to force the rollback path."""
+        drafter.sync(sched)
+        slot_k: dict[int, int] = {}
+        next_tok: dict[int, int] = {}
+        for slot, st in sched.active.items():
+            if (st.finish_reason is not None or st.phase != DECODE
+                    or st.next_token < 0
+                    or sched.temperature[slot] > 0
+                    or sched.has_cfg[slot]):
+                continue
+            target_len = int(sched.pool.cache_len[slot])
+            if not drafter.synced(slot, target_len):
+                continue        # still catching up; draft next step
+            # k is bounded by the generation budget (k + 1 tokens may
+            # emit) and cache capacity (the row writes 1 + k entries and
+            # the next decode needs one more position).
+            k = min(self.spec.draft_len,
+                    st.max_new - len(st.tokens) - 1)
+            if self.max_len:
+                k = min(k, self.max_len - target_len - 1)
+            if k >= 1:
+                slot_k[slot] = k
+                next_tok[slot] = int(st.next_token)
+        if not slot_k:
+            return {}
+        drafts = drafter.propose(slot_k, next_tok, sched.vision_lo,
+                                 sched.vision_hi)
+        if faults is not None and faults.take_flip(step_idx):
+            v = self.cfg.vocab_size
+            drafts = {s: [(t + 1) % v for t in d]
+                      for s, d in drafts.items()}
+        return drafts
 
     def _try_step(self, step_idx: int, stats: dict, thunk):
         """Run one jitted step with bounded retry + exponential backoff.

@@ -29,6 +29,11 @@ value of ``stats["model_calls"]`` when the fault is consulted):
     logits row is overwritten with NaN. The engine's non-finite detector
     (``sampling.nonfinite_rows``) must retire the request with an "error"
     status instead of crashing the batch.
+  * **draft flips** (``flip_steps``) — at step ``s`` every speculative
+    drafter proposal is corrupted ((d + 1) mod vocab) before the verify
+    plan is built, forcing the target to reject at the first drafted
+    column and exercise the rollback path (cache_len truncation +
+    paged tail-block dealloc) with bit-identical greedy output.
 
 ``FaultPlan.seeded`` derives a schedule from a seed (``np.random.
 default_rng`` — platform-stable), for randomized chaos harnesses; explicit
@@ -45,14 +50,17 @@ class InjectedFault(RuntimeError):
 
 
 class FaultPlan:
-    def __init__(self, *, oom_steps=(), step_errors=None, nan_requests=None):
+    def __init__(self, *, oom_steps=(), step_errors=None, nan_requests=None,
+                 flip_steps=()):
         self.oom_steps = sorted(int(s) for s in oom_steps)
         self.step_errors = {int(k): int(v)
                             for k, v in dict(step_errors or {}).items()}
         self.nan_requests = {int(k): int(v)
                              for k, v in dict(nan_requests or {}).items()}
+        self.flip_steps = sorted(int(s) for s in flip_steps)
         self._oom_pending = set(self.oom_steps)
         self._nan_pending = dict(self.nan_requests)
+        self._flip_pending = set(self.flip_steps)
         self.fired: list[dict] = []
 
     @classmethod
@@ -76,9 +84,12 @@ class FaultPlan:
     def describe(self) -> dict:
         """The full (immutable) schedule — two plans with equal describe()
         inject identically."""
-        return {"oom_steps": list(self.oom_steps),
-                "step_errors": dict(self.step_errors),
-                "nan_requests": dict(self.nan_requests)}
+        out = {"oom_steps": list(self.oom_steps),
+               "step_errors": dict(self.step_errors),
+               "nan_requests": dict(self.nan_requests)}
+        if self.flip_steps:
+            out["flip_steps"] = list(self.flip_steps)
+        return out
 
     # -- consumption (engine-facing) -------------------------------------------
 
@@ -95,6 +106,21 @@ class FaultPlan:
 
     def error_attempts(self, step: int) -> int:
         return self.step_errors.get(step, 0)
+
+    def take_flip(self, step: int) -> bool:
+        """True once per scheduled draft-flip step that ``step`` has
+        reached (same deferred semantics as ``take_oom``): the engine
+        corrupts EVERY drafter proposal that step ((d + 1) mod vocab), so
+        the target's verify pass must reject at the first drafted column
+        and the rollback path runs — with greedy output unchanged, because
+        the emitted correction token is the target's own greedy choice
+        regardless of what was drafted."""
+        due = [s for s in self._flip_pending if s <= step]
+        if not due:
+            return False
+        self._flip_pending.discard(min(due))
+        self.record("draft_flip", step)
+        return True
 
     def take_poison(self, step: int, active_rows: dict) -> list[int]:
         """Rows (slots) to poison this step. ``active_rows`` maps req_id ->

@@ -93,6 +93,19 @@ class CachePool:
         assert self.max_len == 0 or new <= self.max_len, (
             f"slot {slot} overflowed max_len={self.max_len}")
 
+    def rollback(self, slot: int, new_len: int) -> int:
+        """Truncate the slot's cache to ``new_len`` tokens (speculative
+        decoding rejected a drafted suffix). Contiguous slots own their
+        whole row, so the rollback is pure bookkeeping: ``cache_len`` is
+        the only validity authority and every decode path masks positions
+        past it, so the stale rejected entries are never attended again.
+        Returns the number of physical blocks freed (always 0 here)."""
+        cur = int(self.cache_len[slot])
+        assert 0 <= new_len <= cur, (
+            f"slot {slot}: rollback to {new_len} outside [0, {cur}]")
+        self.cache_len[slot] = new_len
+        return 0
+
     # -- jitted slot reset -----------------------------------------------------
 
     @staticmethod
@@ -261,6 +274,29 @@ class PagedCachePool(CachePool):
                 self.registry_version += 1
             return 1
         return 0
+
+    def rollback(self, slot: int, new_len: int) -> int:
+        """Truncate the slot to ``new_len`` tokens and *deallocate* the tail
+        blocks past the new fill (speculative decoding rejected a drafted
+        suffix). Every table entry at virtual index >= ceil(new_len /
+        block_size) is dereferenced — a CoW-shared tail block has its
+        refcount decremented (survivors keep their bytes), a privately-held
+        one returns to the allocator. The new last block may keep stale
+        rejected entries past ``new_len``; ``cache_len`` masks them, same
+        as a recycled block's previous occupant. Returns the number of
+        physical blocks actually freed."""
+        cur = int(self.cache_len[slot])
+        assert 0 <= new_len <= cur, (
+            f"slot {slot}: rollback to {new_len} outside [0, {cur}]")
+        keep = self.blocks_for(new_len)
+        freed = 0
+        for i in range(keep, self.blocks_per_slot):
+            blk = int(self.block_tables[slot, i])
+            if blk >= 0:
+                freed += self._deref_block(blk)
+                self.block_tables[slot, i] = -1
+        self.cache_len[slot] = new_len
+        return freed
 
     # -- capacity --------------------------------------------------------------
 

@@ -13,9 +13,18 @@ import jax
 import jax.numpy as jnp
 
 
+def greedy_tokens(logits: jnp.ndarray) -> jnp.ndarray:
+    """The single source of greedy token selection: argmax over the vocab
+    axis, int32. Shape-polymorphic ((..., V) -> (...)) — every greedy
+    consumer in the serving stack routes through here, including the
+    speculative-decoding acceptance comparator, so draft/verify parity
+    with plain decoding holds by construction rather than coincidence."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
 def greedy(logits: jnp.ndarray) -> jnp.ndarray:
     """(B, 1, V) -> (B, 1) int32."""
-    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return greedy_tokens(logits)
 
 
 def temperature_sample(logits: jnp.ndarray, rng: jax.Array,
@@ -49,7 +58,7 @@ def greedy_batch(logits: jnp.ndarray, vision_lo: jnp.ndarray,
     ids = jnp.arange(v)
     ok = (ids[None, :] >= vision_lo[:, None]) & (ids[None, :] < vision_hi[:, None])
     logits = jnp.where(ok[:, None, :], logits.astype(jnp.float32), -1e30)
-    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return greedy_tokens(logits)
 
 
 def sample_batch(
@@ -69,7 +78,7 @@ def sample_batch(
     ids = jnp.arange(v)
     ok = (ids[None, :] >= vision_lo[:, None]) & (ids[None, :] < vision_hi[:, None])
     logits = jnp.where(ok[:, None, :], logits.astype(jnp.float32), -1e30)
-    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)          # (B,1)
+    greedy_tok = greedy_tokens(logits)                                  # (B,1)
     scaled = logits / jnp.maximum(temperature, 1e-6)[:, None, None]
     k = jnp.clip(top_k, 1, v)
     sort_desc = -jnp.sort(-scaled, axis=-1)

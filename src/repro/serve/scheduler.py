@@ -99,6 +99,13 @@ class StepPlan:
     is_prefill: np.ndarray     # (B,) bool — row consumes prompt tokens
     sample_rows: np.ndarray    # (B,) bool — row's sampled token is kept
     columns: int
+    # Speculative verify rows: > 0 marks a decode row carrying its pending
+    # token plus that many drafted tokens ([t0, d1..dk], length 1 + k);
+    # commit() accepts the agreeing prefix and rolls back the rest.
+    draft_counts: np.ndarray | None = None   # (B,) int32
+
+    def draft_count(self, slot: int) -> int:
+        return 0 if self.draft_counts is None else int(self.draft_counts[slot])
 
 
 class Scheduler:
@@ -129,6 +136,13 @@ class Scheduler:
         self.preempted_tokens = 0       # cache tokens freed by evictions
         self.recompute_tokens = 0       # replay tokens re-prefilled (wasted)
         self.preempted_blocks_freed = 0  # physical blocks actually freed
+        # Speculative-decoding accounting (commit() verify rows).
+        self.spec_steps = 0             # verify row-events executed
+        self.spec_drafted = 0           # drafted tokens verified
+        self.spec_accepted = 0          # drafted tokens accepted
+        self.spec_rollbacks = 0         # verify events that rejected >= 1
+        self.spec_rollback_tokens = 0   # rejected tokens rolled back
+        self.spec_blocks_freed = 0      # paged blocks freed by rollbacks
         self._admit_seq = 0
         self._force_oom = False         # armed by inject_oom()
         b = pool.num_slots
@@ -363,12 +377,13 @@ class Scheduler:
         self.preemptions += 1
         self.preempted_tokens += lost
         self.preempted_blocks_freed += int(freed or 0)
-        tokens, offsets, lengths, is_prefill, sample_rows = rows
+        tokens, offsets, lengths, is_prefill, sample_rows, draft_counts = rows
         tokens[slot] = 0
         offsets[slot] = 0
         lengths[slot] = 0
         is_prefill[slot] = False
         sample_rows[slot] = False
+        draft_counts[slot] = 0
         if st.tokens:
             replay = np.concatenate([
                 np.asarray(st.req.prompt, np.int32),
@@ -418,41 +433,63 @@ class Scheduler:
 
     # -- step planning ---------------------------------------------------------
 
-    def plan(self) -> StepPlan | None:
+    def plan(self, drafts: dict[int, list[int]] | None = None
+             ) -> StepPlan | None:
+        """Build one step's (num_slots, C) layout. ``drafts`` maps a
+        decode-phase slot to its drafter's proposed tokens: that row
+        becomes a *verify* row carrying ``[next_token, d1..dk]`` (length
+        1 + k) whose per-column logits ``commit()`` scores against the
+        drafted chunk. Under paged block pressure a verify row degrades
+        back to a plain decode row (drop the drafts) BEFORE any victim is
+        evicted — speculation appetite must never cause a preemption a
+        plain decode step would have avoided."""
         if not any(st.finish_reason is None for st in self.active.values()):
             return None             # nothing runnable; caller retires next
-        # Chunk width = the largest prefill take this step, rounded up to a
-        # power of two (capped by prefill_chunk): a short final chunk never
-        # drags every decoding slot through a full chunk of dead pad
-        # columns, while the jitted step compiles at most log2(chunk) + 1
-        # distinct widths; 1 when the batch is decode-only.
-        need = max((min(self.prefill_chunk, len(st.prompt) - st.cursor)
-                    for st in self.active.values()
-                    if st.phase == PREFILL and not st.finish_reason),
-                   default=1)
+        drafts = drafts or {}
+        # Chunk width = the largest take this step (prefill chunk or
+        # 1 + k verify row), rounded up to a power of two: a short final
+        # chunk never drags every decoding slot through a full chunk of
+        # dead pad columns, while the jitted step compiles at most
+        # log2(chunk) + 1 distinct widths; 1 when the batch is decode-only.
+        def want(st):
+            if st.phase == PREFILL:
+                return min(self.prefill_chunk, len(st.prompt) - st.cursor)
+            return 1 + len(drafts.get(st.slot, ()))
+        need = max((want(st) for st in self.active.values()
+                    if not st.finish_reason), default=1)
         c = min(1 << (need - 1).bit_length() if need > 1 else 1,
-                self.prefill_chunk)
+                max(self.prefill_chunk, need))
         b = self.pool.num_slots
         tokens = np.zeros((b, c), np.int32)
         offsets = np.zeros(b, np.int32)
         lengths = np.zeros(b, np.int32)
         is_prefill = np.zeros(b, bool)
         sample_rows = np.zeros(b, bool)
-        rows = (tokens, offsets, lengths, is_prefill, sample_rows)
+        draft_counts = np.zeros(b, np.int32)
+        rows = (tokens, offsets, lengths, is_prefill, sample_rows,
+                draft_counts)
         for slot, st in list(self.active.items()):
             if slot not in self.active:  # preempted earlier this plan
                 continue
             if st.finish_reason:        # admitted pre-finished (max_new < 1)
                 continue
+            d: list[int] | None = None
             if st.phase == PREFILL:
                 take = min(c, len(st.prompt) - st.cursor)
             else:
-                take = 1
+                d = list(drafts.get(slot, ())) or None
+                take = 1 + len(d) if d else 1
             if self._force_oom and self._apply_injected_oom(st, rows):
                 continue                # requester itself was evicted/killed
             if self.pool.paged:
                 while not self.pool.ensure_capacity(
                         slot, int(self.pool.cache_len[slot]) + take):
+                    if d:
+                        # Degrade: drop the drafts, keep the plain decode
+                        # append (cheapest relief — no eviction).
+                        d = None
+                        take = 1
+                        continue
                     # Mid-flight block exhaustion: evict a victim and retry
                     # (its freed blocks satisfy this append), or — without
                     # preemption, or with nothing evictable — retire the
@@ -477,23 +514,42 @@ class Scheduler:
                 sample_rows[slot] = st.cursor + take == len(st.prompt)
             else:
                 tokens[slot, 0] = st.next_token
-                lengths[slot] = 1
+                lengths[slot] = take
                 sample_rows[slot] = True
+                if d:
+                    tokens[slot, 1:take] = d
+                    draft_counts[slot] = take - 1
         if not lengths.any():
             return None                 # every runnable row just retired
         return StepPlan(tokens=tokens, offsets=offsets, lengths=lengths,
                         is_prefill=is_prefill, sample_rows=sample_rows,
-                        columns=c)
+                        columns=c, draft_counts=draft_counts)
 
-    def commit(self, plan: StepPlan, sampled: np.ndarray) -> None:
+    def commit(self, plan: StepPlan, sampled: np.ndarray,
+               greedy_cols: np.ndarray | None = None) -> None:
         """Fold one executed step back into slot state. ``sampled`` is the
         (num_slots,) vector from the vectorized sampler; only rows with
         ``plan.sample_rows`` keep theirs. A row failed between plan and
         commit (``fail()``: poisoned logits) is left untouched — it retires
-        next, and its sampled garbage is never stored."""
+        next, and its sampled garbage is never stored.
+
+        Verify rows (``plan.draft_counts[slot] = k > 0``) additionally take
+        ``greedy_cols`` — the (num_slots, C) per-column greedy tokens of
+        the executed step. Column j's token g_j is the target's next token
+        given the chunk through column j; draft d_{j+1} is accepted iff it
+        equals g_j and every earlier draft was accepted. The m accepted
+        drafts plus the correction/bonus token g_m all emit this step
+        (m + 1 >= 1 tokens — a verify step never yields less than plain
+        decode), the cache rolls back the k - m rejected positions
+        (tail-block dealloc on the paged pool), and g_m becomes the
+        pending ``next_token``."""
         for slot, st in self.active.items():
             n = int(plan.lengths[slot])
             if n == 0 or st.finish_reason:
+                continue
+            k = plan.draft_count(slot)
+            if k > 0:
+                self._commit_verify(st, plan, k, greedy_cols)
                 continue
             self.pool.advance(slot, n)
             if plan.is_prefill[slot]:
@@ -516,6 +572,49 @@ class Scheduler:
             elif (self.pool.max_len
                   and self.pool.cache_len[slot] + 1 > self.pool.max_len):
                 st.finish_reason = "cache_full"   # next decode write overflows
+
+    def _commit_verify(self, st: SlotState, plan: StepPlan, k: int,
+                       greedy_cols: np.ndarray) -> None:
+        """Score one verify row and fold the accepted prefix in (see
+        ``commit``)."""
+        assert greedy_cols is not None, "verify rows need per-column greedy"
+        slot = st.slot
+        base = int(plan.offsets[slot])      # cache fill before this step
+        drafted = plan.tokens[slot, 1:1 + k]
+        cols = greedy_cols[slot]
+        m = 0
+        while m < k and int(drafted[m]) == int(cols[m]):
+            m += 1
+        self.spec_steps += 1
+        self.spec_drafted += k
+        self.spec_accepted += m
+        if m < k:
+            self.spec_rollbacks += 1
+            self.spec_rollback_tokens += k - m
+        # Emit g_0..g_m, honoring eos / budget mid-chunk: an early finish
+        # keeps only the tokens through the finisher, and the cache keeps
+        # exactly the entries feeding them.
+        emitted = 0
+        for j in range(m + 1):
+            tok = int(cols[j])
+            st.tokens.append(tok)
+            st.next_token = tok
+            emitted += 1
+            if self.eos[slot] >= 0 and tok == self.eos[slot]:
+                st.finish_reason = "eos"
+                break
+            if len(st.tokens) >= st.max_new:
+                st.finish_reason = "length"
+                break
+        # The row wrote 1 + k cache entries; keep [t0, d1..d_{emitted-1}]
+        # (every entry that produced an emitted token), roll back the rest.
+        # pool.rollback also deallocates paged tail blocks the planned
+        # append over-allocated.
+        self.pool.advance(slot, emitted)
+        self.spec_blocks_freed += self.pool.rollback(slot, base + emitted)
+        if (st.finish_reason is None and self.pool.max_len
+                and self.pool.cache_len[slot] + 1 > self.pool.max_len):
+            st.finish_reason = "cache_full"   # next decode write overflows
 
     # -- classifier-free-guidance branch ---------------------------------------
 

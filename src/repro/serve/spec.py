@@ -1,0 +1,183 @@
+"""Speculative decoding: the drafter side of draft -> verify -> rollback.
+
+The serving bottleneck at paper scale is the decode phase: one full
+split-K sweep over up to a million cached tokens buys ONE new token.
+Verification through the chunked-prefill path costs barely more than a
+single decode step (the sweep dominates; extra chunk columns ride the same
+scan), so a small drafter that proposes ``draft_len`` tokens multiplies
+tokens-per-sweep at identical output quality.
+
+``Drafter`` owns the drafter model's own (small, contiguous) ``CachePool``
+mirroring every slot of the target pool, and keeps it in sync with the
+*token stream* each slot's target cache holds:
+
+    stream(p) = prompt[p]                      for p <  len(prompt)
+                tokens[pre + (p - len(prompt))] otherwise
+
+where ``pre`` is how many generated tokens the slot was primed with at
+admission (a preempted replay's ``SlotState.tokens`` already carries its
+pre-eviction output, and its replay prompt contains those tokens again —
+indexing from ``pre`` avoids double-counting them). The stream is defined
+entirely by host-side scheduler state, so the drafter can (re)build its
+cache for any slot at any time: after admission, after a prefix-hit
+fast-forward (the target adopted shared blocks the drafter never
+computed), or after preemption replay.
+
+Per engine iteration the engine calls, in order:
+
+  * ``reset(slot, st)``   — at admission: empty the drafter slot, record
+    the stream origin.
+  * ``sync(sched)``       — ONE batched drafter prefill step feeding every
+    lagging slot up to ``sync_chunk`` stream tokens toward the target's
+    ``cache_len``; a slot drafts only once fully synced.
+  * ``propose(...)``      — ``k`` sequential width-1 batched greedy drafter
+    steps seeded with each slot's pending ``next_token``; returns the
+    drafted tokens (host ints) for the scheduler's verify plan.
+  * ``truncate(slot, n)`` — after the target committed/rolled back:
+    drafter cache_len := min(its own, the target's new fill). One rule
+    covers accept, reject, degrade and preemption; on a full accept the
+    drafter lands one token behind and catches up at the next ``sync``.
+
+Greedy proposals route through ``sampling.greedy_batch`` with the target's
+per-slot vision ranges — the same masked comparator the target uses — so a
+perfect drafter (e.g. self-speculation) achieves 100% acceptance by
+construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decoding
+from repro.models.context import NULL_CTX, RuntimeCtx
+from repro.serve import sampling
+from repro.serve.pool import CachePool
+
+
+class Drafter:
+    def __init__(self, cfg, params, *, num_slots: int, max_len: int,
+                 sync_chunk: int = 8, ctx: RuntimeCtx = NULL_CTX):
+        if not decoding.paged_families(cfg):
+            raise NotImplementedError(
+                f"speculative drafter must be an attention-cache family "
+                f"(rollback truncates positional caches); {cfg.name} "
+                f"({cfg.family}) keeps recurrent state")
+        self.cfg = cfg
+        self.params = params
+        # Sync must outpace the target's decode-phase growth (1 token per
+        # engine step after a full accept) or a lagging drafter never
+        # catches up — floor the chunk at 2.
+        self.sync_chunk = max(int(sync_chunk), 2)
+        self.pool = CachePool(num_slots, cfg=cfg, max_len=max_len, ctx=ctx)
+        self._step = jax.jit(functools.partial(
+            decoding.prefill_step, cfg, ctx=ctx), donate_argnums=(2,))
+        self._greedy = jax.jit(sampling.greedy_batch)
+        # Per-slot stream origin, recorded at admission.
+        self._base = np.zeros(num_slots, np.int64)   # len(st.prompt)
+        self._pre = np.zeros(num_slots, np.int64)    # len(st.tokens) primed
+        self.calls = 0          # drafter model steps (NOT target model_calls)
+
+    # -- slot lifecycle --------------------------------------------------------
+
+    def reset(self, slot: int, st) -> None:
+        """Bind the drafter slot to a (re)admitted request's stream."""
+        self.pool.reset(slot)
+        self._base[slot] = len(st.prompt)
+        self._pre[slot] = len(st.tokens)
+
+    def synced(self, slot: int, target_len: int) -> bool:
+        return int(self.pool.cache_len[slot]) >= int(target_len)
+
+    def _stream(self, st, lo: int, hi: int) -> np.ndarray:
+        """Stream tokens [lo, hi) for the slot — prompt span then generated
+        span, indexed past the primed prefix (see module docstring)."""
+        slot, base = st.slot, int(self._base[st.slot])
+        pre = int(self._pre[slot])
+        out = np.empty(hi - lo, np.int32)
+        for i, p in enumerate(range(lo, hi)):
+            if p < base:
+                out[i] = st.prompt[p]
+            else:
+                out[i] = st.tokens[pre + (p - base)]
+        return out
+
+    # -- engine-facing steps ---------------------------------------------------
+
+    def sync(self, sched) -> None:
+        """One batched drafter prefill step moving every lagging slot up to
+        ``sync_chunk`` stream tokens toward the target's cache fill."""
+        takes = {}
+        for slot, st in sched.active.items():
+            if st.finish_reason:
+                continue
+            lag = int(sched.pool.cache_len[slot]) - int(self.pool.cache_len[slot])
+            if lag > 0:
+                takes[slot] = min(lag, self.sync_chunk)
+        if not takes:
+            return
+        need = max(takes.values())
+        c = min(1 << (need - 1).bit_length() if need > 1 else 1,
+                self.sync_chunk)
+        b = self.pool.num_slots
+        tokens = np.zeros((b, c), np.int32)
+        offsets = np.zeros(b, np.int32)
+        lengths = np.zeros(b, np.int32)
+        for slot, take in takes.items():
+            take = min(take, c)
+            lo = int(self.pool.cache_len[slot])
+            tokens[slot, :take] = self._stream(sched.active[slot], lo,
+                                               lo + take)
+            offsets[slot] = lo
+            lengths[slot] = take
+        _, self.pool.caches = self._step(
+            self.params, jnp.asarray(tokens), self.pool.caches,
+            jnp.asarray(offsets), jnp.asarray(lengths))
+        self.calls += 1
+        for slot, take in takes.items():
+            self.pool.advance(slot, min(take, c))
+
+    def propose(self, slot_k: dict[int, int], next_token: dict[int, int],
+                vision_lo: np.ndarray, vision_hi: np.ndarray
+                ) -> dict[int, list[int]]:
+        """Draft up to ``slot_k[slot]`` greedy tokens per slot: ``k``
+        sequential width-1 batched drafter steps, seeded with the slot's
+        pending ``next_token`` (never yet in any cache). Returns host-side
+        proposals; the drafter's cache absorbs the proposals as it goes
+        (position L+i holds draft i's *input*), to be truncated against
+        the target's post-verify fill."""
+        if not slot_k:
+            return {}
+        b = self.pool.num_slots
+        cur = {s: int(t) for s, t in next_token.items()}
+        out: dict[int, list[int]] = {s: [] for s in slot_k}
+        for i in range(max(slot_k.values())):
+            rows = [s for s, k in slot_k.items() if i < k]
+            tokens = np.zeros((b, 1), np.int32)
+            offsets = np.zeros(b, np.int32)
+            lengths = np.zeros(b, np.int32)
+            for s in rows:
+                tokens[s, 0] = cur[s]
+                offsets[s] = self.pool.cache_len[s]
+                lengths[s] = 1
+            logits, self.pool.caches = self._step(
+                self.params, jnp.asarray(tokens), self.pool.caches,
+                jnp.asarray(offsets), jnp.asarray(lengths))
+            toks = np.asarray(self._greedy(logits, jnp.asarray(vision_lo),
+                                           jnp.asarray(vision_hi)))[:, 0]
+            self.calls += 1
+            for s in rows:
+                self.pool.advance(s, 1)
+                d = int(toks[s])
+                out[s].append(d)
+                cur[s] = d
+        return out
+
+    def truncate(self, slot: int, target_len: int) -> None:
+        """Post-commit: drop any drafter entries past the target's new
+        fill (rejected proposals; also a no-op safety net after degrade or
+        preemption)."""
+        new = min(int(self.pool.cache_len[slot]), int(target_len))
+        self.pool.rollback(slot, new)

@@ -220,7 +220,7 @@ def test_ring_flash_decode_multidevice():
 def test_serve_engine_tokens_identical_across_impls():
     from repro.configs import get_reduced
     from repro.models.registry import build_model
-    from repro.serve import Request, ServeEngine
+    from repro.serve import CacheConfig, Request, ServeConfig, ServeEngine
 
     cfg = get_reduced("lwm-7b")
     model = build_model(cfg)
@@ -229,6 +229,7 @@ def test_serve_engine_tokens_identical_across_impls():
                    max_new_tokens=6)]
     tokens = {}
     for impl in ("xla", "interpret"):
-        eng = ServeEngine(cfg, params, max_len=48, decode_impl=impl)
+        eng = ServeEngine(cfg, params, ServeConfig(
+            cache=CacheConfig(max_len=48), decode_impl=impl))
         tokens[impl] = eng.generate(req)[0].tokens
     np.testing.assert_array_equal(tokens["interpret"], tokens["xla"])

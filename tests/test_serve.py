@@ -6,7 +6,7 @@ import pytest
 
 from repro.configs import get_reduced
 from repro.models.registry import build_model
-from repro.serve import Request, ServeEngine
+from repro.serve import CacheConfig, Request, ServeConfig, ServeEngine
 from repro.serve.sampling import cfg_logits, greedy, mask_to_vision_range
 
 
@@ -15,7 +15,8 @@ def engine():
     cfg = get_reduced("lwm-7b")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    return ServeEngine(cfg, params, max_len=96), cfg
+    return ServeEngine(cfg, params,
+                       ServeConfig(cache=CacheConfig(max_len=96))), cfg
 
 
 def test_greedy_deterministic(engine):

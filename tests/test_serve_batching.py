@@ -31,7 +31,8 @@ from repro.core import decode as dec
 from repro.models import decoding
 from repro.models.context import RuntimeCtx
 from repro.models.registry import build_model
-from repro.serve import CachePool, Request, Scheduler, ServeEngine
+from repro.serve import (CacheConfig, CachePool, Request, Scheduler,
+                         ServeConfig, ServeEngine)
 
 IMPLS = ["xla", "interpret"]
 
@@ -44,10 +45,10 @@ def setup():
     return cfg, params
 
 
-def _engine(setup, impl, **kw):
+def _engine(setup, impl, max_len=48):
     cfg, params = setup
-    kw.setdefault("max_len", 48)
-    return ServeEngine(cfg, params, decode_impl=impl, **kw)
+    return ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=max_len), decode_impl=impl))
 
 
 def _reqs():
@@ -183,9 +184,10 @@ def test_sampled_stream_reproducible_across_batch_composition(setup):
     prompt = np.arange(10, 20, dtype=np.int32)
     req = Request(prompt=prompt, max_new_tokens=5, temperature=1.0, top_k=64)
     mate = Request(prompt=np.arange(30, 40, dtype=np.int32), max_new_tokens=5)
-    solo = ServeEngine(cfg, params, max_len=48, seed=7).serve(
+    sc = ServeConfig(cache=CacheConfig(max_len=48), seed=7)
+    solo = ServeEngine(cfg, params, sc).serve(
         [req], num_slots=1)[0].tokens
-    batched = ServeEngine(cfg, params, max_len=48, seed=7).serve(
+    batched = ServeEngine(cfg, params, sc).serve(
         [req, mate], num_slots=2)[0].tokens
     np.testing.assert_array_equal(batched, solo)
 
@@ -301,7 +303,7 @@ def test_vlm_vision_embeds_condition_first_token_logits():
     cfg = get_reduced("internvl2-2b")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, max_len=24)
+    eng = ServeEngine(cfg, params, ServeConfig(cache=CacheConfig(max_len=24)))
     prompts = [np.arange(5, 17, dtype=np.int32)]
     extras = model.extra_inputs(1, 12)
     l1, _, _ = eng._prefill_batch(prompts, extras)

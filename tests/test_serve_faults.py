@@ -24,8 +24,9 @@ import numpy as np
 import pytest
 
 from repro.configs import get_reduced
-from repro.serve import (FaultPlan, InjectedFault, PagedCachePool, Request,
-                         Scheduler, ServeEngine)
+from repro.serve import (CacheConfig, FaultConfig, FaultPlan, InjectedFault,
+                         PagedCachePool, Request, Scheduler, ServeConfig,
+                         ServeEngine)
 
 IMPLS = ["xla", "interpret"]
 
@@ -212,12 +213,11 @@ def test_preemption_replay_token_parity(setup, impl):
                     max_new_tokens=6),
             Request(prompt=np.arange(40, 52, dtype=np.int32),
                     max_new_tokens=6)]
-    base = ServeEngine(cfg, params, max_len=48, decode_impl=impl,
-                       paged=True, block_size=4)
+    sc = ServeConfig(cache=CacheConfig(max_len=48, paged=True, block_size=4),
+                     decode_impl=impl)
+    base = ServeEngine(cfg, params, sc)
     want = base.serve(reqs, num_slots=2, prefill_chunk=4)
-    eng = ServeEngine(cfg, params, max_len=48, decode_impl=impl,
-                      paged=True, block_size=4,
-                      faults=FaultPlan(oom_steps=(6,)))
+    eng = ServeEngine(cfg, params, sc, faults=FaultPlan(oom_steps=(6,)))
     got = eng.serve(reqs, num_slots=2, prefill_chunk=4)
     for g, w in zip(got, want):
         np.testing.assert_array_equal(g.tokens, w.tokens)
@@ -238,12 +238,13 @@ def test_preempt_victim_holding_cow_shared_prefix(setup, impl):
     r_mid = Request(prompt=np.arange(50, 62, dtype=np.int32),
                     max_new_tokens=6)
     r_twin = Request(prompt=p_long.copy(), max_new_tokens=6)
-    base = ServeEngine(cfg, params, max_len=64, decode_impl=impl)
+    base = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=64), decode_impl=impl))
     solo = [base.serve([r], num_slots=1)[0].tokens
             for r in (r_long, r_mid, r_twin)]
-    eng = ServeEngine(cfg, params, max_len=64, decode_impl=impl,
-                      paged=True, block_size=8,
-                      faults=FaultPlan(oom_steps=(12,)))
+    eng = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=64, paged=True, block_size=8),
+        decode_impl=impl), faults=FaultPlan(oom_steps=(12,)))
     out = eng.serve([r_long, r_mid, r_twin], num_slots=2, prefill_chunk=4)
     for got, want in zip(out, solo):
         np.testing.assert_array_equal(got.tokens, want)
@@ -261,20 +262,22 @@ def test_natural_oom_preemption_vs_kill(setup):
                     max_new_tokens=8),
             Request(prompt=np.arange(40, 50, dtype=np.int32),
                     max_new_tokens=8)]
-    ample = ServeEngine(cfg, params, max_len=32, decode_impl="xla",
-                        paged=True, block_size=4)
+    ample = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=32, paged=True, block_size=4),
+        decode_impl="xla"))
     want = ample.serve(reqs, num_slots=2, prefill_chunk=4)
     # 2 requests x (10 prompt + 8 new) = 2 x 5 blocks > 8 blocks.
-    tight = ServeEngine(cfg, params, max_len=32, decode_impl="xla",
-                        paged=True, block_size=4, num_blocks=8)
+    tight = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=32, paged=True, block_size=4, num_blocks=8),
+        decode_impl="xla"))
     got = tight.serve(reqs, num_slots=2, prefill_chunk=4)
     for g, w in zip(got, want):
         np.testing.assert_array_equal(g.tokens, w.tokens)
         assert g.finish_reason == "length"
     assert tight.stats["preemptions"] >= 1
-    kill = ServeEngine(cfg, params, max_len=32, decode_impl="xla",
-                       paged=True, block_size=4, num_blocks=8,
-                       preemption=False)
+    kill = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=32, paged=True, block_size=4, num_blocks=8),
+        faults=FaultConfig(preemption=False), decode_impl="xla"))
     res = kill.serve(reqs, num_slots=2, prefill_chunk=4)
     assert any(r.finish_reason == "cache_full" for r in res)
 
@@ -289,11 +292,13 @@ def test_step_retry_recovers_token_exact(setup):
                     max_new_tokens=5),
             Request(prompt=np.arange(40, 50, dtype=np.int32),
                     max_new_tokens=4)]
-    base = ServeEngine(cfg, params, max_len=32, decode_impl="xla")
+    base = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=32), decode_impl="xla"))
     want = base.serve(reqs, num_slots=2, prefill_chunk=4)
-    eng = ServeEngine(cfg, params, max_len=32, decode_impl="xla",
-                      max_retries=2, retry_backoff_s=0.0,
-                      faults=FaultPlan(step_errors={2: 2}))
+    eng = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=32), decode_impl="xla",
+        faults=FaultConfig(max_retries=2, retry_backoff_s=0.0)),
+        faults=FaultPlan(step_errors={2: 2}))
     got = eng.serve(reqs, num_slots=2, prefill_chunk=4)
     for g, w in zip(got, want):
         np.testing.assert_array_equal(g.tokens, w.tokens)
@@ -303,9 +308,10 @@ def test_step_retry_recovers_token_exact(setup):
 
 def test_step_retry_exhaustion_raises(setup):
     cfg, params = setup
-    eng = ServeEngine(cfg, params, max_len=32, decode_impl="xla",
-                      max_retries=2, retry_backoff_s=0.0,
-                      faults=FaultPlan(step_errors={1: 3}))
+    eng = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=32), decode_impl="xla",
+        faults=FaultConfig(max_retries=2, retry_backoff_s=0.0)),
+        faults=FaultPlan(step_errors={1: 3}))
     with pytest.raises(InjectedFault):
         eng.serve([Request(prompt=np.arange(10, 18, dtype=np.int32),
                            max_new_tokens=4)], num_slots=1, prefill_chunk=4)
@@ -322,9 +328,10 @@ def test_nan_poisoned_request_retires_error(setup):
                     max_new_tokens=6),
             Request(prompt=np.arange(70, 82, dtype=np.int32),
                     max_new_tokens=6)]
-    base = ServeEngine(cfg, params, max_len=32, decode_impl="xla")
+    sc = ServeConfig(cache=CacheConfig(max_len=32), decode_impl="xla")
+    base = ServeEngine(cfg, params, sc)
     want = base.serve(reqs, num_slots=3, prefill_chunk=4)
-    eng = ServeEngine(cfg, params, max_len=32, decode_impl="xla",
+    eng = ServeEngine(cfg, params, sc,
                       faults=FaultPlan(nan_requests={1: 5}))
     got = eng.serve(reqs, num_slots=3, prefill_chunk=4)
     assert got[1].finish_reason == "error"
@@ -343,8 +350,9 @@ def test_engine_deadline_expires_requests(setup):
                     max_new_tokens=4),
             Request(prompt=np.arange(40, 48, dtype=np.int32),
                     max_new_tokens=4)]
-    eng = ServeEngine(cfg, params, max_len=32, decode_impl="xla",
-                      deadline_s=0.0)
+    eng = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=32), decode_impl="xla",
+        faults=FaultConfig(deadline_s=0.0)))
     got = eng.serve(reqs, num_slots=1, prefill_chunk=4)
     assert all(r.finish_reason == "deadline" for r in got)
     assert eng.stats["deadline_expired"] == 2
@@ -356,9 +364,10 @@ def test_engine_per_request_deadline(setup):
                     max_new_tokens=4),
             Request(prompt=np.arange(40, 48, dtype=np.int32),
                     max_new_tokens=4, deadline_s=0.0)]
-    base = ServeEngine(cfg, params, max_len=32, decode_impl="xla")
+    sc = ServeConfig(cache=CacheConfig(max_len=32), decode_impl="xla")
+    base = ServeEngine(cfg, params, sc)
     want = base.serve(reqs[:1], num_slots=1, prefill_chunk=4)
-    eng = ServeEngine(cfg, params, max_len=32, decode_impl="xla")
+    eng = ServeEngine(cfg, params, sc)
     got = eng.serve(reqs, num_slots=2, prefill_chunk=4)
     assert got[0].finish_reason == "length"
     np.testing.assert_array_equal(got[0].tokens, want[0].tokens)
@@ -381,16 +390,18 @@ def test_seeded_chaos_all_paths_token_exact(setup):
             Request(prompt=shared.copy(), max_new_tokens=5),
             Request(prompt=np.arange(70, 80, dtype=np.int32),
                     max_new_tokens=8)]
-    base = ServeEngine(cfg, params, max_len=48, decode_impl="xla",
-                       paged=True, block_size=4)
+    base = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=48, paged=True, block_size=4),
+        decode_impl="xla"))
     want = base.serve(reqs, num_slots=2, prefill_chunk=4)
     # seed 1 @ horizon 20: oom at step 8 (both long prompts mid-flight),
     # step error at 10, req 3 poisoned at its first planned row.
     plan = FaultPlan.seeded(1, horizon=20, n_oom=1, n_errors=1,
                             error_attempts=1, nan_req_ids=(3,))
-    eng = ServeEngine(cfg, params, max_len=48, decode_impl="xla",
-                      paged=True, block_size=4, retry_backoff_s=0.0,
-                      faults=plan)
+    eng = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=48, paged=True, block_size=4),
+        faults=FaultConfig(retry_backoff_s=0.0), decode_impl="xla"),
+        faults=plan)
     got = eng.serve(reqs, num_slots=2, prefill_chunk=4)
     fired = plan.summary()
     assert fired["oom"] >= 1 and fired["step_error"] >= 1

@@ -30,7 +30,8 @@ from _hypothesis_compat import given, settings, strategies
 from repro.configs import get_reduced
 from repro.core import decode as dec
 from repro.models import decoding
-from repro.serve import PagedCachePool, Request, ServeEngine
+from repro.serve import (CacheConfig, PagedCachePool, Request, ServeConfig,
+                         ServeEngine)
 
 IMPLS = ["xla", "interpret"]
 
@@ -240,10 +241,12 @@ def test_paged_matches_contiguous_with_shared_prefixes(setup, impl):
                 np.int32), max_new_tokens=4),              # forks after 16
             Request(prompt=np.arange(40, 49, dtype=np.int32),
                     max_new_tokens=3)]
-    cont = ServeEngine(cfg, params, max_len=48, decode_impl=impl).serve(
+    cont = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=48), decode_impl=impl)).serve(
         reqs, num_slots=2, prefill_chunk=4)
-    eng = ServeEngine(cfg, params, max_len=48, decode_impl=impl,
-                      paged=True, block_size=8)
+    eng = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=48, paged=True, block_size=8),
+        decode_impl=impl))
     pag = eng.serve(reqs, num_slots=2, prefill_chunk=4)
     for c, p in zip(cont, pag):
         np.testing.assert_array_equal(c.tokens, p.tokens)
@@ -263,11 +266,13 @@ def test_paged_cow_divergence_after_full_tail_share(setup, impl):
     r_mid = Request(prompt=np.arange(50, 62, dtype=np.int32),
                     max_new_tokens=6)
     r_twin = Request(prompt=p_long.copy(), max_new_tokens=6)
-    base = ServeEngine(cfg, params, max_len=64, decode_impl=impl)
+    base = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=64), decode_impl=impl))
     solo = [base.serve([r], num_slots=1)[0].tokens
             for r in (r_long, r_mid, r_twin)]
-    eng = ServeEngine(cfg, params, max_len=64, decode_impl=impl,
-                      paged=True, block_size=8)
+    eng = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=64, paged=True, block_size=8),
+        decode_impl=impl))
     out = eng.serve([r_long, r_mid, r_twin], num_slots=2, prefill_chunk=4)
     for got, want in zip(out, solo):
         np.testing.assert_array_equal(got.tokens, want)
@@ -278,8 +283,9 @@ def test_paged_midflight_block_exhaustion_retires_cache_full(setup):
     """With decode headroom under-provisioned, a slot that outruns the free
     blocks mid-decode retires as "cache_full" instead of crashing."""
     cfg, params = setup
-    eng = ServeEngine(cfg, params, max_len=32, decode_impl="xla",
-                      paged=True, block_size=4, num_blocks=3)
+    eng = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=32, paged=True, block_size=4, num_blocks=3),
+        decode_impl="xla"))
     res = eng.serve([Request(prompt=np.arange(10, 17, dtype=np.int32),
                              max_new_tokens=20)], num_slots=1)[0]
     assert res.finish_reason == "cache_full"
@@ -314,8 +320,9 @@ def test_admission_truncates_oversized_generation(setup, paged):
     the pool overflow assert mid-flight; it must now be clamped at admit
     time and finish as "length" with exactly the capacity's tokens."""
     cfg, params = setup
-    eng = ServeEngine(cfg, params, max_len=16, decode_impl="xla",
-                      paged=paged, block_size=4)
+    eng = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=16, paged=paged, block_size=4),
+        decode_impl="xla"))
     res = eng.serve([Request(prompt=np.arange(10, 22, dtype=np.int32),
                              max_new_tokens=50)], num_slots=1)[0]
     assert res.finish_reason == "length"

@@ -1,0 +1,275 @@
+"""Speculative decoding: rollback soundness and greedy-parity acceptance.
+
+Tentpole guarantees for draft -> verify -> rollback (docs/serving.md,
+"Speculative decoding"):
+
+  * pool rollback soundness — truncating a paged slot past a block
+    boundary deallocates the tail blocks (returned to the allocator);
+    rolling back a CoW-shared tail decrements the refcount without
+    touching the survivor's table; contiguous rollback is pure
+    ``cache_len`` bookkeeping;
+  * spec == baseline — the speculative engine emits BIT-IDENTICAL greedy
+    tokens to the plain engine under ``decode_impl`` "xla" AND
+    "interpret", on the paged AND contiguous pools, while accepting > 1
+    token per verify step (self-speculation: a perfect drafter);
+  * forced disagreement — a ``FaultPlan`` draft-flip schedule corrupts
+    every proposal at the scheduled steps, so the rollback path actually
+    runs (rejected tokens, cache truncation) with output still unchanged;
+  * the ServeConfig deprecation shim — legacy flat kwargs construct an
+    identical engine and warn exactly once; unknown kwargs still raise
+    ``TypeError``.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models.registry import build_model
+from repro.serve import (CacheConfig, CachePool, FaultPlan, PagedCachePool,
+                         Request, ServeConfig, ServeEngine, SpecConfig)
+from repro.serve.config import config_from_kwargs
+
+IMPLS = ["xla", "interpret"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced("lwm-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _reqs():
+    return [Request(prompt=np.arange(10, 21, dtype=np.int32),
+                    max_new_tokens=8),
+            Request(prompt=np.arange(30, 36, dtype=np.int32),
+                    max_new_tokens=10),
+            Request(prompt=np.arange(40, 54, dtype=np.int32),
+                    max_new_tokens=6)]
+
+
+def _config(paged, impl, cfg, params, **spec_kw):
+    cache = CacheConfig(max_len=64, paged=paged, block_size=8)
+    spec = SpecConfig(drafter=cfg, drafter_params=params, draft_len=4,
+                      enabled=True, **spec_kw)
+    return ServeConfig(cache=cache, spec=spec, decode_impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# Pool-level rollback soundness (host-side, no model)
+# ---------------------------------------------------------------------------
+
+def test_contiguous_rollback_is_bookkeeping():
+    pool = CachePool(2, max_len=32)
+    slot = pool.alloc()
+    pool.advance(slot, 13)
+    assert pool.rollback(slot, 9) == 0          # no blocks to free
+    assert pool.cache_len[slot] == 9
+    with pytest.raises(AssertionError):
+        pool.rollback(slot, 10)                 # cannot roll *forward*
+
+
+def test_paged_rollback_frees_tail_blocks_past_boundary():
+    pool = PagedCachePool(2, max_len=64, block_size=4, num_blocks=8)
+    slot = pool.alloc()
+    pool.reset(slot)
+    assert pool.ensure_capacity(slot, 11)       # 3 blocks: 4 + 4 + 3
+    pool.advance(slot, 11)
+    free_before = pool.allocator.num_free
+    # Reject back to 5 tokens: blocks 2 (tokens 8-10) and the tail of
+    # block 1 go; block 1 itself survives (token 4 still lives there).
+    freed = pool.rollback(slot, 5)
+    assert freed == 1
+    assert pool.allocator.num_free == free_before + 1
+    assert pool.cache_len[slot] == 5
+    assert pool.block_tables[slot, 2] == -1
+    assert pool.block_tables[slot, 0] >= 0 and pool.block_tables[slot, 1] >= 0
+    # A rollback to a block-exact fill keeps exactly ceil(5/4) = 2 blocks;
+    # regrowing re-allocates cleanly.
+    assert pool.ensure_capacity(slot, 12)
+    pool.advance(slot, 7)
+    assert pool.cache_len[slot] == 12
+
+
+def test_paged_rollback_on_cow_shared_tail_keeps_survivor():
+    pool = PagedCachePool(2, max_len=32, block_size=4, num_blocks=8)
+    a, b = pool.alloc(), pool.alloc()
+    pool.reset(a)
+    prompt = np.arange(10, dtype=np.int32)      # 2 full blocks + 2-token tail
+    assert pool.ensure_capacity(a, 10)
+    pool.advance(a, 10)
+    pool.register_prefix(a, prompt, final=True)
+    # Slot b adopts the full prefix: all three of a's blocks now shared.
+    matched, blocks = pool.match_prefix(prompt)
+    assert matched == 10 and len(blocks) == 3
+    pool.adopt_prefix(b, prompt, matched, blocks)
+    tail_blk = int(pool.block_tables[b, 2])
+    assert pool.allocator.ref[tail_blk] == 2
+    # b speculates past the shared tail; the first write CoW-copies it.
+    assert pool.ensure_capacity(b, 14)
+    pool.advance(b, 4)
+    assert int(pool.block_tables[b, 2]) != tail_blk      # un-shared
+    assert pool.allocator.ref[tail_blk] == 1             # a's copy intact
+    # Now b's verify rejects back into the shared span: virtual blocks 2
+    # and 3 dealloc; block 2 was b's PRIVATE CoW copy (freed), block 3 was
+    # fresh (freed) — and a's original tail block is untouched throughout.
+    free_before = pool.allocator.num_free
+    freed = pool.rollback(b, 8)
+    assert freed == 2
+    assert pool.allocator.num_free == free_before + 2
+    assert pool.allocator.ref[tail_blk] == 1
+    assert int(pool.block_tables[a, 2]) == tail_blk
+    assert pool.cache_len[a] == 10                       # survivor untouched
+    # Shared full blocks (virtual 0/1) still shared by both slots.
+    assert pool.allocator.ref[int(pool.block_tables[b, 0])] == 2
+
+
+def test_paged_rollback_shared_full_block_decrements_refcount():
+    pool = PagedCachePool(2, max_len=32, block_size=4, num_blocks=8)
+    a, b = pool.alloc(), pool.alloc()
+    pool.reset(a)
+    prompt = np.arange(8, dtype=np.int32)       # exactly 2 full blocks
+    assert pool.ensure_capacity(a, 8)
+    pool.advance(a, 8)
+    pool.register_prefix(a, prompt, final=True)
+    matched, blocks = pool.match_prefix(prompt)
+    pool.adopt_prefix(b, prompt, matched, blocks)
+    shared = int(pool.block_tables[b, 1])
+    assert pool.allocator.ref[shared] == 2
+    # Roll b all the way back past the shared block: refcount drops to 1
+    # (a still holds it) and NOTHING returns to the free list.
+    free_before = pool.allocator.num_free
+    assert pool.rollback(b, 4) == 0
+    assert pool.allocator.num_free == free_before
+    assert pool.allocator.ref[shared] == 1
+    assert int(pool.block_tables[a, 1]) == shared
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: spec == baseline greedy parity, with real acceptance
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("paged", [False, True])
+def test_spec_matches_baseline_greedy(setup, impl, paged):
+    """Self-speculation (drafter == target) must accept nearly every draft
+    and reproduce the plain engine's greedy tokens bit-for-bit."""
+    cfg, params = setup
+    base = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=64, paged=paged, block_size=8),
+        decode_impl=impl))
+    want = base.serve(_reqs(), num_slots=2, prefill_chunk=4)
+    eng = ServeEngine(cfg, params, _config(paged, impl, cfg, params))
+    got = eng.serve(_reqs(), num_slots=2, prefill_chunk=4)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g.tokens, w.tokens)
+        assert g.finish_reason == w.finish_reason
+    assert eng.stats["spec_steps"] > 0
+    assert eng.stats["accepted_per_spec_step"] > 1.0
+    assert eng.stats["drafter_calls"] > 0
+    # Self-speculation is a perfect drafter: zero disagreement rollbacks.
+    assert eng.stats["spec_rollbacks"] == 0
+    # Fewer target steps than one-token-at-a-time decoding.
+    assert eng.stats["model_calls"] < base.stats["model_calls"]
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_forced_disagreement_rolls_back_with_parity(setup, paged):
+    """A draft-flip fault corrupts every proposal at the scheduled steps:
+    the verify pass must reject at the first drafted column, roll the
+    cache back, and still emit the baseline's exact greedy tokens."""
+    cfg, params = setup
+    base = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=64, paged=paged, block_size=8),
+        decode_impl="xla"))
+    want = base.serve(_reqs(), num_slots=2, prefill_chunk=4)
+    plan = FaultPlan(flip_steps=(5, 7))
+    eng = ServeEngine(cfg, params, _config(paged, "xla", cfg, params),
+                      faults=plan)
+    got = eng.serve(_reqs(), num_slots=2, prefill_chunk=4)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g.tokens, w.tokens)
+    assert eng.stats["spec_rollbacks"] >= 1
+    assert eng.stats["spec_rollback_tokens"] >= 1
+    assert plan.summary().get("draft_flip", 0) == 2
+    if paged:
+        # Rollback accounting is wired through the paged pool (a flip may
+        # or may not land a tail block past a boundary; the counter must
+        # exist and never go negative).
+        assert eng.stats["spec_blocks_freed"] >= 0
+
+
+def test_spec_skips_sampled_requests(setup):
+    """Speculation is greedy-only: a temperature request must decode on
+    the normal path (no verify rows) while greedy neighbours speculate."""
+    cfg, params = setup
+    reqs = [Request(prompt=np.arange(10, 20, dtype=np.int32),
+                    max_new_tokens=6),
+            Request(prompt=np.arange(30, 40, dtype=np.int32),
+                    max_new_tokens=6, temperature=0.8, top_k=40)]
+    eng = ServeEngine(cfg, params, _config(False, "xla", cfg, params))
+    res = eng.serve(reqs, num_slots=2, prefill_chunk=4)
+    assert all(r.finish_reason == "length" for r in res)
+    assert eng.stats["spec_steps"] > 0          # the greedy one speculated
+    base = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=64), decode_impl="xla"))
+    want = base.serve(reqs, num_slots=2, prefill_chunk=4)
+    for g, w in zip(res, want):
+        np.testing.assert_array_equal(g.tokens, w.tokens)
+
+
+# ---------------------------------------------------------------------------
+# Config validation + deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_spec_requires_drafter(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="drafter"):
+        ServeEngine(cfg, params,
+                    ServeConfig(spec=SpecConfig(enabled=True)))
+
+
+def test_spec_rejects_vocab_mismatch(setup):
+    cfg, params = setup
+    import dataclasses
+    bad = dataclasses.replace(cfg, vocab_size=cfg.vocab_size + 1)
+    with pytest.raises(ValueError, match="vocab"):
+        ServeEngine(cfg, params, ServeConfig(
+            spec=SpecConfig(drafter=bad, drafter_params=params,
+                            enabled=True)))
+
+
+def test_legacy_kwargs_warn_once_and_match(setup):
+    cfg, params = setup
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        eng = ServeEngine(cfg, params, max_len=48, paged=True, block_size=8,
+                          deadline_s=1.5, seed=3)
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    grouped = ServeEngine(cfg, params, ServeConfig(
+        cache=CacheConfig(max_len=48, paged=True, block_size=8),
+        faults=eng.config.faults.__class__(deadline_s=1.5), seed=3))
+    assert eng.config == grouped.config
+
+
+def test_legacy_and_config_together_is_an_error(setup):
+    cfg, params = setup
+    with pytest.raises(TypeError, match="not both"):
+        ServeEngine(cfg, params, ServeConfig(), max_len=48)
+
+
+def test_unknown_kwarg_raises_type_error(setup):
+    cfg, params = setup
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        ServeEngine(cfg, params, maxlen=48)
+
+
+def test_config_from_kwargs_auto_enables_spec(setup):
+    cfg, _ = setup
+    sc = config_from_kwargs(drafter=cfg, draft_len=2)
+    assert sc.spec.enabled and sc.spec.draft_len == 2
+    assert not config_from_kwargs(max_len=32).spec.enabled

@@ -36,6 +36,13 @@ claims rest on:
     retires "error", and replay recompute stays bounded; the 1M-context
     analytic row must show preemption recovery re-prefilling only the
     non-shared tail (shared-prefix survival), not the full context.
+  * BENCH_serve_spec.json — speculative decoding must accept strictly
+    more than one token per verify step with BIT-IDENTICAL greedy tokens
+    on BOTH the contiguous and paged pools, with >= 1 forced-rejection
+    rollback actually priced (draft-flip fault plan) and fewer target
+    model calls than the plain baseline; the 1M-context analytic row's
+    sweep-byte model must show > 1 token per target sweep and a > 1x
+    sweep speedup for the cross-model drafting pair.
 
 Run locally:  python tools/check_bench.py  (from the repo root)
 """
@@ -259,6 +266,49 @@ def check_serve_chaos() -> None:
            "serve_chaos: the 1M-context analytic_paper_stage row is gone")
 
 
+def check_serve_spec() -> None:
+    rows = _load("BENCH_serve_spec.json")
+    if rows is None:
+        return
+    pools = set()
+    stage_rows = 0
+    for row in rows or []:
+        if "analytic_paper_stage" in row:
+            stage = row["analytic_paper_stage"]
+            stage_rows += 1
+            delta = stage.get("delta", {})
+            # Fail-closed defaults: a missing/renamed key must FAIL the gate.
+            _check(delta.get("tokens_per_sweep_gt_1") is True,
+                   "serve_spec[1M-analytic]: speculation no longer yields "
+                   "> 1 token per target cache sweep")
+            _check(delta.get("sweep_speedup", 0.0) > 1.0,
+                   "serve_spec[1M-analytic]: drafter sweep cost eats the "
+                   "acceptance gain (speedup <= 1)")
+            _check(stage.get("drafter_sweep_cost_ratio", 1.0) < 1.0,
+                   "serve_spec[1M-analytic]: drafter no longer cheaper per "
+                   "sweep than the target")
+            continue
+        pools.add(row.get("pool"))
+        delta = row.get("delta", {})
+        _check(delta.get("tokens_match") is True,
+               f"serve_spec[{row.get('pool', '?')}]: speculative engine no "
+               "longer produces the baseline's exact greedy tokens")
+        _check(delta.get("accepted_per_spec_step", 0.0) > 1.0,
+               f"serve_spec[{row.get('pool', '?')}]: <= 1 accepted token "
+               "per verify step (speculation buys nothing)")
+        _check(delta.get("rollbacks", 0) >= 1,
+               f"serve_spec[{row.get('pool', '?')}]: the forced-rejection "
+               "rollback path never ran (flip injection dead?)")
+        _check(delta.get("target_calls_saved", -1) > 0,
+               f"serve_spec[{row.get('pool', '?')}]: speculation no longer "
+               "saves target model calls")
+    _check(pools >= {"contiguous", "paged"},
+           "serve_spec: need measured rows for BOTH pool kinds "
+           f"(got {sorted(p for p in pools if p)})")
+    _check(stage_rows >= 1,
+           "serve_spec: the 1M-context analytic_paper_stage row is gone")
+
+
 def check_context_stages() -> None:
     rows = _load("BENCH_context_stages.json")
     if rows is None:
@@ -311,6 +361,7 @@ def main() -> int:
     check_serve_batching()
     check_serve_paged()
     check_serve_chaos()
+    check_serve_spec()
     check_context_stages()
     if _errors:
         for e in _errors:
@@ -321,7 +372,8 @@ def main() -> int:
           "pad-token steps than static; paged cache beats contiguous "
           "residency with token parity; stage-boundary reshard beats "
           "replicate with accum token parity; chaos run recovers token-exact "
-          "with bounded replay recompute)")
+          "with bounded replay recompute; speculation accepts > 1 token per "
+          "verify step with exact parity on both pools)")
     return 0
 
 
