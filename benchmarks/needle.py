@@ -10,16 +10,36 @@ A 2-layer reduced model needs thousands of steps to grow full induction
 heads on one CPU core, so quick mode primarily demonstrates lift/top-8;
 --full pushes exact accuracy up (the code path is scale-free — the paper's
 7B model at 1M context is the same computation).
+
+``serve_retrieval`` additionally runs retrieval through the REAL
+``ServeEngine`` (prompt = context up to the answer, greedy generation of
+the value) so recall can be compared across cache pools — the accuracy
+gate for int8 KV-cache quantization (``benchmarks/serve_quant.py``).
+
+For that gate the model is not trained at all: a 2-layer reduced model on
+one CPU core never completes the induction phase transition in a bench
+budget (loss plateaus at the value-band unigram marginal), so
+``programmed_retrieval_model`` instead CONSTRUCTS the retrieval circuit by
+hand — a fixed-offset RoPE addressing head (multi-frequency phase match on
+the rotating dims) whose OV path copies the needle value's orthogonal
+embedding code into a dedicated logit band. Recall through the f32 engine
+is 1.0 by construction; a quantized cache must preserve both the attention
+addressing (K fidelity) and the copied value code (V fidelity) through the
+real split-K decode kernels to keep it there, which is exactly what the
+gate needs to measure.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import numpy as np
 
+import jax.numpy as jnp
+
 from repro.configs import get_reduced
-from repro.data.needle import NeedleTask, retrieval_accuracy
+from repro.data.needle import VALUE_BAND, NeedleTask, retrieval_accuracy
 from repro.data.vocab import build_vocab
 from repro.models.registry import build_model
 from repro.train.train_step import init_train_state, make_eval_step, make_train_step
@@ -58,10 +78,16 @@ def _train_batch(nt, rows, seq, rng, max_needles=4):
     }
 
 
-def run(*, train_steps: int = 1500, seq: int = 128, rows: int = 8,
-        quick: bool = False) -> list[dict]:
-    if quick:
-        train_steps = 250
+def train_retrieval_model(*, train_steps: int = 250, seq: int = 128,
+                          rows: int = 8) -> dict:
+    """Train the reduced LWM on the (1, 1) pure-induction needle grammar.
+
+    Shared by ``run`` below and by ``benchmarks/serve_quant.py`` (which
+    serves the trained model through quantized vs f32 cache pools as its
+    recall gate). Returns the pieces both callers need: the config, the
+    trained state, the task, the jitted eval step, the final train loss,
+    and the *untrained* answer log-prob baseline for the lift metric.
+    """
     cfg = get_reduced("lwm-7b")
     vocab = build_vocab(cfg.vocab_size, 0)
     nt = NeedleTask(vocab, seed=0, key_len=1, val_len=1)
@@ -73,14 +99,153 @@ def run(*, train_steps: int = 1500, seq: int = 128, rows: int = 8,
 
     # baseline (untrained) answer log-prob for the lift metric
     b0 = nt.batch(rows, seq, num_needles=1, num_retrieve=1)
-    eb0 = _eval_batch(b0, rows, seq)
-    lg0, _ = eval_step(state.params, eb0)
+    lg0, _ = eval_step(state.params, _eval_batch(b0, rows, seq))
     base_lp = answer_logprob(np.asarray(lg0, np.float32), b0)
 
     loss = None
-    for i in range(train_steps):
+    for _ in range(train_steps):
         state, m = step(state, _train_batch(nt, rows, seq, rng))
         loss = float(m["loss"])
+    return dict(cfg=cfg, state=state, task=nt, eval_step=eval_step,
+                final_loss=loss, baseline_logprob=base_lp)
+
+
+def programmed_retrieval_model(*, seq: int = 128, depth: float = 0.2) -> dict:
+    """Reduced LWM whose weights are CONSTRUCTED (not trained) to retrieve
+    the (1, 1) needle at a fixed depth — the deterministic recall probe for
+    the int8 KV-cache gate (``benchmarks/serve_quant.py``).
+
+    Circuit (layer 1 of 2; layer 0 and both MLPs are zeroed no-ops):
+
+      * Every token embedding is unit-norm with a shared component ``BETA``
+        on one residual dim; value-band tokens additionally carry an
+        orthogonal ``+/-e_j`` identity code in dims 0..63.
+      * Head 0's q/k read only the shared component, placed on the first
+        ``NPAIRS`` RoPE dim pairs with per-pair query phase ``-f_i * O``
+        (O = answer position - value position, a constant of the fixed
+        layout). Post-rotation logits are ``sum_i cos(f_i (s - O))`` at
+        relative distance s — a multi-frequency comb peaked exactly at the
+        needle value, with incommensurate frequencies suppressing aliases.
+      * The OV path copies the attended identity code into a dedicated
+        output band that only value-token lm_head columns read, so the
+        argmax IS the hidden value and every other logit is exactly 0.
+
+    Greedy recall through the f32 engine is 1.0 by construction; an int8
+    cache must preserve K (addressing) and V (copied code) through the
+    real split-K decode kernels to match it. Returns cfg/params/task plus
+    the layout constants and the attention-comb margin."""
+    cfg = get_reduced("lwm-7b")
+    vocab = build_vocab(cfg.vocab_size, 0)
+    task = NeedleTask(vocab, seed=0, key_len=1, val_len=1)
+
+    # Fixed layout (must mirror NeedleTask.build): needle sentence is
+    # marker(2)+key+val+sep at start = depth*(body-5); the tail is
+    # query_marker(2)+key+val, so the engine's generating position P is the
+    # query key and the value sits O positions behind it.
+    body_len = seq - 4
+    start = int(depth * (body_len - 5))
+    val_pos = start + 3
+    gen_pos = body_len + 2
+    offset = gen_pos - val_pos
+
+    d, hd, vsz = cfg.d_model, cfg.resolved_head_dim, cfg.vocab_size
+    beta = 0.25                      # shared-direction coefficient
+    val_lo, val_hi = VALUE_BAND
+    nval = val_hi - val_lo
+    npairs = 6
+    gamma = 14.0                     # q/k magnitude per rotating pair
+
+    inv_freq = 1.0 / cfg.rope_theta ** (np.arange(0, hd, 2) / hd)
+    s_axis = np.arange(0, gen_pos + 1)
+    comb = sum(np.cos(inv_freq[i] * (s_axis - offset)) for i in range(npairs))
+    margin = float(comb[offset] - np.sort(comb)[-2])
+    assert int(np.argmax(comb)) == offset and margin > 0.4, \
+        f"addressing comb not peaked at the needle (margin={margin:.3f})"
+
+    rng = np.random.default_rng(0)
+    embed = np.zeros((vsz, d), np.float32)
+    junk = rng.normal(size=(vsz, 64)).astype(np.float32)
+    junk /= np.linalg.norm(junk, axis=1, keepdims=True)
+    embed[:, 128:192] = junk * np.sqrt(1 - beta ** 2)   # norm filler, unread
+    for j in range(nval):
+        embed[val_lo + j, 128:192] = 0.0
+        embed[val_lo + j, j % 64] = np.sqrt(1 - beta ** 2) * (1 - 2 * (j >= 64))
+    embed[:, 64] = beta
+
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    lay = params["layers_0_attn_dense"]
+    wq, wk, wv, wo = (np.zeros((2, d, d), np.float32) for _ in range(4))
+    hc = beta * np.sqrt(d)           # shared component after RMSNorm
+    for i in range(npairs):
+        wk[1, 64, i] = gamma / hc
+        wq[1, 64, i] = gamma * np.cos(-inv_freq[i] * offset) / hc
+        wq[1, 64, 32 + i] = gamma * np.sin(-inv_freq[i] * offset) / hc
+    for i in range(64):
+        wv[1, i, i] = 1.0            # identity band -> head-0 values
+        wo[1, i, 192 + i] = 1.0      # head-0 values -> output band
+    lay["attn"].update(wq=jnp.asarray(wq), wk=jnp.asarray(wk),
+                       wv=jnp.asarray(wv), wo=jnp.asarray(wo))
+    lay["ln1"] = jnp.ones((2, d), jnp.float32)
+    lay["ln2"] = jnp.ones((2, d), jnp.float32)
+    for name in lay["mlp"]:
+        lay["mlp"][name] = jnp.zeros_like(lay["mlp"][name])
+    params["embed"] = jnp.asarray(embed)
+    params["final_norm"] = jnp.ones((d,), jnp.float32)
+    lm = np.zeros((d, vsz), np.float32)
+    for j in range(nval):
+        lm[192 + (j % 64), val_lo + j] = 1 - 2 * (j >= 64)
+    params["lm_head"] = jnp.asarray(lm)
+    return dict(cfg=cfg, params=params, task=task, depth=depth, seq=seq,
+                offset=offset, margin=round(margin, 3))
+
+
+def serve_retrieval(cfg, params, task, *, seq: int, cache=None,
+                    decode_impl=None, rows: int = 8, batches: int = 4,
+                    num_slots: int = 4, prefill_chunk: int = 16,
+                    depth: float | None = None) -> float:
+    """Needle recall through the REAL ``ServeEngine`` (not teacher-forced
+    eval): each example's context up to the answer becomes a prompt, the
+    engine generates the value greedily, recall = fraction of retrievals
+    whose generated tokens equal the hidden value exactly. ``cache``
+    selects the pool under test (contiguous/paged, f32/int8) — this is the
+    recall gate for KV-cache quantization (``tools/check_bench.py``).
+    ``depth`` pins the needle depth (required for the programmed
+    fixed-offset model; None keeps the task's random depths)."""
+    from repro.serve import CacheConfig, Request, ServeConfig, ServeEngine
+
+    if cache is None:
+        cache = CacheConfig(max_len=seq + task.val_len)
+    eng = ServeEngine(cfg, params,
+                      ServeConfig(cache=cache, decode_impl=decode_impl))
+    depths = None if depth is None else np.array([depth])
+    hits = total = 0
+    for _ in range(batches):
+        b = task.batch(rows, seq, num_needles=1, num_retrieve=1,
+                       depths=depths)
+        reqs, vals = [], []
+        for i in range(rows):
+            first = int(b["answer_slots"][i, 0, 0])
+            reqs.append(Request(
+                prompt=b["tokens"][i, :first].astype(np.int32),
+                max_new_tokens=task.val_len))
+            vals.append(np.asarray(b["answer_values"][i, 0], np.int32))
+        res = eng.serve(reqs, num_slots=num_slots,
+                        prefill_chunk=prefill_chunk)
+        for r, v in zip(res, vals):
+            hits += int(np.array_equal(r.tokens, v))
+            total += 1
+    return hits / total
+
+
+def run(*, train_steps: int = 1500, seq: int = 128, rows: int = 8,
+        quick: bool = False) -> list[dict]:
+    if quick:
+        train_steps = 250
+    tr = train_retrieval_model(train_steps=train_steps, seq=seq, rows=rows)
+    cfg, state, nt = tr["cfg"], tr["state"], tr["task"]
+    eval_step = tr["eval_step"]
+    base_lp = tr["baseline_logprob"]
+    loss = tr["final_loss"]
 
     rows_out = []
 
@@ -116,6 +281,19 @@ def run(*, train_steps: int = 1500, seq: int = 128, rows: int = 8,
                      "depth": None, "N": None, "R": None, "acc": None,
                      "final_train_loss": round(loss, 4),
                      "baseline_answer_logprob": round(base_lp, 3)})
+    # Engine-level recall: the same trained model served through the real
+    # continuous-batching engine, f32 vs int8 paged pools (the quant gate's
+    # code path; the committed gated numbers live in BENCH_serve_quant.json).
+    from repro.serve import CacheConfig
+    f32_cache = CacheConfig(max_len=seq + 8, paged=True, block_size=16)
+    int8_cache = dataclasses.replace(f32_cache, quant="int8",
+                                     quant_tail_blocks=1)
+    for pool, cache in (("paged_f32", f32_cache), ("paged_int8", int8_cache)):
+        recall = serve_retrieval(cfg, state.params, nt, seq=seq, cache=cache,
+                                 rows=rows)
+        rows_out.append({"bench": "needle", "mode": "serve", "pool": pool,
+                         "seq_len": seq, "depth": None, "N": 1, "R": 1,
+                         "acc": round(recall, 3)})
     return rows_out
 
 

@@ -31,7 +31,7 @@ if __package__ in (None, ""):
 
 from benchmarks import (chat_mix, context_stages, decode_fused, mfu_roofline,
                         needle, packing_ablation, ring_fused, serve_batching,
-                        serve_chaos, serve_paged, serve_spec)
+                        serve_chaos, serve_paged, serve_quant, serve_spec)
 
 # name -> (runner(quick), dry_runner(quick) | None). Benches with a dry
 # runner validate their setup (shape-level traces + analytic models) in
@@ -64,6 +64,9 @@ BENCHES = {
     # speculative-decoding acceptance accounting -> BENCH_serve_spec.json
     "serve_spec": (lambda q: serve_spec.run(quick=q),
                    lambda q: serve_spec.run(quick=q, dry_run=True)),
+    # f32-vs-int8 KV residency + recall accounting -> BENCH_serve_quant.json
+    "serve_quant": (lambda q: serve_quant.run(quick=q),
+                    lambda q: serve_quant.run(quick=q, dry_run=True)),
 }
 
 

@@ -1,0 +1,275 @@
+"""f32-vs-int8 KV-cache residency + recall accounting (ROADMAP item 2).
+
+At 1M context the paged pool still charges ~2 bytes/element of KV per
+token; HBM — not FLOPs — caps concurrent users per device. Quantizing the
+cache to int8 with one f32 scale per (block, layer, head) halves the
+resident bytes, compounding multiplicatively with paged prefix sharing
+(BENCH_serve_paged.json), at the cost of ~7-bit K/V mantissas for
+everything outside the full-precision tail window.
+
+Two gates, both fail-closed in ``tools/check_bench.py``:
+
+  * measured bytes — both engines serve the same long-prompt workload on
+    the reduced LWM; resident-KV bytes are measured from the REAL pool
+    buffers (`.nbytes` of the int8 stores + scale rows + tail ring vs the
+    bf16 stores) at the run's peak live-block count. Gate: int8 bytes per
+    resident token <= 0.55x f32.
+  * recall — a hand-programmed retrieval-head model
+    (``benchmarks/needle.py::programmed_retrieval_model``: fixed-offset
+    RoPE addressing + value-code copy, recall 1.0 by construction in f32)
+    is served through both pools; recall = exact greedy retrieval of the
+    hidden needle value through the real engine, with the needle far
+    outside the full-precision tail window so int8 K (addressing) and V
+    (copied code) fidelity are both on the line. Gate: f32 recall >= 0.9
+    and int8 recall within 2 points of f32.
+
+``--dry-run`` (CI smoke) traces the quantized paged prefill step at the
+shape level and replays the analytic byte model — no train, no compile,
+no JSON write.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import numpy as np
+
+HERE = os.path.dirname(__file__)
+OUT_PATH = os.path.join(HERE, "..", "BENCH_serve_quant.json")
+
+# Measured workload: long prompts (relative to the tail window) so nearly
+# the whole resident cache is int8 — bytes-per-token then approaches the
+# asymptotic ratio instead of being dominated by the fixed tail ring.
+NUM_SLOTS = 2
+CHUNK = 32
+MAX_LEN = 384
+BLOCK_SIZE = 16
+TAIL_BLOCKS = 1
+PROMPT_LEN = 376
+MAX_NEW = 8
+# Enough physical blocks that BOTH slots admit concurrently (each request
+# reserves blocks(prompt) + 1 headroom = 25; the default pool of 48 would
+# serialize them and halve the peak-resident denominator).
+NUM_BLOCKS = NUM_SLOTS * (MAX_LEN // BLOCK_SIZE) + 4
+
+# Recall workload (needle grammar, (1,1) variant, programmed head). The
+# fixed depth puts the needle ~100 positions behind the generating token —
+# far outside the 16-token full-precision tail, in fully-flushed int8
+# blocks.
+RETRIEVAL_SEQ = 128
+RETRIEVAL_DEPTH = 0.2
+RETRIEVAL_ROWS = 8
+RETRIEVAL_BATCHES = 8
+
+# 1M-context analytic dims (full-scale model).
+STAGE_CACHE_LEN = 1 << 20
+STAGE_BLOCK = 256
+
+
+def _pool_bytes(caches) -> tuple[int, int]:
+    """(bytes per physical block, fixed tail-ring bytes) measured from the
+    real device buffers of a paged pool. Block-resident leaves (k/v pools
+    and, under quant, their scale rows) are keyed by physical block on
+    axis 1; the full-precision tail ring is per-slot fixed overhead."""
+    block = tail = 0
+    for group in caches.values():
+        for name, leaf in group.items():
+            if name in ("k", "v", "k_scale", "v_scale"):
+                block += leaf.nbytes // leaf.shape[1]
+            elif name in ("k_tail", "v_tail"):
+                tail += leaf.nbytes
+    return block, tail
+
+
+def _cache_config(quant: str):
+    from repro.serve import CacheConfig
+    return CacheConfig(max_len=MAX_LEN, paged=True, block_size=BLOCK_SIZE,
+                       num_blocks=NUM_BLOCKS, quant=quant,
+                       quant_tail_blocks=TAIL_BLOCKS)
+
+
+def _requests():
+    from repro.serve import Request
+    rng = np.random.default_rng(7)
+    return [Request(prompt=rng.integers(16, 900, PROMPT_LEN).astype(np.int32),
+                    max_new_tokens=MAX_NEW)
+            for _ in range(NUM_SLOTS)]
+
+
+def _measured_row() -> dict:
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models.registry import build_model
+    from repro.serve import PagedCachePool, ServeConfig, ServeEngine
+
+    cfg = get_reduced("lwm-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    sides = {}
+    tokens = {}
+    for quant in ("none", "int8"):
+        eng = ServeEngine(cfg, params,
+                          ServeConfig(cache=_cache_config(quant)))
+        t0 = time.time()
+        res = eng.serve(_requests(), num_slots=NUM_SLOTS,
+                        prefill_chunk=CHUNK)
+        wall = round(time.time() - t0, 2)
+        tokens[quant] = [r.tokens for r in res]
+        # Resident bytes from the real buffers: one throwaway pool per
+        # variant (reduced scale — a few MB) gives the exact per-block and
+        # tail-ring footprint the engine's pool allocated.
+        pool = PagedCachePool(NUM_SLOTS, cfg=cfg, max_len=MAX_LEN,
+                              block_size=BLOCK_SIZE, num_blocks=NUM_BLOCKS,
+                              quant=quant, quant_tail_blocks=TAIL_BLOCKS)
+        block_bytes, tail_bytes = _pool_bytes(pool.caches)
+        del pool
+        peak = int(eng.stats["peak_live_blocks"])
+        resident = peak * block_bytes + tail_bytes
+        live_tokens = peak * BLOCK_SIZE
+        sides[quant] = {
+            "resident_kv_bytes": int(resident),
+            "bytes_per_token": round(resident / max(live_tokens, 1), 1),
+            "peak_live_blocks": peak,
+            "block_bytes": int(block_bytes),
+            "tail_ring_bytes": int(tail_bytes),
+            "wall_s": wall,
+        }
+    match = all(np.array_equal(a, b)
+                for a, b in zip(tokens["none"], tokens["int8"]))
+    f32_bpt = sides["none"]["bytes_per_token"]
+    int8_bpt = sides["int8"]["bytes_per_token"]
+    return {
+        "bench": "serve_quant",
+        "backend": jax.default_backend(),
+        "workload": {"requests": NUM_SLOTS, "num_slots": NUM_SLOTS,
+                     "prompt_len": PROMPT_LEN, "max_new": MAX_NEW,
+                     "prefill_chunk": CHUNK, "max_len": MAX_LEN,
+                     "block_size": BLOCK_SIZE, "num_blocks": NUM_BLOCKS,
+                     "quant_tail_blocks": TAIL_BLOCKS, "model": cfg.name},
+        "f32": sides["none"],
+        "int8": sides["int8"],
+        "delta": {
+            "tokens_match": bool(match),
+            "bytes_per_token_cut": round(f32_bpt / max(int8_bpt, 1e-9), 3),
+            "int8_over_f32": round(int8_bpt / max(f32_bpt, 1e-9), 4),
+        },
+    }
+
+
+def _recall_row(*, seq=RETRIEVAL_SEQ, depth=RETRIEVAL_DEPTH,
+                rows=RETRIEVAL_ROWS, batches=RETRIEVAL_BATCHES) -> dict:
+    from benchmarks import needle
+
+    pm = needle.programmed_retrieval_model(seq=seq, depth=depth)
+    cfg, params, task = pm["cfg"], pm["params"], pm["task"]
+    import dataclasses
+    f32_cache = dataclasses.replace(_cache_config("none"), max_len=seq + 8)
+    int8_cache = dataclasses.replace(_cache_config("int8"), max_len=seq + 8)
+    recall = {}
+    for name, cache in (("f32", f32_cache), ("int8", int8_cache)):
+        recall[name] = needle.serve_retrieval(
+            cfg, params, task, seq=seq, cache=cache, rows=rows,
+            batches=batches, depth=depth)
+    return {
+        "bench": "serve_quant",
+        "retrieval": {
+            "programmed_head": True, "seq": seq, "depth": depth,
+            "needle_offset": pm["offset"],
+            "addressing_margin": pm["margin"],
+            "retrievals": rows * batches,
+            "recall_f32": round(recall["f32"], 4),
+            "recall_int8": round(recall["int8"], 4),
+            "recall_delta": round(recall["int8"] - recall["f32"], 4),
+        },
+    }
+
+
+def _analytic_row(*, cache_len=STAGE_CACHE_LEN, block=STAGE_BLOCK,
+                  tail_blocks=2) -> dict:
+    """1M-context byte model at full-scale LWM-7B cache dims: resident
+    pool bytes per token and per-step decode HBM traffic, f32 vs int8."""
+    from repro.configs import get_config
+    from repro.launch import fusion
+
+    cfg = get_config("lwm-7b")
+    hkv, hd, layers = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.num_layers
+    dtype_bytes = 2 if cfg.dtype == "bfloat16" else 4
+    f32_bpt = layers * 2 * hkv * hd * dtype_bytes
+    int8_bpt = layers * 2 * hkv * (hd + 4 / block)      # int8 + scale share
+    tail = tail_blocks * block
+    kw = dict(cache_len=cache_len, num_q_heads=cfg.num_heads,
+              num_kv_heads=hkv, head_dim=hd, batch_per_device=1)
+    io_f32 = fusion.flash_decode_io_bytes(**kw) * layers
+    io_int8 = fusion.flash_decode_io_bytes(
+        **kw, quant=True, quant_block=block, quant_tail_len=tail) * layers
+    return {
+        "bench": "serve_quant",
+        "analytic_1m": {
+            "model": cfg.name, "cache_len": cache_len, "block_size": block,
+            "quant_tail_blocks": tail_blocks,
+            "f32_kv_bytes_per_token": int(f32_bpt),
+            "int8_kv_bytes_per_token": round(int8_bpt, 1),
+            "resident_cut": round(f32_bpt / int8_bpt, 3),
+            "decode_io_bytes_f32": io_f32,
+            "decode_io_bytes_int8": io_int8,
+            "decode_io_cut": round(io_f32 / io_int8, 3),
+        },
+    }
+
+
+def _dry_run_trace() -> None:
+    """Shape-level trace of the quantized paged prefill step (no compile)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.models import decoding
+    from repro.models.registry import build_model
+
+    cfg = get_reduced("lwm-7b")
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    nb = NUM_SLOTS * (MAX_LEN // BLOCK_SIZE)
+    caches = jax.eval_shape(functools.partial(
+        decoding.init_paged_caches, cfg, nb, BLOCK_SIZE, quant="int8",
+        batch=NUM_SLOTS, quant_tail_blocks=TAIL_BLOCKS))
+    jax.eval_shape(
+        functools.partial(decoding.prefill_step, cfg),
+        params,
+        jax.ShapeDtypeStruct((NUM_SLOTS, CHUNK), jnp.int32),
+        caches,
+        jax.ShapeDtypeStruct((NUM_SLOTS,), jnp.int32),
+        jax.ShapeDtypeStruct((NUM_SLOTS,), jnp.int32),
+        block_tables=jax.ShapeDtypeStruct((NUM_SLOTS, MAX_LEN // BLOCK_SIZE),
+                                          jnp.int32))
+
+
+def run(*, quick: bool = False, dry_run: bool = False) -> list[dict]:
+    if dry_run:
+        _dry_run_trace()
+        return [{"bench": "serve_quant", "dry_run": True,
+                 **_analytic_row(cache_len=1 << 12, block=32)}]
+    rows = [_measured_row(),
+            _recall_row(batches=2 if quick else RETRIEVAL_BATCHES),
+            _analytic_row()]
+    with open(OUT_PATH, "w") as f:
+        json.dump(rows, f, indent=2)
+    return rows
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--dry-run", action="store_true")
+    args = ap.parse_args(argv)
+    for row in run(quick=args.quick, dry_run=args.dry_run):
+        print(json.dumps(row, indent=2))
+
+
+if __name__ == "__main__":
+    main()

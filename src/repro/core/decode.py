@@ -20,6 +20,15 @@ import jax.numpy as jnp
 from repro.core.attention import NEG_INF, repeat_kv
 
 
+def resolve_out_dtype(out_dtype, q_dtype):
+    """Single source of truth for the decode output dtype: an explicit
+    ``out_dtype`` wins, otherwise the query's dtype — identical on every
+    engine (xla, pallas, interpret) and every wrapper (flat, paged, ring,
+    quantized), so a bf16 query never silently upcasts to f32 just because
+    one path normalized in f32."""
+    return jnp.dtype(q_dtype if out_dtype is None else out_dtype)
+
+
 def decode_attend_local(
     q: jnp.ndarray,            # (B, 1, H, D)
     k_cache: jnp.ndarray,      # (B, L_local, Hkv, D)
@@ -129,7 +138,7 @@ def decode_attention_unsharded(
         q, k_cache, v_cache, kv_positions=kv_positions, q_position=q_position,
         logits_soft_cap=logits_soft_cap, cache_len=cache_len)
     out = acc / jnp.maximum(l, 1e-30)[..., None]
-    return out.astype(out_dtype or q.dtype)
+    return out.astype(resolve_out_dtype(out_dtype, q.dtype))
 
 
 def paged_gather(cache: jnp.ndarray, block_tables: jnp.ndarray):
@@ -190,7 +199,7 @@ def paged_decode_attention(
         q, k_virt, v_virt, kv_positions=kv_positions, q_position=q_position,
         logits_soft_cap=logits_soft_cap, cache_len=cache_len)
     out = acc / jnp.maximum(l, 1e-30)[..., None]
-    return out.astype(out_dtype or q.dtype)
+    return out.astype(resolve_out_dtype(out_dtype, q.dtype))
 
 
 def paged_cache_update(
@@ -263,3 +272,277 @@ def cache_update(
     v_cache = v_cache * (1 - one_hot[..., None, None]) + one_hot[..., None, None] * v_new
     new_pos = jnp.where(one_hot > 0, position[:, None], kv_positions)
     return k_cache, v_cache, new_pos
+
+
+# -- int8 KV-cache quantization ------------------------------------------------
+#
+# Layout: the *main store* holds int8 K/V with one f32 scale per
+# (quant block, kv head); the newest ``W = quant_tail_blocks * quant_block``
+# positions live unquantized in a per-slot *tail ring* (full precision for
+# the local tokens that dominate attention mass). ``quant_len`` — a device
+# leaf riding inside the cache dict — is the flushed span: positions
+# [0, quant_len) are int8 in the main store, positions [quant_len, filled)
+# are in the ring at slot ``pos % W``. Each append writes the ring only;
+# once the window is full (filled - quant_len == W) the oldest ring block is
+# absmax-quantized per head and scattered into the main store, and
+# quant_len advances one block. quant_len is monotone — a speculative
+# rollback never has to de-quantize (the engine bounds draft_len by
+# W - quant_block so the rollback target stays >= quant_len).
+#
+# Reads merge two partials with the usual LSE fold: the int8 main store
+# bounded by cache_len = quant_len (through the real split-K kernels, which
+# dequantize in VMEM), and the ring via ``decode_attend_local`` over
+# synthesized positions.
+
+
+def quantize_block(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-head absmax int8 quantization of one (B, T, Hkv, D) block.
+
+    Returns ``(int8 values, f32 scale (B, Hkv))`` with
+    ``dequant = int8 * scale``; an all-zero block gets scale eps/127 (any
+    scale reproduces its zeros).
+    """
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=(1, 3))                 # (B, Hkv)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[:, None, :, None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_cache(cache: jnp.ndarray, scale: jnp.ndarray, *,
+                     quant_block: int) -> jnp.ndarray:
+    """Widen an int8 main store (B, L, Hkv, D) back to f32 with its
+    (B, L // quant_block, Hkv) scales — the gather-oracle inverse of the
+    in-kernel dequant."""
+    s = jnp.repeat(scale.astype(jnp.float32), quant_block, axis=1)
+    return cache.astype(jnp.float32) * s[..., None]
+
+
+def quant_tail_positions(quant_len: jnp.ndarray, q_position: jnp.ndarray,
+                         window: int) -> jnp.ndarray:
+    """Absolute positions held by the tail ring's slots, -1 where dead.
+
+    Ring slot j last received position ``x = qpos - ((qpos - j) mod W)``
+    (the newest position congruent to j). x is live iff it reached the ring
+    during the current occupancy and was not yet flushed: x >= quant_len.
+    Anything older in slot j was either flushed (x' < quant_len) or belongs
+    to a previous occupant — both masked, which is why the ring never needs
+    zeroing on slot reset.
+    """
+    j = jnp.arange(window, dtype=jnp.int32)[None, :]            # (1, W)
+    qpos = q_position.astype(jnp.int32)[:, None]                # (B, 1)
+    x = qpos - ((qpos - j) % window)
+    live = (x >= quant_len.astype(jnp.int32)[:, None]) & (x >= 0)
+    return jnp.where(live, x, -1)
+
+
+def quant_cache_update(
+    k_cache: jnp.ndarray,       # (B, L, Hkv, D) int8 main store
+    v_cache: jnp.ndarray,
+    k_scale: jnp.ndarray,       # (B, L // qb, Hkv) f32
+    v_scale: jnp.ndarray,
+    k_tail: jnp.ndarray,        # (B, W, Hkv, D) full-precision ring
+    v_tail: jnp.ndarray,
+    kv_positions: jnp.ndarray,  # (B, L)
+    quant_len: jnp.ndarray,     # (B,) int32 flushed span
+    k_new: jnp.ndarray,         # (B, 1, Hkv, D)
+    v_new: jnp.ndarray,
+    position: jnp.ndarray,      # (B,) absolute position to write
+    *,
+    quant_block: int,
+    valid: jnp.ndarray | None = None,
+) -> dict:
+    """Quantizing append: ring write + conditional oldest-block flush.
+
+    Returns the updated cache leaves as a dict keyed like the quant cache
+    (``k/v/k_scale/v_scale/k_tail/v_tail/positions/quant_len``).
+    """
+    b, L = kv_positions.shape
+    W, qb = k_tail.shape[1], quant_block
+    ok = (position >= 0) & (position < L)
+    if valid is not None:
+        ok &= valid
+    rows = jnp.arange(b)
+    # 1) the new token lands in the ring at pos % W (invalid rows dropped).
+    slot = jnp.where(ok, position % W, W)
+    k_tail = k_tail.at[rows, slot].set(k_new[:, 0].astype(k_tail.dtype),
+                                       mode="drop")
+    v_tail = v_tail.at[rows, slot].set(v_new[:, 0].astype(v_tail.dtype),
+                                       mode="drop")
+    # 2) the position sentinel is written eagerly — once the block flushes,
+    # the int8 rows at these positions go live with no extra write.
+    pidx = jnp.where(ok, position, L)
+    new_pos = kv_positions.at[rows, pidx].set(position.astype(jnp.int32),
+                                              mode="drop")
+    # 3) window full => absmax-quantize the oldest ring block into the main
+    # store. quant_len and W are both block multiples, so the flush span
+    # [quant_len % W, quant_len % W + qb) never wraps the ring.
+    ql = quant_len.astype(jnp.int32)
+    do_flush = ok & (position + 1 - ql == W)
+    fq = ql // qb
+    gidx = (ql % W)[:, None] + jnp.arange(qb, dtype=jnp.int32)[None, :]
+    kt = jnp.take_along_axis(k_tail, gidx[:, :, None, None], axis=1)
+    vt = jnp.take_along_axis(v_tail, gidx[:, :, None, None], axis=1)
+    qk, ks = quantize_block(kt)
+    qv, vs = quantize_block(vt)
+    cols = fq[:, None] * qb + jnp.arange(qb, dtype=jnp.int32)[None, :]
+    cols = jnp.where(do_flush[:, None], cols, L)
+    k_cache = k_cache.at[rows[:, None], cols].set(qk, mode="drop")
+    v_cache = v_cache.at[rows[:, None], cols].set(qv, mode="drop")
+    sidx = jnp.where(do_flush, fq, k_scale.shape[1])
+    k_scale = k_scale.at[rows, sidx].set(ks, mode="drop")
+    v_scale = v_scale.at[rows, sidx].set(vs, mode="drop")
+    quant_len = ql + jnp.where(do_flush, qb, 0)
+    return dict(k=k_cache, v=v_cache, k_scale=k_scale, v_scale=v_scale,
+                k_tail=k_tail, v_tail=v_tail, positions=new_pos,
+                quant_len=quant_len)
+
+
+def quant_paged_cache_update(
+    k_cache: jnp.ndarray,       # (num_blocks, block_size, Hkv, D) int8
+    v_cache: jnp.ndarray,
+    k_scale: jnp.ndarray,       # (num_blocks, Hkv) f32 — rides the block
+    v_scale: jnp.ndarray,
+    k_tail: jnp.ndarray,        # (B, W, Hkv, D) full-precision ring
+    v_tail: jnp.ndarray,
+    quant_len: jnp.ndarray,     # (B,) int32 flushed span
+    k_new: jnp.ndarray,         # (B, 1, Hkv, D)
+    v_new: jnp.ndarray,
+    position: jnp.ndarray,      # (B,) virtual position to write
+    block_tables: jnp.ndarray,  # (B, NB)
+    *,
+    valid: jnp.ndarray | None = None,
+) -> dict:
+    """Paged twin of ``quant_cache_update``: the quant block IS the pool
+    block (one scale row per physical block, so CoW copies, rollback
+    dealloc and the prefix registry carry scales for free), and the flush
+    scatters through the block table. The flushed virtual block is always
+    privately owned: adopted (shared) blocks sit below quant_len at
+    adoption, and a block only becomes shareable via the registry *after*
+    its flush — quant_len is monotone, so no re-flush of shared bytes."""
+    nb_phys, bs = k_cache.shape[0], k_cache.shape[1]
+    b, nb = block_tables.shape
+    W = k_tail.shape[1]
+    blk = position // bs
+    in_table = (blk >= 0) & (blk < nb)
+    entry = jnp.take_along_axis(
+        block_tables, jnp.clip(blk, 0, nb - 1)[:, None], axis=1)[:, 0]
+    ok = in_table & (entry >= 0)
+    if valid is not None:
+        ok &= valid
+    rows = jnp.arange(b)
+    slot = jnp.where(ok, position % W, W)
+    k_tail = k_tail.at[rows, slot].set(k_new[:, 0].astype(k_tail.dtype),
+                                       mode="drop")
+    v_tail = v_tail.at[rows, slot].set(v_new[:, 0].astype(v_tail.dtype),
+                                       mode="drop")
+    ql = quant_len.astype(jnp.int32)
+    do_flush = ok & (position + 1 - ql == W)
+    fq = ql // bs                                       # virtual block to flush
+    fentry = jnp.take_along_axis(
+        block_tables, jnp.clip(fq, 0, nb - 1)[:, None], axis=1)[:, 0]
+    can = do_flush & (fq < nb) & (fentry >= 0)
+    gidx = (ql % W)[:, None] + jnp.arange(bs, dtype=jnp.int32)[None, :]
+    kt = jnp.take_along_axis(k_tail, gidx[:, :, None, None], axis=1)
+    vt = jnp.take_along_axis(v_tail, gidx[:, :, None, None], axis=1)
+    qk, ks = quantize_block(kt)
+    qv, vs = quantize_block(vt)
+    dest = fentry[:, None] * bs + jnp.arange(bs, dtype=jnp.int32)[None, :]
+    dest = jnp.where(can[:, None], dest, nb_phys * bs)  # OOB => dropped
+    kf = k_cache.reshape((nb_phys * bs,) + k_cache.shape[2:])
+    vf = v_cache.reshape((nb_phys * bs,) + v_cache.shape[2:])
+    kf = kf.at[dest].set(qk, mode="drop")
+    vf = vf.at[dest].set(qv, mode="drop")
+    sdx = jnp.where(can, fentry, nb_phys)
+    k_scale = k_scale.at[sdx].set(ks, mode="drop")
+    v_scale = v_scale.at[sdx].set(vs, mode="drop")
+    quant_len = ql + jnp.where(do_flush, bs, 0)
+    return dict(k=kf.reshape(k_cache.shape), v=vf.reshape(v_cache.shape),
+                k_scale=k_scale, v_scale=v_scale, k_tail=k_tail,
+                v_tail=v_tail, quant_len=quant_len)
+
+
+def quant_decode_attention_unsharded(
+    q, k_cache, v_cache, k_scale, v_scale, k_tail, v_tail, *,
+    kv_positions, quant_len, q_position, logits_soft_cap=None,
+    out_dtype=None, impl: str | None = None,
+) -> jnp.ndarray:
+    """Decode attention over a quantized contiguous cache.
+
+    Two partials, merged with the LSE carry fold: the int8 main store
+    bounded by ``cache_len = quant_len`` (split-K kernel with in-VMEM
+    dequant on pallas/interpret, ``dequantize_cache`` + einsum oracle on
+    xla) and the full-precision tail ring via synthesized positions.
+    """
+    impl = resolve_decode_impl(
+        impl, logits_soft_cap=logits_soft_cap,
+        asymmetric=v_tail.shape[-1] != q.shape[-1])
+    qb = k_cache.shape[1] // k_scale.shape[1]
+    tail = decode_attend_local(
+        q, k_tail, v_tail,
+        kv_positions=quant_tail_positions(quant_len, q_position,
+                                          k_tail.shape[1]),
+        q_position=q_position, logits_soft_cap=logits_soft_cap)
+    main_len = quant_len.astype(jnp.int32)
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import flash_decode as fdk  # lazy: avoids cycle
+        return fdk.flash_decode(
+            q, k_cache, v_cache, kv_positions, q_position, kv_block=qb,
+            interpret=impl == "interpret", carry=tail, out_dtype=out_dtype,
+            cache_len=main_len, logits_soft_cap=logits_soft_cap,
+            k_scale=k_scale, v_scale=v_scale)
+    acc, m, l = decode_attend_local(
+        q, dequantize_cache(k_cache, k_scale, quant_block=qb),
+        dequantize_cache(v_cache, v_scale, quant_block=qb),
+        kv_positions=kv_positions, q_position=q_position,
+        logits_soft_cap=logits_soft_cap, cache_len=main_len)
+    return _merge_and_normalize((acc, m, l), tail, q, out_dtype)
+
+
+def quant_paged_decode_attention(
+    q, k_cache, v_cache, k_scale, v_scale, k_tail, v_tail, block_tables, *,
+    quant_len, q_position, cache_len, logits_soft_cap=None, out_dtype=None,
+    impl: str | None = None,
+) -> jnp.ndarray:
+    """Decode attention over a quantized paged cache (see the contiguous
+    twin above); the xla oracle gathers int8 blocks *and* their scales
+    through the same block table before widening."""
+    assert cache_len is not None, "paged decode requires per-row cache_len"
+    impl = resolve_decode_impl(
+        impl, logits_soft_cap=logits_soft_cap,
+        asymmetric=v_tail.shape[-1] != q.shape[-1])
+    bs = k_cache.shape[1]
+    tail = decode_attend_local(
+        q, k_tail, v_tail,
+        kv_positions=quant_tail_positions(quant_len, q_position,
+                                          k_tail.shape[1]),
+        q_position=q_position, logits_soft_cap=logits_soft_cap)
+    main_len = jnp.minimum(quant_len, cache_len).astype(jnp.int32)
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import flash_decode as fdk  # lazy: avoids cycle
+        return fdk.paged_flash_decode(
+            q, k_cache, v_cache, block_tables, q_position,
+            interpret=impl == "interpret", carry=tail, out_dtype=out_dtype,
+            cache_len=main_len, logits_soft_cap=logits_soft_cap,
+            k_scale=k_scale, v_scale=v_scale)
+    k_virt, kv_positions = paged_gather(k_cache, block_tables)
+    v_virt, _ = paged_gather(v_cache, block_tables)
+    safe = jnp.clip(block_tables, 0, k_cache.shape[0] - 1)
+    ks = jnp.repeat(k_scale[safe].astype(jnp.float32), bs, axis=1)
+    vs = jnp.repeat(v_scale[safe].astype(jnp.float32), bs, axis=1)
+    acc, m, l = decode_attend_local(
+        q, k_virt.astype(jnp.float32) * ks[..., None],
+        v_virt.astype(jnp.float32) * vs[..., None],
+        kv_positions=kv_positions, q_position=q_position,
+        logits_soft_cap=logits_soft_cap, cache_len=main_len)
+    return _merge_and_normalize((acc, m, l), tail, q, out_dtype)
+
+
+def _merge_and_normalize(main, tail, q, out_dtype):
+    """LSE-fold the main-store and tail-ring partials and normalize — the
+    xla mirror of ``flash_decode(carry=...)``."""
+    from repro.core import blockwise
+    merged = blockwise.combine_carries(blockwise.AttnCarry(*main),
+                                       blockwise.AttnCarry(*tail))
+    out = merged.acc / jnp.maximum(merged.l, 1e-30)[..., None]
+    return out.astype(resolve_out_dtype(out_dtype, q.dtype))

@@ -213,6 +213,7 @@ def ring_decode_attention(
     logits_soft_cap: float | None = None,
     impl: str | None = None,
     cache_len: jnp.ndarray | None = None,  # (B,) ragged fill (absolute count)
+    out_dtype=None,
 ) -> jnp.ndarray:
     """Paper §5 decode: partial attention per cache shard + cross-shard merge.
 
@@ -235,7 +236,7 @@ def ring_decode_attention(
             q, k_cache, v_cache, axis_name=axis_name,
             kv_positions=kv_positions, q_position=q_position,
             interpret=impl == "interpret", cache_len=cache_len,
-            logits_soft_cap=logits_soft_cap)
+            logits_soft_cap=logits_soft_cap, out_dtype=out_dtype)
 
     acc, m, l = decode_mod.decode_attend_local(
         q, k_cache, v_cache, kv_positions=kv_positions, q_position=q_position,
@@ -252,7 +253,8 @@ def ring_decode_attention(
     for ax in axes:
         out = jax.lax.psum(out, ax)
         l = jax.lax.psum(l, ax)
-    return (out / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    out = out / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(decode_mod.resolve_out_dtype(out_dtype, q.dtype))
 
 
 # ---------------------------------------------------------------------------

@@ -48,7 +48,8 @@ class NeedleTask:
     """
 
     def __init__(self, vocab: Vocab, seed: int = 0, *,
-                 key_len: int = KEY_LEN, val_len: int = VAL_LEN):
+                 key_len: int = KEY_LEN, val_len: int = VAL_LEN,
+                 key_ids: int = 0):
         self.vocab = vocab
         self.key_len = key_len
         self.val_len = val_len
@@ -58,13 +59,26 @@ class NeedleTask:
         self.marker = np.array([t - 1, t - 2], dtype=np.int32)       # lead-in
         self.query_marker = np.array([t - 3, t - 4], dtype=np.int32) # question
         self.sep = np.int32(t - 5)
-        self.reserved_lo = t - 8
+        # key_ids > 0 additionally reserves that many ids exclusively for
+        # needle keys: a key then appears EXACTLY at its needle and its query
+        # (never in filler), the minimal pure-induction variant a reduced
+        # model can learn in a small step budget (the serve-recall gate in
+        # benchmarks/serve_quant.py trains this).
+        self.key_ids = key_ids
+        self.reserved_lo = t - 8 - key_ids
+        self.key_band = (t - 8 - key_ids, t - 8) if key_ids else None
         self.rng = np.random.default_rng(seed)
         self.filler = BookSampler(vocab, min_len=64, max_len=128, seed=seed + 1)
 
     def _rand_tokens(self, n) -> np.ndarray:
         # Keys drawn uniformly below the reserved band.
         return self.rng.integers(16, self.reserved_lo, size=n, dtype=np.int32)
+
+    def _rand_keys(self, shape) -> np.ndarray:
+        if self.key_band is not None:
+            return self.rng.integers(*self.key_band, size=shape,
+                                     dtype=np.int32)
+        return self._rand_tokens(shape)
 
     def _rand_values(self, n) -> np.ndarray:
         lo, hi = VALUE_BAND
@@ -91,11 +105,11 @@ class NeedleTask:
         depths: np.ndarray | None = None,
     ) -> NeedleExample:
         assert num_retrieve <= num_needles
-        keys = self._rand_tokens((num_needles, self.key_len))
+        keys = self._rand_keys((num_needles, self.key_len))
         vals = self._rand_values((num_needles, self.val_len))
         # Ensure distinct keys (regenerate collisions).
         while len({tuple(k) for k in keys}) < num_needles:
-            keys = self._rand_tokens((num_needles, self.key_len))
+            keys = self._rand_keys((num_needles, self.key_len))
 
         sentences = [self.needle_sentence(k, v) for k, v in zip(keys, vals)]
         which = self.rng.choice(num_needles, size=num_retrieve, replace=False)

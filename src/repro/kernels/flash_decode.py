@@ -52,6 +52,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels import pallas_compat as pc
 
 from repro.core.attention import NEG_INF  # single-sourced masking constant
+from repro.core.decode import resolve_out_dtype  # shared dtype contract
 
 DEFAULT_KV_BLOCK = 512
 DEFAULT_NUM_SPLITS = 8
@@ -68,20 +69,30 @@ def _decode_kernel(
     clen_ref,                  # (1, 1) int32 — row's filled cache length
     q_ref,                     # (1, 1, G, D)
     k_ref, v_ref,              # (1, Bk, 1, D) — native (B, L, Hkv, D) layout
-    acc_ref, m_ref, l_ref,     # per-split partials (1, 1, 1, G, D) / (1, 1, 1, G)
-    acc_s, m_s, l_s,           # VMEM scratch (G, D) / (G, 1) / (G, 1) f32
-    *,
+    *refs,                     # [ks_ref, vs_ref (1,1,1) f32 when quant,]
+                               # acc/m/l out refs, then VMEM scratch
     sm_scale: float,
     blocks_per_split: int,
     num_kv_blocks: int,
     block_skip: bool,
     logits_soft_cap: float | None,
+    quant: bool = False,
 ):
     """Online-softmax reduction of one KV block into the split's running
     (acc, m, l). Same update as ``flash_attention._fwd_kernel`` with the
-    causal mask specialized to a single query position."""
+    causal mask specialized to a single query position.
+
+    With ``quant`` the K/V tiles arrive as int8 and two extra (1, 1, 1)
+    refs carry the tile's per-(block, head) f32 scales: the tile is widened
+    to f32 *in VMEM* and rescaled before the MXU dot — HBM only ever
+    streams int8 bytes."""
     isp = pl.program_id(2)
     ibk = pl.program_id(3)
+    if quant:
+        ks_ref, vs_ref = refs[0], refs[1]
+        acc_ref, m_ref, l_ref, acc_s, m_s, l_s = refs[2:]
+    else:
+        acc_ref, m_ref, l_ref, acc_s, m_s, l_s = refs
 
     @pl.when(ibk == 0)
     def _init():
@@ -101,6 +112,9 @@ def _decode_kernel(
         q = q_ref[0, 0].astype(jnp.float32)      # (G, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)  # (Bk, D)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quant:
+            k = k * ks_ref[0, 0, 0]              # in-VMEM dequant
+            v = v * vs_ref[0, 0, 0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * sm_scale
         if logits_soft_cap is not None:
@@ -162,6 +176,8 @@ def flash_decode_partial(
     block_skip: bool = True,
     cache_len: jnp.ndarray | None = None,   # (B,) ragged fill; None = no cap
     logits_soft_cap: float | None = None,
+    k_scale: jnp.ndarray | None = None,     # (B, L // kv_block, Hkv) f32
+    v_scale: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Partial decode attention over one cache shard via the split-K kernel.
 
@@ -174,10 +190,25 @@ def flash_decode_partial(
     serving cache: positions >= cache_len are dead (possibly stale) and both
     masked and block-skipped in-kernel, so a freshly-admitted short slot
     costs only its own filled blocks even when batched with 1M-length slots.
+
+    ``k_scale``/``v_scale`` switch the kernel to the int8 path: the cache is
+    int8, the KV tile size is pinned to the quantization granularity (one
+    scale block per tile, so each grid step prefetches exactly one scalar
+    scale per head), and dequantization happens inside the kernel after the
+    HBM->VMEM stream.
     """
     b, _, h, d = q.shape
     L, hkv = k_cache.shape[1], k_cache.shape[2]
     group = h // hkv
+    quant = k_scale is not None
+    if quant:
+        # One scale block per KV tile: the tile size IS the scale
+        # granularity, and the cache length must tile exactly (serving
+        # caches are sized in whole quant blocks).
+        assert v_scale is not None
+        assert L % kv_block == 0 and k_scale.shape[1] == L // kv_block, (
+            f"quant cache length {L} must tile into kv_block={kv_block} "
+            f"scale blocks (got {k_scale.shape[1]})")
     kv_block = min(kv_block, L)
     if L % kv_block:
         # Pad to a block multiple with -1 positions (masked in-kernel) so the
@@ -217,20 +248,31 @@ def flash_decode_partial(
     kernel = functools.partial(
         _decode_kernel, sm_scale=sm_scale, blocks_per_split=bps,
         num_kv_blocks=nkv, block_skip=block_skip,
-        logits_soft_cap=logits_soft_cap)
+        logits_soft_cap=logits_soft_cap, quant=quant)
+
+    in_specs = [
+        pl.BlockSpec((1, kv_block),
+                     lambda ib, ih, isp, ibk: (ib, kv_blk(isp, ibk))),
+        pl.BlockSpec((1, 1), lambda ib, ih, isp, ibk: (ib, 0)),
+        pl.BlockSpec((1, 1), lambda ib, ih, isp, ibk: (ib, 0)),
+        pl.BlockSpec((1, 1, group, d), lambda ib, ih, isp, ibk: (ib, ih, 0, 0)),
+        pl.BlockSpec((1, kv_block, 1, d), kv_index),
+        pl.BlockSpec((1, kv_block, 1, d), kv_index),
+    ]
+    operands = [kv_positions, qpos2d, clen2d, qg, k_cache, v_cache]
+    if quant:
+        # The tile's (block, head) scale rides the same index map as the KV
+        # tile — one (1, 1, 1) scalar block per grid step.
+        scale_spec = pl.BlockSpec(
+            (1, 1, 1), lambda ib, ih, isp, ibk: (ib, kv_blk(isp, ibk), ih))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
 
     acc, m, l = pl.pallas_call(
         kernel,
         grid=(b, hkv, num_splits, bps),
-        in_specs=[
-            pl.BlockSpec((1, kv_block),
-                         lambda ib, ih, isp, ibk: (ib, kv_blk(isp, ibk))),
-            pl.BlockSpec((1, 1), lambda ib, ih, isp, ibk: (ib, 0)),
-            pl.BlockSpec((1, 1), lambda ib, ih, isp, ibk: (ib, 0)),
-            pl.BlockSpec((1, 1, group, d), lambda ib, ih, isp, ibk: (ib, ih, 0, 0)),
-            pl.BlockSpec((1, kv_block, 1, d), kv_index),
-            pl.BlockSpec((1, kv_block, 1, d), kv_index),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, 1, group, d),
                          lambda ib, ih, isp, ibk: (ib, ih, isp, 0, 0)),
@@ -252,8 +294,8 @@ def flash_decode_partial(
         compiler_params=pc.compiler_params(
             pc.PARALLEL, pc.PARALLEL, pc.PARALLEL, pc.ARBITRARY),
         interpret=interpret,
-        name="lwm_flash_decode",
-    )(kv_positions, qpos2d, clen2d, qg, k_cache, v_cache)
+        name="lwm_flash_decode_int8" if quant else "lwm_flash_decode",
+    )(*operands)
 
     return _merge_splits(acc, m, l, b, h, d)
 
@@ -279,14 +321,14 @@ def _paged_decode_kernel(
     clen_ref,                  # (1, 1) int32 — row's filled cache length
     q_ref,                     # (1, 1, G, D)
     k_ref, v_ref,              # (1, Bs, 1, D) — one physical cache block
-    acc_ref, m_ref, l_ref,     # per-split partials
-    acc_s, m_s, l_s,           # VMEM scratch (G, D) / (G, 1) / (G, 1) f32
-    *,
+    *refs,                     # [ks_ref, vs_ref (1, 1) f32 when quant,]
+                               # acc/m/l out refs, then VMEM scratch
     sm_scale: float,
     block_size: int,
     blocks_per_split: int,
     num_virt_blocks: int,
     logits_soft_cap: float | None,
+    quant: bool = False,
 ):
     """Paged twin of ``_decode_kernel``: the KV tile arrives through the
     block table's index map, and kv positions are *implicit* — the paged
@@ -295,10 +337,20 @@ def _paged_decode_kernel(
     leaf: a lane is attendable iff its virtual position is causally
     visible and inside the row's live span, and a whole tile is dead when
     its table entry is -1 (unallocated tail) — stale bytes in a recycled
-    physical block are never read because ``cache_len`` bounds the span."""
+    physical block are never read because ``cache_len`` bounds the span.
+
+    With ``quant`` the physical block is int8 and its per-(block, head) f32
+    scales ride alongside it (same table-resolved index map), so CoW block
+    copies, rollback dealloc and prefix sharing carry them for free; the
+    tile widens to f32 in VMEM before the MXU dot."""
     ib = pl.program_id(0)
     isp = pl.program_id(2)
     ibk = pl.program_id(3)
+    if quant:
+        ks_ref, vs_ref = refs[0], refs[1]
+        acc_ref, m_ref, l_ref, acc_s, m_s, l_s = refs[2:]
+    else:
+        acc_ref, m_ref, l_ref, acc_s, m_s, l_s = refs
 
     @pl.when(ibk == 0)
     def _init():
@@ -320,6 +372,9 @@ def _paged_decode_kernel(
         q = q_ref[0, 0].astype(jnp.float32)         # (G, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)   # (Bs, D)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quant:
+            k = k * ks_ref[0, 0]                    # in-VMEM dequant
+            v = v * vs_ref[0, 0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * sm_scale
         if logits_soft_cap is not None:
@@ -364,6 +419,8 @@ def paged_flash_decode_partial(
     interpret: bool = False,
     cache_len: jnp.ndarray | None = None,   # (B,) ragged fill
     logits_soft_cap: float | None = None,
+    k_scale: jnp.ndarray | None = None,     # (num_blocks, Hkv) f32
+    v_scale: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Split-K decode attention through a block table (paged KV cache).
 
@@ -397,24 +454,42 @@ def paged_flash_decode_partial(
         lb = jnp.minimum(isp * bps + ibk, nb - 1)
         return (jnp.maximum(tbl[ib, lb], 0), 0, ih, 0)
 
+    quant = k_scale is not None
     kernel = functools.partial(
         _paged_decode_kernel, sm_scale=sm_scale, block_size=bs,
         blocks_per_split=bps, num_virt_blocks=nb,
-        logits_soft_cap=logits_soft_cap)
+        logits_soft_cap=logits_soft_cap, quant=quant)
+
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda ib, ih, isp, ibk, tbl: (ib, 0)),
+        pl.BlockSpec((1, 1), lambda ib, ih, isp, ibk, tbl: (ib, 0)),
+        pl.BlockSpec((1, 1, group, d),
+                     lambda ib, ih, isp, ibk, tbl: (ib, ih, 0, 0)),
+        pl.BlockSpec((1, bs, 1, d), kv_index),
+        pl.BlockSpec((1, bs, 1, d), kv_index),
+    ]
+    operands = [qpos2d, clen2d, qg, k_cache, v_cache]
+    if quant:
+        assert v_scale is not None
+
+        def scale_index(ib, ih, isp, ibk, tbl):
+            # The scale of a physical block lives at the same physical
+            # index, one f32 per head — resolved through the same
+            # prefetched table as the KV tile.
+            lb = jnp.minimum(isp * bps + ibk, nb - 1)
+            return (jnp.maximum(tbl[ib, lb], 0), ih)
+
+        scale_spec = pl.BlockSpec((1, 1), scale_index)
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
 
     acc, m, l = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(b, hkv, num_splits, bps),
-            in_specs=[
-                pl.BlockSpec((1, 1), lambda ib, ih, isp, ibk, tbl: (ib, 0)),
-                pl.BlockSpec((1, 1), lambda ib, ih, isp, ibk, tbl: (ib, 0)),
-                pl.BlockSpec((1, 1, group, d),
-                             lambda ib, ih, isp, ibk, tbl: (ib, ih, 0, 0)),
-                pl.BlockSpec((1, bs, 1, d), kv_index),
-                pl.BlockSpec((1, bs, 1, d), kv_index),
-            ],
+            in_specs=in_specs,
             out_specs=[
                 pl.BlockSpec((1, 1, 1, group, d),
                              lambda ib, ih, isp, ibk, tbl: (ib, ih, isp, 0, 0)),
@@ -437,8 +512,9 @@ def paged_flash_decode_partial(
         compiler_params=pc.compiler_params(
             pc.PARALLEL, pc.PARALLEL, pc.PARALLEL, pc.ARBITRARY),
         interpret=interpret,
-        name="lwm_paged_flash_decode",
-    )(block_tables, qpos2d, clen2d, qg, k_cache, v_cache)
+        name="lwm_paged_flash_decode_int8" if quant else
+             "lwm_paged_flash_decode",
+    )(block_tables, *operands)
 
     return _merge_splits(acc, m, l, b, h, d)
 
@@ -451,17 +527,19 @@ def paged_flash_decode(
     out_dtype=None,
     cache_len=None,
     logits_soft_cap: float | None = None,
+    k_scale=None,
+    v_scale=None,
 ):
     """Normalized paged decode attention (B,1,H,D) -> (B,1,H,D)."""
     partial = paged_flash_decode_partial(
         q, k_cache, v_cache, block_tables, q_position,
         num_splits=num_splits, interpret=interpret, cache_len=cache_len,
-        logits_soft_cap=logits_soft_cap)
+        logits_soft_cap=logits_soft_cap, k_scale=k_scale, v_scale=v_scale)
     if carry is not None:
         partial = merge_partials(carry, partial)
     acc, _, l = partial
     out = acc / jnp.maximum(l, 1e-30)[..., None]
-    return out.astype(out_dtype or q.dtype)
+    return out.astype(resolve_out_dtype(out_dtype, q.dtype))
 
 
 def flash_decode(
@@ -474,19 +552,22 @@ def flash_decode(
     out_dtype=None,
     cache_len=None,
     logits_soft_cap: float | None = None,
+    k_scale=None,
+    v_scale=None,
 ):
     """Normalized single-shard decode attention (B,1,H,D) -> (B,1,H,D).
 
     With ``carry`` the shard partial is folded into the running statistics
-    first (ring decode); without, this is the full single-device answer.
+    first (ring decode, or the unquantized tail window of an int8 cache);
+    without, this is the full single-device answer.
     """
     partial = flash_decode_partial(
         q, k_cache, v_cache, kv_positions, q_position,
         kv_block=kv_block, num_splits=num_splits, interpret=interpret,
         block_skip=block_skip, cache_len=cache_len,
-        logits_soft_cap=logits_soft_cap)
+        logits_soft_cap=logits_soft_cap, k_scale=k_scale, v_scale=v_scale)
     if carry is not None:
         partial = merge_partials(carry, partial)
     acc, _, l = partial
     out = acc / jnp.maximum(l, 1e-30)[..., None]
-    return out.astype(out_dtype or q.dtype)
+    return out.astype(resolve_out_dtype(out_dtype, q.dtype))

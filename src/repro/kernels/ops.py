@@ -356,7 +356,7 @@ def flash_decode(
             q_position=q_position, cache_len=cache_len,
             logits_soft_cap=logits_soft_cap)
         out = acc / jnp.maximum(l, 1e-30)[..., None]
-        return out.astype(out_dtype or q.dtype)
+        return out.astype(dec_mod.resolve_out_dtype(out_dtype, q.dtype))
     return fdk.flash_decode(
         q, k_cache, v_cache, kv_positions, q_position,
         kv_block=kv_block or fdk.DEFAULT_KV_BLOCK,
@@ -380,6 +380,7 @@ def ring_flash_decode(
     block_skip: bool = True,
     cache_len: jnp.ndarray | None = None,   # (B,) ragged fill, absolute
     logits_soft_cap: float | None = None,
+    out_dtype=None,
 ) -> jnp.ndarray:
     """Fused ring decode over a sequence-sharded KV cache (inside shard_map).
 
@@ -418,7 +419,9 @@ def ring_flash_decode(
     if n > 1:
         carry, _ = jax.lax.fori_loop(0, n - 1, step, (carry, partial))
     acc, _, l = carry
-    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    from repro.core import decode as dec_mod
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(dec_mod.resolve_out_dtype(out_dtype, q.dtype))
 
 
 # ---------------------------------------------------------------------------

@@ -139,6 +139,9 @@ def flash_decode_io_bytes(
     batch_per_device: int,
     dtype_bytes: int = 2,
     num_splits: int = 8,
+    quant: bool = False,
+    quant_block: int = 256,
+    quant_tail_len: int = 0,
 ) -> float:
     """Per-device HBM traffic of one split-K flash-decode step (one layer).
 
@@ -147,9 +150,21 @@ def flash_decode_io_bytes(
     no logits buffer. The only f32 round-trip is the per-split partial
     statistics: (B, Hkv, splits, G, D) acc + two (B, Hkv, splits, G)
     vectors, merged by O(splits) jnp ops.
+
+    ``quant=True`` models the int8 cache: the flushed span streams at one
+    byte per element plus one f32 scale per (block, head); the newest
+    ``quant_tail_len`` positions stay full precision (the tail ring the
+    write path keeps unquantized).
     """
     b = batch_per_device
-    cache_bytes = 2 * b * cache_len * num_kv_heads * head_dim * dtype_bytes
+    if quant:
+        main = max(cache_len - quant_tail_len, 0)
+        cache_bytes = (2 * b * main * num_kv_heads * head_dim      # int8
+                       + 2 * b * -(-main // quant_block) * num_kv_heads * 4
+                       + 2 * b * min(quant_tail_len, cache_len)
+                       * num_kv_heads * head_dim * dtype_bytes)
+    else:
+        cache_bytes = 2 * b * cache_len * num_kv_heads * head_dim * dtype_bytes
     q_bytes = b * num_q_heads * head_dim * dtype_bytes
     partials = (b * num_q_heads * num_splits * (head_dim + 2)) * 4
     out_bytes = b * num_q_heads * head_dim * dtype_bytes

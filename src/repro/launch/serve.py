@@ -6,9 +6,11 @@ on TPU), then serves batched requests through the ServeEngine — the paper's
 
 Every engine knob is a flag *derived* from the ``serve.config`` dataclasses
 (``add_config_flags``): ``--max-len``, ``--paged``, ``--block-size``,
-``--decode-impl``, ``--max-retries``, ``--deadline-s``,
-``--no-preemption``, ``--drafter``/``--draft-len``/``--spec``, ... — the
-flag schema cannot drift from ``ServeConfig`` because it IS ``ServeConfig``.
+``--quant int8``/``--quant-tail-blocks`` (int8 KV cache with a
+full-precision tail window), ``--decode-impl``, ``--max-retries``,
+``--deadline-s``, ``--no-preemption``,
+``--drafter``/``--draft-len``/``--spec``, ... — the flag schema cannot
+drift from ``ServeConfig`` because it IS ``ServeConfig``.
 
 ``--drafter <arch>`` turns on speculative decoding: the named registry
 config (vocab-aligned to the target) drafts ``--draft-len`` tokens per
@@ -18,6 +20,7 @@ Examples:
     python -m repro.launch.serve --arch lwm-7b --reduced --requests 4
     python -m repro.launch.serve --arch lwm-7b --reduced --paged \
         --drafter granite-3-2b --draft-len 4
+    python -m repro.launch.serve --arch lwm-7b --reduced --paged --quant int8
 """
 from __future__ import annotations
 

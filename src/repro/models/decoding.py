@@ -51,21 +51,67 @@ def _attn_cache(cfg: ModelConfig, count: int, batch: int, max_len: int):
     }
 
 
+def _quant_attn_cache(cfg: ModelConfig, count: int, batch: int, max_len: int,
+                      *, quant_block: int, quant_tail_blocks: int):
+    """int8 attention cache: int8 main store + per-(block, layer, head) f32
+    scales + a full-precision tail ring of the newest
+    ``quant_tail_blocks * quant_block`` positions + the per-row flushed
+    span ``quant_len`` (a device leaf so jitted step signatures never
+    change). See ``core.decode`` for the write/flush/read contract."""
+    hd = cfg.resolved_head_dim
+    hkv = cfg.num_kv_heads
+    if max_len % quant_block:
+        raise ValueError(
+            f"quantized cache max_len={max_len} must be a multiple of "
+            f"quant_block={quant_block}")
+    w = quant_tail_blocks * quant_block
+    return {
+        "k": jnp.zeros((count, batch, max_len, hkv, hd), jnp.int8),
+        "v": jnp.zeros((count, batch, max_len, hkv, hd), jnp.int8),
+        "positions": jnp.full((count, batch, max_len), -1, jnp.int32),
+        "k_scale": jnp.zeros((count, batch, max_len // quant_block, hkv),
+                             jnp.float32),
+        "v_scale": jnp.zeros((count, batch, max_len // quant_block, hkv),
+                             jnp.float32),
+        "k_tail": jnp.zeros((count, batch, w, hkv, hd), cfg.compute_dtype),
+        "v_tail": jnp.zeros((count, batch, w, hkv, hd), cfg.compute_dtype),
+        "quant_len": jnp.zeros((count, batch), jnp.int32),
+    }
+
+
 def _stacked(fn, count):
     leaves = fn()
     return jax.tree.map(lambda a: jnp.tile(a[None], (count,) + (1,) * a.ndim),
                         leaves)
 
 
+def _check_quant(cfg: ModelConfig, quant: str) -> bool:
+    if quant not in ("none", "int8"):
+        raise ValueError(f"unknown KV-cache quant {quant!r}; "
+                         "expected none|int8")
+    if quant != "none" and not paged_families(cfg):
+        raise NotImplementedError(
+            f"quantized KV cache supports attention-cache families only; "
+            f"{cfg.name} ({cfg.family}) keeps full-precision slots")
+    return quant != "none"
+
+
 def init_caches(cfg: ModelConfig, batch: int, max_len: int,
-                ctx: RuntimeCtx = NULL_CTX) -> dict:
+                ctx: RuntimeCtx = NULL_CTX, *, quant: str = "none",
+                quant_block: int = 256, quant_tail_blocks: int = 2) -> dict:
+    quantized = _check_quant(cfg, quant)
     caches: dict[str, Any] = {}
     for i, (kind, count) in enumerate(tfm.layer_groups(cfg)):
         if count == 0:
             continue
         key = f"layers_{i}_{kind}"
         if kind in ("attn_dense", "attn_moe", "dec_attn"):
-            caches[key] = _attn_cache(cfg, count, batch, max_len)
+            if quantized:
+                caches[key] = _quant_attn_cache(
+                    cfg, count, batch, max_len, quant_block=quant_block,
+                    quant_tail_blocks=quant_tail_blocks)
+            else:
+                caches[key] = _attn_cache(cfg, count, batch, max_len)
         elif kind.startswith("mla"):
             caches[key] = _stacked(
                 lambda: mla_mod.mla_init_cache(cfg, batch, max_len), count)
@@ -101,28 +147,57 @@ def paged_families(cfg: ModelConfig) -> bool:
 
 
 def init_paged_caches(cfg: ModelConfig, num_blocks: int, block_size: int,
-                      ctx: RuntimeCtx = NULL_CTX) -> dict:
+                      ctx: RuntimeCtx = NULL_CTX, *, quant: str = "none",
+                      batch: int | None = None,
+                      quant_tail_blocks: int = 2) -> dict:
     """Paged decode caches: per layer group, K/V physical block pools of
     shape ``(count, num_blocks, block_size, Hkv, hd)`` shared by every
     batch row through a block table. No ``positions`` leaf — the paged
     layout is append-only, so a row's token j sits at virtual position j
-    and validity derives from the per-row ``cache_len`` alone."""
+    and validity derives from the per-row ``cache_len`` alone.
+
+    With ``quant="int8"`` the pools are int8 with one f32 scale row per
+    (physical block, layer, head) — the quant block IS the pool block, so
+    CoW copies, rollback dealloc and the prefix registry carry scales for
+    free — plus a per-slot full-precision tail ring of the newest
+    ``quant_tail_blocks`` blocks (``batch`` = slot count required)."""
     if not paged_families(cfg):
         raise NotImplementedError(
             f"paged KV cache supports attention-cache families only; "
             f"{cfg.name} ({cfg.family}) keeps contiguous slots")
+    quantized = _check_quant(cfg, quant)
+    if quantized and batch is None:
+        raise ValueError("quantized paged caches need batch= (slot count) "
+                         "for the per-slot tail ring")
     hd = cfg.resolved_head_dim
+    hkv = cfg.num_kv_heads
     caches: dict[str, Any] = {}
     for i, (kind, count) in enumerate(tfm.layer_groups(cfg)):
         if count == 0:
             continue
         assert kind in ("attn_dense", "attn_moe"), kind
-        caches[f"layers_{i}_{kind}"] = {
-            "k": jnp.zeros((count, num_blocks, block_size, cfg.num_kv_heads,
-                            hd), cfg.compute_dtype),
-            "v": jnp.zeros((count, num_blocks, block_size, cfg.num_kv_heads,
-                            hd), cfg.compute_dtype),
-        }
+        if quantized:
+            w = quant_tail_blocks * block_size
+            caches[f"layers_{i}_{kind}"] = {
+                "k": jnp.zeros((count, num_blocks, block_size, hkv, hd),
+                               jnp.int8),
+                "v": jnp.zeros((count, num_blocks, block_size, hkv, hd),
+                               jnp.int8),
+                "k_scale": jnp.zeros((count, num_blocks, hkv), jnp.float32),
+                "v_scale": jnp.zeros((count, num_blocks, hkv), jnp.float32),
+                "k_tail": jnp.zeros((count, batch, w, hkv, hd),
+                                    cfg.compute_dtype),
+                "v_tail": jnp.zeros((count, batch, w, hkv, hd),
+                                    cfg.compute_dtype),
+                "quant_len": jnp.zeros((count, batch), jnp.int32),
+            }
+        else:
+            caches[f"layers_{i}_{kind}"] = {
+                "k": jnp.zeros((count, num_blocks, block_size, hkv, hd),
+                               cfg.compute_dtype),
+                "v": jnp.zeros((count, num_blocks, block_size, hkv, hd),
+                               cfg.compute_dtype),
+            }
     return caches
 
 
@@ -194,12 +269,53 @@ def _attn_decode_block(cfg: ModelConfig, p, x, cache, position,
                 "paged KV cache x ring-sharded decode is not implemented: "
                 "the block table indexes one device's physical pool (see "
                 "docs/serving.md, 'Paged cache')")
-        k_c, v_c = dec_mod.paged_cache_update(
-            cache["k"], cache["v"], k_new, v_new, position, block_tables,
-            valid=token_valid)
-        att = dec_mod.paged_decode_attention(
-            q, k_c, v_c, block_tables, q_position=position,
-            cache_len=cache_lens, logits_soft_cap=cfg.logits_soft_cap,
+        if "k_scale" in cache:
+            new_cache = dec_mod.quant_paged_cache_update(
+                cache["k"], cache["v"], cache["k_scale"], cache["v_scale"],
+                cache["k_tail"], cache["v_tail"], cache["quant_len"],
+                k_new, v_new, position, block_tables, valid=token_valid)
+            att = dec_mod.quant_paged_decode_attention(
+                q, new_cache["k"], new_cache["v"], new_cache["k_scale"],
+                new_cache["v_scale"], new_cache["k_tail"],
+                new_cache["v_tail"], block_tables,
+                quant_len=new_cache["quant_len"], q_position=position,
+                cache_len=cache_lens, logits_soft_cap=cfg.logits_soft_cap,
+                impl=ctx.decode_impl or cfg.decode_impl)
+        else:
+            k_c, v_c = dec_mod.paged_cache_update(
+                cache["k"], cache["v"], k_new, v_new, position, block_tables,
+                valid=token_valid)
+            att = dec_mod.paged_decode_attention(
+                q, k_c, v_c, block_tables, q_position=position,
+                cache_len=cache_lens, logits_soft_cap=cfg.logits_soft_cap,
+                impl=ctx.decode_impl or cfg.decode_impl)
+            new_cache = {"k": k_c, "v": v_c}
+        x = x + L.linear(att.reshape(b, 1, -1), p["attn"]["wo"])
+        h = norm2(x)
+        if "moe" in p:
+            ffn, _ = moe_mod.moe_apply(cfg, p["moe"], h, ctx)
+        else:
+            ffn = tfm.mlp_apply(cfg, p["mlp"], h)
+        return x + ffn, new_cache
+    if "k_scale" in cache:
+        # Quantized contiguous cache (plain attention families only; the
+        # pool init gates that, and ring decode is rejected below).
+        if ctx.decode_ring:
+            raise NotImplementedError(
+                "quantized KV cache x ring-sharded decode is not "
+                "implemented (see docs/serving.md, 'Quantized KV cache')")
+        qb = cache["k"].shape[1] // cache["k_scale"].shape[1]
+        new_cache = dec_mod.quant_cache_update(
+            cache["k"], cache["v"], cache["k_scale"], cache["v_scale"],
+            cache["k_tail"], cache["v_tail"], cache["positions"],
+            cache["quant_len"], k_new, v_new, position,
+            quant_block=qb, valid=token_valid)
+        att = dec_mod.quant_decode_attention_unsharded(
+            q, new_cache["k"], new_cache["v"], new_cache["k_scale"],
+            new_cache["v_scale"], new_cache["k_tail"], new_cache["v_tail"],
+            kv_positions=new_cache["positions"],
+            quant_len=new_cache["quant_len"], q_position=position,
+            logits_soft_cap=cfg.logits_soft_cap,
             impl=ctx.decode_impl or cfg.decode_impl)
         x = x + L.linear(att.reshape(b, 1, -1), p["attn"]["wo"])
         h = norm2(x)
@@ -207,7 +323,7 @@ def _attn_decode_block(cfg: ModelConfig, p, x, cache, position,
             ffn, _ = moe_mod.moe_apply(cfg, p["moe"], h, ctx)
         else:
             ffn = tfm.mlp_apply(cfg, p["mlp"], h)
-        return x + ffn, {"k": k_c, "v": v_c}
+        return x + ffn, new_cache
     k_c, v_c, pos_c = dec_mod.cache_update(
         cache["k"], cache["v"], cache["positions"], k_new, v_new, position,
         valid=token_valid)

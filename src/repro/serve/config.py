@@ -35,13 +35,22 @@ DECODE_IMPL_CHOICES = ("auto", "pallas", "interpret", "xla", "ref")
 class CacheConfig:
     """Cache-pool geometry. ``paged=True`` swaps the contiguous per-slot
     caches for the block-paged pool (refcounted copy-on-write prefix
-    sharing over ``num_blocks`` physical blocks of ``block_size``)."""
+    sharing over ``num_blocks`` physical blocks of ``block_size``).
+
+    ``quant="int8"`` stores K/V as int8 with one f32 scale per
+    (block, layer, head), keeping the newest ``quant_tail_blocks`` blocks
+    full-precision (docs/serving.md, "Quantized KV cache"). On a paged
+    pool the quant block IS ``block_size``; on a contiguous pool it is
+    ``quant_block``."""
     max_len: int = 4096
     num_slots: int | None = None       # None = per-call (min(len(reqs), 8))
     prefill_chunk: int = 8
     paged: bool = False
     block_size: int = 256
     num_blocks: int | None = None      # None = num_slots * blocks_per_slot
+    quant: str = "none"                # "none" | "int8"
+    quant_block: int = 256             # contiguous pools only
+    quant_tail_blocks: int = 2         # full-precision tail window (blocks)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +102,9 @@ _LEGACY_MAP: dict[str, tuple[str | None, str]] = {
     "paged": ("cache", "paged"),
     "block_size": ("cache", "block_size"),
     "num_blocks": ("cache", "num_blocks"),
+    "quant": ("cache", "quant"),
+    "quant_block": ("cache", "quant_block"),
+    "quant_tail_blocks": ("cache", "quant_tail_blocks"),
     "max_retries": ("faults", "max_retries"),
     "retry_backoff_s": ("faults", "retry_backoff_s"),
     "retry_backoff_cap_s": ("faults", "retry_backoff_cap_s"),
@@ -145,6 +157,8 @@ _CLI_SPECIAL = {
     # drafter is a registry arch name on the CLI; the launcher resolves it
     # to a ModelConfig + params (see launch/serve.py).
     "drafter": dict(type=str, metavar="ARCH"),
+    # KV-cache quantization mode gets its vocabulary as argparse choices.
+    "quant": dict(type=str, choices=["none", "int8"]),
 }
 # Field name -> flag spelling, where the raw name would read badly.
 _CLI_FLAG = {"enabled": "--spec"}      # --spec / --no-spec

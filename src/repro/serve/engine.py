@@ -145,6 +145,33 @@ class ServeEngine:
             raise NotImplementedError(
                 "paged KV cache x ring-sharded decode is unsupported; see "
                 "docs/serving.md ('Paged cache')")
+        if cache.quant != "none":
+            if cache.quant != "int8":
+                raise ValueError(f"unknown KV-cache quant {cache.quant!r}; "
+                                 "expected none|int8")
+            if not decoding.paged_families(cfg):
+                raise NotImplementedError(
+                    "quantized KV cache supports attention-cache families "
+                    f"only; {cfg.name} ({cfg.family}) keeps full-precision "
+                    "slots")
+            if ctx.decode_ring:
+                raise NotImplementedError(
+                    "quantized KV cache x ring-sharded decode is not "
+                    "implemented (see docs/serving.md, 'Quantized KV "
+                    "cache')")
+            if cache.quant_tail_blocks < 1:
+                raise ValueError(f"quant_tail_blocks must be >= 1, got "
+                                 f"{cache.quant_tail_blocks}")
+            if spec.enabled:
+                gran = cache.block_size if cache.paged else cache.quant_block
+                limit = (cache.quant_tail_blocks - 1) * gran
+                if spec.draft_len > limit:
+                    raise ValueError(
+                        f"draft_len={spec.draft_len} exceeds the quantized "
+                        f"rollback bound {limit} (= (quant_tail_blocks - 1) "
+                        "x quant granularity): a rejected draft must never "
+                        "cut into the flushed int8 span, which is "
+                        "irreversible on device")
         if spec.enabled:
             if spec.drafter is None:
                 raise ValueError("SpecConfig.enabled=True needs a drafter "
@@ -174,6 +201,9 @@ class ServeEngine:
         self.paged = cache.paged
         self.block_size = cache.block_size
         self.num_blocks = cache.num_blocks
+        self.quant = cache.quant
+        self.quant_block = cache.quant_block
+        self.quant_tail_blocks = cache.quant_tail_blocks
         self.max_retries = fault.max_retries
         self.retry_backoff_s = fault.retry_backoff_s
         self.retry_backoff_cap_s = fault.retry_backoff_cap_s
@@ -262,10 +292,14 @@ class ServeEngine:
             pool = PagedCachePool(n_slots, cfg=self.cfg,
                                   max_len=self.max_len,
                                   block_size=self.block_size,
-                                  num_blocks=self.num_blocks, ctx=self.ctx)
+                                  num_blocks=self.num_blocks, ctx=self.ctx,
+                                  quant=self.quant,
+                                  quant_tail_blocks=self.quant_tail_blocks)
         else:
             pool = CachePool(n_slots, cfg=self.cfg, max_len=self.max_len,
-                             ctx=self.ctx)
+                             ctx=self.ctx, quant=self.quant,
+                             quant_block=self.quant_block,
+                             quant_tail_blocks=self.quant_tail_blocks)
         sched = Scheduler(pool, prefill_chunk=chunk,
                           vocab_size=self.cfg.vocab_size, bos_id=self.bos_id,
                           preemption=self.preemption,

@@ -37,11 +37,19 @@ class CachePool:
     paged = False   # PagedCachePool flips this; schedulers key off it
 
     def __init__(self, num_slots: int, *, cfg=None, max_len: int = 0,
-                 ctx: RuntimeCtx = NULL_CTX):
+                 ctx: RuntimeCtx = NULL_CTX, quant: str = "none",
+                 quant_block: int = 256, quant_tail_blocks: int = 2):
         assert num_slots >= 1, "pool needs at least one slot"
         self.num_slots = num_slots
         self.max_len = max_len
         self.cache_len = np.zeros(num_slots, np.int32)
+        # int8 cache: host mirror of each slot's flushed span (the device
+        # authority is the per-layer ``quant_len`` cache leaf; the closed
+        # form below reproduces it exactly from the max fill ever reached).
+        self.quant = quant
+        self.quant_len = np.zeros(num_slots, np.int32)
+        self._quant_granularity = quant_block
+        self._quant_window = quant_tail_blocks * quant_block
         # pop() from the tail => lowest slot ids are handed out first.
         self._free = list(range(num_slots - 1, -1, -1))
         self.caches = None
@@ -49,9 +57,23 @@ class CachePool:
         self._reset_jit = None
         if cfg is not None:
             from repro.models import decoding  # lazy: keeps bookkeeping mode light
-            self.caches = decoding.init_caches(cfg, num_slots, max_len, ctx)
-            self._template = decoding.init_caches(cfg, 1, max_len, ctx)
+            self.caches = decoding.init_caches(
+                cfg, num_slots, max_len, ctx, quant=quant,
+                quant_block=quant_block, quant_tail_blocks=quant_tail_blocks)
+            self._template = decoding.init_caches(
+                cfg, 1, max_len, ctx, quant=quant, quant_block=quant_block,
+                quant_tail_blocks=quant_tail_blocks)
             self._reset_jit = jax.jit(self._reset_slot, donate_argnums=(0,))
+
+    def _quant_len_for(self, filled: int) -> int:
+        """Closed form of the device flush rule: after the slot's fill has
+        reached ``filled``, the flushed span is the largest block multiple
+        leaving at most one tail window unquantized. Monotone in ``filled``,
+        so the mirror below folds it with max() — a speculative rollback
+        never lowers it (flushes depend only on the max fill ever reached,
+        and the device leaf is monotone too)."""
+        qb, w = self._quant_granularity, self._quant_window
+        return qb * max(0, (filled - w + qb) // qb)
 
     # -- slot lifecycle --------------------------------------------------------
 
@@ -73,12 +95,14 @@ class CachePool:
         self._free.append(slot)
         self._free.sort(reverse=True)
         self.cache_len[slot] = 0
+        self.quant_len[slot] = 0
         return 0
 
     def reset(self, slot: int) -> None:
         """Restore one slot's cache rows to their init state (positions -1,
         recurrent state zeroed) so a new occupant starts clean."""
         self.cache_len[slot] = 0
+        self.quant_len[slot] = 0
         if self.caches is not None:
             self.caches = self._reset_jit(self.caches, self._template, slot)
 
@@ -90,6 +114,9 @@ class CachePool:
                 f"slot {slot}: cache_len {new} crosses the int32 boundary — "
                 "the decode kernels consume int32 cache-length rows")
         self.cache_len[slot] = new
+        if self.quant != "none":
+            self.quant_len[slot] = max(int(self.quant_len[slot]),
+                                       self._quant_len_for(new))
         assert self.max_len == 0 or new <= self.max_len, (
             f"slot {slot} overflowed max_len={self.max_len}")
 
@@ -99,10 +126,18 @@ class CachePool:
         whole row, so the rollback is pure bookkeeping: ``cache_len`` is
         the only validity authority and every decode path masks positions
         past it, so the stale rejected entries are never attended again.
-        Returns the number of physical blocks freed (always 0 here)."""
+        Returns the number of physical blocks freed (always 0 here).
+
+        On a quantized pool the target must not cut into the flushed int8
+        span: ``quant_len`` is monotone on the device, so de-quantizing is
+        impossible — the engine bounds speculative draft length by
+        ``tail_window - quant_granularity`` to guarantee this."""
         cur = int(self.cache_len[slot])
         assert 0 <= new_len <= cur, (
             f"slot {slot}: rollback to {new_len} outside [0, {cur}]")
+        assert self.quant == "none" or new_len >= int(self.quant_len[slot]), (
+            f"slot {slot}: rollback to {new_len} cuts into the flushed "
+            f"int8 span [0, {int(self.quant_len[slot])})")
         self.cache_len[slot] = new_len
         return 0
 
@@ -202,9 +237,14 @@ class PagedCachePool(CachePool):
 
     def __init__(self, num_slots: int, *, cfg=None, max_len: int,
                  block_size: int = 256, num_blocks: int | None = None,
-                 ctx: RuntimeCtx = NULL_CTX):
+                 ctx: RuntimeCtx = NULL_CTX, quant: str = "none",
+                 quant_tail_blocks: int = 2):
         assert block_size >= 1 and max_len >= 1
-        super().__init__(num_slots, max_len=max_len)   # slot bookkeeping only
+        # Slot bookkeeping only; paged quant granularity IS the block size
+        # (one scale row per physical block), so quant_block == block_size.
+        super().__init__(num_slots, max_len=max_len, quant=quant,
+                         quant_block=block_size,
+                         quant_tail_blocks=quant_tail_blocks)
         self.block_size = block_size
         self.blocks_per_slot = -(-max_len // block_size)
         self.num_blocks = (num_blocks if num_blocks is not None
@@ -231,21 +271,32 @@ class PagedCachePool(CachePool):
         # free blocks.
         self._reserved: dict[int, int] = {}
         self._copy_jit = None
+        self._set_ql_jit = None
         if cfg is not None:
             from repro.models import decoding  # lazy: keeps bookkeeping light
             self.caches = decoding.init_paged_caches(
-                cfg, self.num_blocks, block_size, ctx)
+                cfg, self.num_blocks, block_size, ctx, quant=quant,
+                batch=num_slots, quant_tail_blocks=quant_tail_blocks)
             self._copy_jit = jax.jit(self._copy_block, donate_argnums=(0,))
+            if quant != "none":
+                self._set_ql_jit = jax.jit(self._set_quant_len,
+                                           donate_argnums=(0,))
 
     # -- slot lifecycle --------------------------------------------------------
 
     def reset(self, slot: int) -> None:
-        """No device work: a freshly-allocated slot's table is empty and
-        ``cache_len`` masks any stale bytes in recycled physical blocks."""
+        """Minimal device work: a freshly-allocated slot's table is empty
+        and ``cache_len`` masks any stale bytes in recycled physical blocks
+        — only the quantized pool's per-slot ``quant_len`` leaf needs
+        zeroing (the tail ring never does: its liveness mask only admits
+        positions written during the current occupancy)."""
         assert (self.block_tables[slot] < 0).all(), (
             f"slot {slot} reset with live blocks")
         self.cache_len[slot] = 0
+        self.quant_len[slot] = 0
         self._reg[slot] = (0, b"")
+        if self._set_ql_jit is not None:
+            self.caches = self._set_ql_jit(self.caches, slot, 0)
 
     def free(self, slot: int) -> int:
         """Release the slot's table. Returns the number of physical blocks
@@ -288,6 +339,9 @@ class PagedCachePool(CachePool):
         cur = int(self.cache_len[slot])
         assert 0 <= new_len <= cur, (
             f"slot {slot}: rollback to {new_len} outside [0, {cur}]")
+        assert self.quant == "none" or new_len >= int(self.quant_len[slot]), (
+            f"slot {slot}: rollback to {new_len} cuts into the flushed "
+            f"int8 span [0, {int(self.quant_len[slot])})")
         keep = self.blocks_for(new_len)
         freed = 0
         for i in range(keep, self.blocks_per_slot):
@@ -405,6 +459,16 @@ class PagedCachePool(CachePool):
             self.allocator.share(blk)
             self.block_tables[slot, i] = blk
         self.cache_len[slot] = matched
+        if self.quant != "none":
+            # Registration only ever covers flushed blocks (see
+            # register_prefix), so every adopted byte is already int8 and
+            # the adopted span needs no tail-ring backing: fast-forward
+            # the flushed span to the whole match.
+            assert matched % bs == 0, (
+                f"quantized adoption must be block-aligned, got {matched}")
+            self.quant_len[slot] = matched
+            if self._set_ql_jit is not None:
+                self.caches = self._set_ql_jit(self.caches, slot, matched)
         n_full = min(matched // bs, len(blocks))
         digest = b""
         for i in range(n_full):
@@ -424,6 +488,13 @@ class PagedCachePool(CachePool):
         bs = self.block_size
         done, digest = self._reg.get(slot, (0, b""))
         n_full = len(consumed) // bs
+        if self.quant != "none":
+            # A block is shareable only once its int8 bytes exist — the
+            # flush lags the fill by the tail window, so cap registration
+            # at the flushed span and never register the partial tail
+            # (those tokens live in the per-slot ring, not in any block).
+            n_full = min(n_full, int(self.quant_len[slot]) // bs)
+            final = False
         for i in range(done, n_full):
             digest = _chain_digest(digest,
                                    consumed[i * bs:(i + 1) * bs].tobytes())
@@ -442,15 +513,39 @@ class PagedCachePool(CachePool):
         self._block_key[blk] = key
         self.registry_version += 1
 
+    # -- jitted per-slot quant_len write ---------------------------------------
+
+    @staticmethod
+    def _set_quant_len(caches, slot, value):
+        # Paged blocks are recycled without device resets (cache_len masks
+        # stale bytes), but quant_len is per-slot device state and must
+        # track slot turnover / prefix adoption exactly.
+        out = {}
+        for key, group in caches.items():
+            if "quant_len" in group:
+                group = dict(group)
+                group["quant_len"] = group["quant_len"].at[:, slot].set(value)
+            out[key] = group
+        return out
+
     # -- jitted block copy (copy-on-write) -------------------------------------
 
     @staticmethod
     def _copy_block(caches, src, dst):
-        # Every paged leaf is (count, num_blocks, block_size, ...): splice
-        # one block along axis 1. src/dst stay traced so one compilation
-        # covers every copy-on-write.
-        return jax.tree.map(
-            lambda f: jax.lax.dynamic_update_slice_in_dim(
+        # Every *physical-block* leaf is (count, num_blocks, ...): splice
+        # one block along axis 1 — under int8 quant this carries the
+        # per-block scale rows along with the bytes, which is what lets
+        # CoW / rollback / the registry ignore quantization entirely.
+        # Per-slot leaves (tail ring, quant_len) are keyed by batch row,
+        # not physical block, and must not be spliced. src/dst stay
+        # traced so one compilation covers every copy-on-write.
+        per_slot = {"k_tail", "v_tail", "quant_len"}
+
+        def copy(f):
+            return jax.lax.dynamic_update_slice_in_dim(
                 f, jax.lax.dynamic_slice_in_dim(f, src, 1, axis=1), dst,
-                axis=1),
-            caches)
+                axis=1)
+
+        return {key: {name: (leaf if name in per_slot else copy(leaf))
+                      for name, leaf in group.items()}
+                for key, group in caches.items()}

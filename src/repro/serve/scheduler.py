@@ -259,6 +259,11 @@ class Scheduler:
                 # Keep >= 1 prompt token to run: its logits seed sampling.
                 matched = min(matched, len(prompt) - 1)
                 bs = self.pool.block_size
+                if getattr(self.pool, "quant", "none") != "none":
+                    # Quantized adoption is whole-block-only: the adopted
+                    # span becomes flushed int8 with no tail-ring backing,
+                    # so a partial block cannot be fast-forwarded past.
+                    matched = (matched // bs) * bs
                 keep = blocks[:matched // bs]
                 if matched % bs:
                     keep.append(blocks[matched // bs])

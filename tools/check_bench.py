@@ -43,6 +43,12 @@ claims rest on:
     model calls than the plain baseline; the 1M-context analytic row's
     sweep-byte model must show > 1 token per target sweep and a > 1x
     sweep speedup for the cross-model drafting pair.
+  * BENCH_serve_quant.json — the int8 cache pool's MEASURED resident KV
+    bytes per token (real buffer sizes at the run's peak live blocks,
+    tail ring included) must be <= 0.55x the f32 pool's on the same
+    workload, AND engine-level needle recall through the quantized pool
+    must land within 2 points of the f32 pool's; the 1M analytic row
+    must keep a >= 1.8x resident cut.
 
 Run locally:  python tools/check_bench.py  (from the repo root)
 """
@@ -309,6 +315,56 @@ def check_serve_spec() -> None:
            "serve_spec: the 1M-context analytic_paper_stage row is gone")
 
 
+def check_serve_quant() -> None:
+    rows = _load("BENCH_serve_quant.json")
+    if rows is None:
+        return
+    measured = recall_rows = analytic = 0
+    for row in rows or []:
+        if "delta" in row:
+            measured += 1
+            delta = row["delta"]
+            # Fail-closed defaults: a missing/renamed key must FAIL the gate.
+            _check(delta.get("int8_over_f32", 1.0) <= 0.55,
+                   "serve_quant[measured]: int8 resident bytes per token "
+                   "exceed 0.55x the f32 pool's (quantization no longer "
+                   "pays for itself)")
+            _check(row.get("int8", {}).get("resident_kv_bytes", 10 ** 18)
+                   < row.get("f32", {}).get("resident_kv_bytes", -1),
+                   "serve_quant[measured]: int8 pool no longer strictly "
+                   "undercuts the f32 pool's resident bytes")
+            _check(row.get("int8", {}).get("peak_live_blocks", 0) > 0,
+                   "serve_quant[measured]: quantized run reports no live "
+                   "blocks (workload never ran?)")
+            continue
+        if "retrieval" in row:
+            recall_rows += 1
+            r = row["retrieval"]
+            _check(abs(r.get("recall_delta", 1.0)) <= 0.02,
+                   "serve_quant[recall]: quantized needle recall drifted "
+                   "more than 2 points from the f32 pool "
+                   f"(f32={r.get('recall_f32')}, "
+                   f"int8={r.get('recall_int8')})")
+            _check(r.get("recall_f32", 0.0) >= 0.9,
+                   "serve_quant[recall]: f32 baseline recall below 0.9 — "
+                   "the programmed retrieval head is deterministic, so a "
+                   "low f32 baseline means the probe itself broke and the "
+                   "gate is comparing noise, not retrieval")
+            continue
+        if "analytic_1m" in row:
+            analytic += 1
+            a = row["analytic_1m"]
+            _check(a.get("resident_cut", 0.0) >= 1.8,
+                   "serve_quant[1M-analytic]: full-scale resident KV cut "
+                   "fell below 1.8x")
+            _check(a.get("decode_io_cut", 0.0) > 1.0,
+                   "serve_quant[1M-analytic]: quantized decode no longer "
+                   "reduces per-step HBM traffic")
+    _check(measured >= 1, "serve_quant: no measured row at all")
+    _check(recall_rows >= 1, "serve_quant: the needle recall row is gone")
+    _check(analytic >= 1, "serve_quant: the 1M analytic row is gone")
+
+
 def check_context_stages() -> None:
     rows = _load("BENCH_context_stages.json")
     if rows is None:
@@ -362,6 +418,7 @@ def main() -> int:
     check_serve_paged()
     check_serve_chaos()
     check_serve_spec()
+    check_serve_quant()
     check_context_stages()
     if _errors:
         for e in _errors:
@@ -373,7 +430,9 @@ def main() -> int:
           "residency with token parity; stage-boundary reshard beats "
           "replicate with accum token parity; chaos run recovers token-exact "
           "with bounded replay recompute; speculation accepts > 1 token per "
-          "verify step with exact parity on both pools)")
+          "verify step with exact parity on both pools; int8 KV cache cuts "
+          "measured resident bytes per token below 0.55x f32 with needle "
+          "recall within 2 points)")
     return 0
 
 
