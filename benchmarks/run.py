@@ -31,7 +31,8 @@ if __package__ in (None, ""):
 
 from benchmarks import (chat_mix, context_stages, decode_fused, mfu_roofline,
                         needle, packing_ablation, ring_fused, serve_batching,
-                        serve_chaos, serve_paged, serve_quant, serve_spec)
+                        serve_chaos, serve_paged, serve_quant,
+                        serve_ring_paged, serve_spec)
 
 # name -> (runner(quick), dry_runner(quick) | None). Benches with a dry
 # runner validate their setup (shape-level traces + analytic models) in
@@ -58,6 +59,10 @@ BENCHES = {
     # contiguous-vs-paged KV residency accounting -> BENCH_serve_paged.json
     "serve_paged": (lambda q: serve_paged.run(quick=q),
                     lambda q: serve_paged.run(quick=q, dry_run=True)),
+    # single-vs-ring-sharded paged residency -> BENCH_serve_ring_paged.json
+    "serve_ring_paged": (lambda q: serve_ring_paged.run(quick=q),
+                         lambda q: serve_ring_paged.run(quick=q,
+                                                        dry_run=True)),
     # fault-injection recovery accounting -> BENCH_serve_chaos.json
     "serve_chaos": (lambda q: serve_chaos.run(quick=q),
                     lambda q: serve_chaos.run(quick=q, dry_run=True)),

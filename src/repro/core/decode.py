@@ -141,7 +141,8 @@ def decode_attention_unsharded(
     return out.astype(resolve_out_dtype(out_dtype, q.dtype))
 
 
-def paged_gather(cache: jnp.ndarray, block_tables: jnp.ndarray):
+def paged_gather(cache: jnp.ndarray, block_tables: jnp.ndarray, *,
+                 block_stride: int = 1, shard=None):
     """Materialize each row's virtual cache from a paged physical store.
 
     ``cache`` is the physical block pool ``(num_blocks, block_size, Hkv, D)``
@@ -150,6 +151,11 @@ def paged_gather(cache: jnp.ndarray, block_tables: jnp.ndarray):
     Returns ``(B, NB * block_size, ...)`` plus the matching ``(B, NB * bs)``
     virtual kv_positions (position = virtual index; -1 under dead blocks) —
     the explicit-gather oracle the Pallas paged kernel is tested against.
+
+    With ``block_stride``/``shard`` (block-striped sharded pools) table
+    column j names *global* virtual block ``j * stride + shard``, so the
+    returned kv_positions are absolute — the oracle twin of the kernel's
+    in-kernel position globalization.
     """
     b, nb = block_tables.shape
     bs = cache.shape[1]
@@ -157,8 +163,11 @@ def paged_gather(cache: jnp.ndarray, block_tables: jnp.ndarray):
     flat = cache[safe.reshape(-1)]                      # (B*NB, bs, ...)
     virt = flat.reshape((b, nb * bs) + cache.shape[2:])
     alive = (block_tables >= 0)[:, :, None]             # (B, NB, 1)
-    pos = jnp.broadcast_to(jnp.arange(nb * bs, dtype=jnp.int32).reshape(
-        1, nb, bs), (b, nb, bs))
+    glb = jnp.arange(nb, dtype=jnp.int32) * block_stride
+    if shard is not None:
+        glb = glb + jnp.asarray(shard, jnp.int32)
+    pos = glb[None, :, None] * bs + jnp.arange(bs, dtype=jnp.int32)[None, None]
+    pos = jnp.broadcast_to(pos, (b, nb, bs))
     kv_positions = jnp.where(alive, pos, -1).reshape(b, nb * bs)
     return virt, kv_positions
 
@@ -211,6 +220,8 @@ def paged_cache_update(
     block_tables: jnp.ndarray,  # (B, NB) physical block per virtual block
     *,
     valid: jnp.ndarray | None = None,  # (B,) bool; False rows skip the write
+    block_stride: int = 1,
+    shard=None,                        # int32 scalar ring index (traced ok)
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Scatter each row's new K/V through its block table.
 
@@ -220,15 +231,24 @@ def paged_cache_update(
     paged mirror of ``cache_update(valid=)``'s masked write. The pool
     guarantees exclusive ownership of a row's write block (copy-on-write
     un-shares it first), so no two rows ever scatter to the same index.
+
+    Block-striped sharded pools: with ``block_stride`` = ring size D and
+    ``shard`` = this device's ring index, global virtual block g lives on
+    shard ``g % D`` at table column ``g // D`` — non-owning shards drop the
+    write through the same OOB mechanism, so every device runs the identical
+    program and only the owner's pool slice mutates.
     """
     nb_phys, bs = k_cache.shape[0], k_cache.shape[1]
     b, nb = block_tables.shape
-    blk = position // bs                                    # (B,) virtual
+    blk = position // bs                                    # (B,) global virt
     off = position % bs
-    in_table = (blk >= 0) & (blk < nb)
+    lb = blk // block_stride                                # local table col
+    in_table = (blk >= 0) & (lb < nb)
     entry = jnp.take_along_axis(
-        block_tables, jnp.clip(blk, 0, nb - 1)[:, None], axis=1)[:, 0]
+        block_tables, jnp.clip(lb, 0, nb - 1)[:, None], axis=1)[:, 0]
     ok = in_table & (entry >= 0)
+    if shard is not None:
+        ok &= (blk % block_stride) == jnp.asarray(shard, jnp.int32)
     if valid is not None:
         ok &= valid
     flat = jnp.where(ok, entry * bs + off, nb_phys * bs)    # OOB => dropped
@@ -336,47 +356,15 @@ def quant_tail_positions(quant_len: jnp.ndarray, q_position: jnp.ndarray,
     return jnp.where(live, x, -1)
 
 
-def quant_cache_update(
-    k_cache: jnp.ndarray,       # (B, L, Hkv, D) int8 main store
-    v_cache: jnp.ndarray,
-    k_scale: jnp.ndarray,       # (B, L // qb, Hkv) f32
-    v_scale: jnp.ndarray,
-    k_tail: jnp.ndarray,        # (B, W, Hkv, D) full-precision ring
-    v_tail: jnp.ndarray,
-    kv_positions: jnp.ndarray,  # (B, L)
-    quant_len: jnp.ndarray,     # (B,) int32 flushed span
-    k_new: jnp.ndarray,         # (B, 1, Hkv, D)
-    v_new: jnp.ndarray,
-    position: jnp.ndarray,      # (B,) absolute position to write
-    *,
-    quant_block: int,
-    valid: jnp.ndarray | None = None,
-) -> dict:
-    """Quantizing append: ring write + conditional oldest-block flush.
-
-    Returns the updated cache leaves as a dict keyed like the quant cache
-    (``k/v/k_scale/v_scale/k_tail/v_tail/positions/quant_len``).
-    """
-    b, L = kv_positions.shape
+def _quant_flush_one(k_cache, v_cache, k_scale, v_scale, k_tail, v_tail,
+                     quant_len, position, ok, *, quant_block: int):
+    """Window-boundary flush of a contiguous quant cache: absmax-quantize
+    the oldest full tail-ring block into the int8 main store and advance
+    ``quant_len``. quant_len and W are both block multiples, so the flush
+    span ``[quant_len % W, quant_len % W + qb)`` never wraps the ring."""
+    b, L = k_cache.shape[0], k_cache.shape[1]
     W, qb = k_tail.shape[1], quant_block
-    ok = (position >= 0) & (position < L)
-    if valid is not None:
-        ok &= valid
     rows = jnp.arange(b)
-    # 1) the new token lands in the ring at pos % W (invalid rows dropped).
-    slot = jnp.where(ok, position % W, W)
-    k_tail = k_tail.at[rows, slot].set(k_new[:, 0].astype(k_tail.dtype),
-                                       mode="drop")
-    v_tail = v_tail.at[rows, slot].set(v_new[:, 0].astype(v_tail.dtype),
-                                       mode="drop")
-    # 2) the position sentinel is written eagerly — once the block flushes,
-    # the int8 rows at these positions go live with no extra write.
-    pidx = jnp.where(ok, position, L)
-    new_pos = kv_positions.at[rows, pidx].set(position.astype(jnp.int32),
-                                              mode="drop")
-    # 3) window full => absmax-quantize the oldest ring block into the main
-    # store. quant_len and W are both block multiples, so the flush span
-    # [quant_len % W, quant_len % W + qb) never wraps the ring.
     ql = quant_len.astype(jnp.int32)
     do_flush = ok & (position + 1 - ql == W)
     fq = ql // qb
@@ -393,9 +381,170 @@ def quant_cache_update(
     k_scale = k_scale.at[rows, sidx].set(ks, mode="drop")
     v_scale = v_scale.at[rows, sidx].set(vs, mode="drop")
     quant_len = ql + jnp.where(do_flush, qb, 0)
+    return k_cache, v_cache, k_scale, v_scale, quant_len
+
+
+def quant_flush(caches: dict, position: jnp.ndarray, *, quant_block: int,
+                valid: jnp.ndarray | None = None) -> dict:
+    """ONE fused absmax flush over *stacked* contiguous quant cache leaves
+    ``(count, B, ...)`` — the per-layer flushes of a decode step batched
+    into a single dispatch (the layer axis rides a vmap, so the gather /
+    quantize / scatter lower as one fused op instead of ``count`` serial
+    calls inside the layer scan). Pairs with ``quant_cache_update(...,
+    flush=False)``."""
+    L = caches["k"].shape[2]
+    ok = (position >= 0) & (position < L)
+    if valid is not None:
+        ok &= valid
+
+    def one(k, v, ks, vs, kt, vt, ql):
+        return _quant_flush_one(k, v, ks, vs, kt, vt, ql, position, ok,
+                                quant_block=quant_block)
+
+    k, v, ks, vs, ql = jax.vmap(one)(
+        caches["k"], caches["v"], caches["k_scale"], caches["v_scale"],
+        caches["k_tail"], caches["v_tail"], caches["quant_len"])
+    return dict(caches, k=k, v=v, k_scale=ks, v_scale=vs, quant_len=ql)
+
+
+def quant_cache_update(
+    k_cache: jnp.ndarray,       # (B, L, Hkv, D) int8 main store
+    v_cache: jnp.ndarray,
+    k_scale: jnp.ndarray,       # (B, L // qb, Hkv) f32
+    v_scale: jnp.ndarray,
+    k_tail: jnp.ndarray,        # (B, W, Hkv, D) full-precision ring
+    v_tail: jnp.ndarray,
+    kv_positions: jnp.ndarray,  # (B, L)
+    quant_len: jnp.ndarray,     # (B,) int32 flushed span
+    k_new: jnp.ndarray,         # (B, 1, Hkv, D)
+    v_new: jnp.ndarray,
+    position: jnp.ndarray,      # (B,) absolute position to write
+    *,
+    quant_block: int,
+    valid: jnp.ndarray | None = None,
+    flush: bool = True,
+) -> dict:
+    """Quantizing append: ring write + conditional oldest-block flush.
+
+    Returns the updated cache leaves as a dict keyed like the quant cache
+    (``k/v/k_scale/v_scale/k_tail/v_tail/positions/quant_len``).
+
+    With ``flush=False`` only steps 1-2 run (ring write + position
+    sentinel); the caller batches the window-boundary flush across layer
+    groups with ONE ``quant_flush`` dispatch after its layer scan.
+    """
+    b, L = kv_positions.shape
+    W = k_tail.shape[1]
+    ok = (position >= 0) & (position < L)
+    if valid is not None:
+        ok &= valid
+    rows = jnp.arange(b)
+    # 1) the new token lands in the ring at pos % W (invalid rows dropped).
+    slot = jnp.where(ok, position % W, W)
+    k_tail = k_tail.at[rows, slot].set(k_new[:, 0].astype(k_tail.dtype),
+                                       mode="drop")
+    v_tail = v_tail.at[rows, slot].set(v_new[:, 0].astype(v_tail.dtype),
+                                       mode="drop")
+    # 2) the position sentinel is written eagerly — once the block flushes,
+    # the int8 rows at these positions go live with no extra write.
+    pidx = jnp.where(ok, position, L)
+    new_pos = kv_positions.at[rows, pidx].set(position.astype(jnp.int32),
+                                              mode="drop")
+    # 3) window full => absmax-quantize the oldest ring block into the main
+    # store.
+    quant_len = quant_len.astype(jnp.int32)
+    if flush:
+        k_cache, v_cache, k_scale, v_scale, quant_len = _quant_flush_one(
+            k_cache, v_cache, k_scale, v_scale, k_tail, v_tail, quant_len,
+            position, ok, quant_block=quant_block)
     return dict(k=k_cache, v=v_cache, k_scale=k_scale, v_scale=v_scale,
                 k_tail=k_tail, v_tail=v_tail, positions=new_pos,
                 quant_len=quant_len)
+
+
+def _paged_row_ok(position, block_tables, bs, valid, block_stride, shard):
+    """Per-row liveness of a paged write at ``position``.
+
+    Single-device (``shard=None``): the row must hold an allocated table
+    entry for the position's block. Sharded (``shard`` given): the entry
+    lives on ONE device only, and liveness feeds device-*replicated* state
+    (tail ring, quant_len), so the check must be shard-uniform — bounds +
+    ``valid`` only; the host pool guarantees allocation before any write.
+    """
+    b, nb = block_tables.shape
+    blk = position // bs
+    lb = blk // block_stride
+    ok = (blk >= 0) & (lb < nb)
+    if shard is None:
+        entry = jnp.take_along_axis(
+            block_tables, jnp.clip(lb, 0, nb - 1)[:, None], axis=1)[:, 0]
+        ok &= entry >= 0
+    if valid is not None:
+        ok &= valid
+    return ok
+
+
+def _quant_paged_flush_one(k_cache, v_cache, k_scale, v_scale, k_tail,
+                           v_tail, quant_len, position, block_tables, ok, *,
+                           block_stride: int = 1, shard=None):
+    """Window-boundary flush of a paged quant cache: absmax-quantize the
+    oldest full tail-ring block and scatter it (plus its scale row) through
+    the block table. ``quant_len`` advances on every shard uniformly; the
+    pool scatter itself is gated to the flushed block's owning shard —
+    a non-owner's table column would name a *different* global block."""
+    nb_phys, bs = k_cache.shape[0], k_cache.shape[1]
+    b, nb = block_tables.shape
+    W = k_tail.shape[1]
+    rows = jnp.arange(b)
+    ql = quant_len.astype(jnp.int32)
+    do_flush = ok & (position + 1 - ql == W)
+    fq = ql // bs                                # global virt block to flush
+    flq = fq // block_stride                     # local table column
+    fentry = jnp.take_along_axis(
+        block_tables, jnp.clip(flq, 0, nb - 1)[:, None], axis=1)[:, 0]
+    can = do_flush & (flq < nb) & (fentry >= 0)
+    if shard is not None:
+        can &= (fq % block_stride) == jnp.asarray(shard, jnp.int32)
+    gidx = (ql % W)[:, None] + jnp.arange(bs, dtype=jnp.int32)[None, :]
+    kt = jnp.take_along_axis(k_tail, gidx[:, :, None, None], axis=1)
+    vt = jnp.take_along_axis(v_tail, gidx[:, :, None, None], axis=1)
+    qk, ks = quantize_block(kt)
+    qv, vs = quantize_block(vt)
+    dest = fentry[:, None] * bs + jnp.arange(bs, dtype=jnp.int32)[None, :]
+    dest = jnp.where(can[:, None], dest, nb_phys * bs)  # OOB => dropped
+    kf = k_cache.reshape((nb_phys * bs,) + k_cache.shape[2:])
+    vf = v_cache.reshape((nb_phys * bs,) + v_cache.shape[2:])
+    kf = kf.at[dest].set(qk, mode="drop")
+    vf = vf.at[dest].set(qv, mode="drop")
+    sdx = jnp.where(can, fentry, nb_phys)
+    k_scale = k_scale.at[sdx].set(ks, mode="drop")
+    v_scale = v_scale.at[sdx].set(vs, mode="drop")
+    quant_len = ql + jnp.where(do_flush, bs, 0)
+    return (kf.reshape(k_cache.shape), vf.reshape(v_cache.shape),
+            k_scale, v_scale, quant_len)
+
+
+def quant_paged_flush(caches: dict, position: jnp.ndarray,
+                      block_tables: jnp.ndarray, *,
+                      valid: jnp.ndarray | None = None,
+                      block_stride: int = 1, shard=None) -> dict:
+    """ONE fused absmax flush over *stacked* paged quant leaves
+    ``(count, ...)`` — the paged twin of ``quant_flush``: all layer groups'
+    window-boundary flushes batch into a single vmapped dispatch after the
+    decode step's layer scan (pairs with ``quant_paged_cache_update(...,
+    flush=False)``)."""
+    bs = caches["k"].shape[2]
+    ok = _paged_row_ok(position, block_tables, bs, valid, block_stride, shard)
+
+    def one(k, v, ks, vs, kt, vt, ql):
+        return _quant_paged_flush_one(
+            k, v, ks, vs, kt, vt, ql, position, block_tables, ok,
+            block_stride=block_stride, shard=shard)
+
+    k, v, ks, vs, ql = jax.vmap(one)(
+        caches["k"], caches["v"], caches["k_scale"], caches["v_scale"],
+        caches["k_tail"], caches["v_tail"], caches["quant_len"])
+    return dict(caches, k=k, v=v, k_scale=ks, v_scale=vs, quant_len=ql)
 
 
 def quant_paged_cache_update(
@@ -412,6 +561,9 @@ def quant_paged_cache_update(
     block_tables: jnp.ndarray,  # (B, NB)
     *,
     valid: jnp.ndarray | None = None,
+    flush: bool = True,
+    block_stride: int = 1,
+    shard=None,
 ) -> dict:
     """Paged twin of ``quant_cache_update``: the quant block IS the pool
     block (one scale row per physical block, so CoW copies, rollback
@@ -419,47 +571,32 @@ def quant_paged_cache_update(
     scatters through the block table. The flushed virtual block is always
     privately owned: adopted (shared) blocks sit below quant_len at
     adoption, and a block only becomes shareable via the registry *after*
-    its flush — quant_len is monotone, so no re-flush of shared bytes."""
-    nb_phys, bs = k_cache.shape[0], k_cache.shape[1]
-    b, nb = block_tables.shape
+    its flush — quant_len is monotone, so no re-flush of shared bytes.
+
+    Sharded pools (``block_stride``/``shard``): the tail ring and
+    ``quant_len`` are replicated — every device appends the identical
+    full-precision token — while the flush scatter lands only on the
+    flushed block's owning shard. ``flush=False`` defers the flush to one
+    batched ``quant_paged_flush`` call after the caller's layer scan."""
+    bs = k_cache.shape[1]
+    b = block_tables.shape[0]
     W = k_tail.shape[1]
-    blk = position // bs
-    in_table = (blk >= 0) & (blk < nb)
-    entry = jnp.take_along_axis(
-        block_tables, jnp.clip(blk, 0, nb - 1)[:, None], axis=1)[:, 0]
-    ok = in_table & (entry >= 0)
-    if valid is not None:
-        ok &= valid
+    ok = _paged_row_ok(position, block_tables, bs, valid, block_stride, shard)
     rows = jnp.arange(b)
     slot = jnp.where(ok, position % W, W)
     k_tail = k_tail.at[rows, slot].set(k_new[:, 0].astype(k_tail.dtype),
                                        mode="drop")
     v_tail = v_tail.at[rows, slot].set(v_new[:, 0].astype(v_tail.dtype),
                                        mode="drop")
-    ql = quant_len.astype(jnp.int32)
-    do_flush = ok & (position + 1 - ql == W)
-    fq = ql // bs                                       # virtual block to flush
-    fentry = jnp.take_along_axis(
-        block_tables, jnp.clip(fq, 0, nb - 1)[:, None], axis=1)[:, 0]
-    can = do_flush & (fq < nb) & (fentry >= 0)
-    gidx = (ql % W)[:, None] + jnp.arange(bs, dtype=jnp.int32)[None, :]
-    kt = jnp.take_along_axis(k_tail, gidx[:, :, None, None], axis=1)
-    vt = jnp.take_along_axis(v_tail, gidx[:, :, None, None], axis=1)
-    qk, ks = quantize_block(kt)
-    qv, vs = quantize_block(vt)
-    dest = fentry[:, None] * bs + jnp.arange(bs, dtype=jnp.int32)[None, :]
-    dest = jnp.where(can[:, None], dest, nb_phys * bs)  # OOB => dropped
-    kf = k_cache.reshape((nb_phys * bs,) + k_cache.shape[2:])
-    vf = v_cache.reshape((nb_phys * bs,) + v_cache.shape[2:])
-    kf = kf.at[dest].set(qk, mode="drop")
-    vf = vf.at[dest].set(qv, mode="drop")
-    sdx = jnp.where(can, fentry, nb_phys)
-    k_scale = k_scale.at[sdx].set(ks, mode="drop")
-    v_scale = v_scale.at[sdx].set(vs, mode="drop")
-    quant_len = ql + jnp.where(do_flush, bs, 0)
-    return dict(k=kf.reshape(k_cache.shape), v=vf.reshape(v_cache.shape),
-                k_scale=k_scale, v_scale=v_scale, k_tail=k_tail,
-                v_tail=v_tail, quant_len=quant_len)
+    quant_len = quant_len.astype(jnp.int32)
+    if flush:
+        k_cache, v_cache, k_scale, v_scale, quant_len = (
+            _quant_paged_flush_one(
+                k_cache, v_cache, k_scale, v_scale, k_tail, v_tail,
+                quant_len, position, block_tables, ok,
+                block_stride=block_stride, shard=shard))
+    return dict(k=k_cache, v=v_cache, k_scale=k_scale, v_scale=v_scale,
+                k_tail=k_tail, v_tail=v_tail, quant_len=quant_len)
 
 
 def quant_decode_attention_unsharded(
@@ -545,4 +682,83 @@ def _merge_and_normalize(main, tail, q, out_dtype):
     merged = blockwise.combine_carries(blockwise.AttnCarry(*main),
                                        blockwise.AttnCarry(*tail))
     out = merged.acc / jnp.maximum(merged.l, 1e-30)[..., None]
+    return out.astype(resolve_out_dtype(out_dtype, q.dtype))
+
+
+def ring_paged_decode_attention(
+    q, k_cache, v_cache, block_tables, *, axis_name, q_position, cache_len,
+    logits_soft_cap=None, out_dtype=None, impl: str | None = None,
+    k_scale=None, v_scale=None, k_tail=None, v_tail=None, quant_len=None,
+) -> jnp.ndarray:
+    """Ring decode over a block-striped sharded paged pool (inside
+    shard_map) — the ``ring_paged`` dispatch arm.
+
+    Each device holds ``k_cache``/``v_cache`` = its 1/D slice of the
+    physical pool and ``block_tables`` (B, NB_local) whose column j names
+    global virtual block ``j * D + shard``. "pallas"/"interpret" run the
+    scalar-prefetched paged split-K kernel once per device and rotate raw
+    (acc, m, l) carries around the ring (``kernels.ops.
+    ring_paged_flash_decode``); "xla" is the striped ``paged_gather`` +
+    pmax/psum LSE combine oracle. With the int8 leaves
+    (``k_scale``/``v_scale``/``k_tail``/``v_tail``/``quant_len``) the
+    replicated full-precision tail window folds in exactly once — after
+    the cross-shard combine.
+    """
+    from repro.core import ring_attention as ring_mod
+
+    assert cache_len is not None, "paged decode requires per-row cache_len"
+    quant = k_scale is not None
+    ref_v = v_tail if quant else v_cache
+    impl = resolve_decode_impl(
+        impl, logits_soft_cap=logits_soft_cap,
+        asymmetric=ref_v.shape[-1] != q.shape[-1])
+    n = ring_mod.ring_size(axis_name)
+    shard = ring_mod.ring_index(axis_name)
+    tail = None
+    main_len = cache_len
+    if quant:
+        tail = decode_attend_local(
+            q, k_tail, v_tail,
+            kv_positions=quant_tail_positions(quant_len, q_position,
+                                              k_tail.shape[1]),
+            q_position=q_position, logits_soft_cap=logits_soft_cap)
+        main_len = jnp.minimum(quant_len, cache_len).astype(jnp.int32)
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import ops as kops  # lazy: avoids cycle
+        return kops.ring_paged_flash_decode(
+            q, k_cache, v_cache, block_tables, axis_name=axis_name,
+            q_position=q_position, interpret=impl == "interpret",
+            cache_len=main_len, logits_soft_cap=logits_soft_cap,
+            k_scale=k_scale, v_scale=v_scale, tail_carry=tail,
+            out_dtype=out_dtype)
+    k_virt, kv_positions = paged_gather(k_cache, block_tables,
+                                        block_stride=n, shard=shard)
+    v_virt, _ = paged_gather(v_cache, block_tables,
+                             block_stride=n, shard=shard)
+    if quant:
+        bs = k_cache.shape[1]
+        safe = jnp.clip(block_tables, 0, k_cache.shape[0] - 1)
+        ks = jnp.repeat(k_scale[safe].astype(jnp.float32), bs, axis=1)
+        vs = jnp.repeat(v_scale[safe].astype(jnp.float32), bs, axis=1)
+        k_virt = k_virt.astype(jnp.float32) * ks[..., None]
+        v_virt = v_virt.astype(jnp.float32) * vs[..., None]
+    acc, m, l = decode_attend_local(
+        q, k_virt, v_virt, kv_positions=kv_positions, q_position=q_position,
+        logits_soft_cap=logits_soft_cap, cache_len=main_len)
+    axes = (tuple(axis_name) if isinstance(axis_name, (tuple, list))
+            else (axis_name,))
+    m_glob = m
+    for ax in axes:
+        m_glob = jax.lax.pmax(m_glob, ax)
+    corr = jnp.exp(m - m_glob)
+    acc = acc * corr[..., None]
+    l = l * corr
+    for ax in axes:
+        acc = jax.lax.psum(acc, ax)
+        l = jax.lax.psum(l, ax)
+    if tail is not None:
+        # The tail window is replicated across shards: fold it ONCE, after
+        # the cross-shard combine (folding per-shard would count it D times).
+        return _merge_and_normalize((acc, m_glob, l), tail, q, out_dtype)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.astype(resolve_out_dtype(out_dtype, q.dtype))

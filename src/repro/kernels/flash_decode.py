@@ -317,6 +317,7 @@ def _merge_splits(acc, m, l, b, h, d):
 
 def _paged_decode_kernel(
     tbl_ref,                   # scalar-prefetch (B, NB) int32 block table
+    shard_ref,                 # scalar-prefetch (1,) int32 shard index
     qpos_ref,                  # (1, 1) int32 — the query's absolute position
     clen_ref,                  # (1, 1) int32 — row's filled cache length
     q_ref,                     # (1, 1, G, D)
@@ -329,6 +330,7 @@ def _paged_decode_kernel(
     num_virt_blocks: int,
     logits_soft_cap: float | None,
     quant: bool = False,
+    block_stride: int = 1,
 ):
     """Paged twin of ``_decode_kernel``: the KV tile arrives through the
     block table's index map, and kv positions are *implicit* — the paged
@@ -342,7 +344,14 @@ def _paged_decode_kernel(
     With ``quant`` the physical block is int8 and its per-(block, head) f32
     scales ride alongside it (same table-resolved index map), so CoW block
     copies, rollback dealloc and prefix sharing carry them for free; the
-    tile widens to f32 in VMEM before the MXU dot."""
+    tile widens to f32 in VMEM before the MXU dot.
+
+    Sharded pools (ring decode): ``block_stride`` = number of shards and
+    ``shard_ref`` = this device's ring index. Local virtual block ``lb``
+    then holds *global* virtual block ``lb * stride + shard`` (block-striped
+    round-robin layout), so the implicit positions stay absolute and the
+    causal/ragged masks need no other change. The defaults (stride 1,
+    shard 0) reproduce the single-device math bit-for-bit."""
     ib = pl.program_id(0)
     isp = pl.program_id(2)
     ibk = pl.program_id(3)
@@ -358,14 +367,15 @@ def _paged_decode_kernel(
         m_s[...] = jnp.full_like(m_s, NEG_INF)
         l_s[...] = jnp.zeros_like(l_s)
 
-    lb = isp * blocks_per_split + ibk               # virtual block index
+    lb = isp * blocks_per_split + ibk               # local virtual block index
     lb_c = jnp.minimum(lb, num_virt_blocks - 1)
     entry = tbl_ref[ib, lb_c]                       # physical block or -1
+    glb = lb_c * block_stride + shard_ref[0]        # global virtual block
     qpos = qpos_ref[0, 0]
     clen = clen_ref[0, 0]
     # (1, Bs) iota — TPU requires >= 2D; broadcasts against (G, Bs) logits.
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1)
-    pos = lb_c * block_size + lane                  # (1, Bs) virtual positions
+    pos = glb * block_size + lane                   # (1, Bs) global positions
     valid = (pos <= qpos) & (pos < clen)            # (1, Bs)
 
     def _update():
@@ -394,9 +404,9 @@ def _paged_decode_kernel(
     # Dead-block skip: grid padding past the last virtual block, an
     # unallocated table entry (-1), or a block whose first position is
     # already past the causal horizon / ragged fill — append-only layout
-    # means position lb*Bs is the *earliest* in the tile, so one scalar
+    # means position glb*Bs is the *earliest* in the tile, so one scalar
     # compare replaces the contiguous kernel's min-reduction.
-    first = lb_c * block_size
+    first = glb * block_size
     alive = ((lb < num_virt_blocks) & (entry >= 0)
              & (first <= qpos) & (first < clen))
     pl.when(alive)(_update)
@@ -421,6 +431,8 @@ def paged_flash_decode_partial(
     logits_soft_cap: float | None = None,
     k_scale: jnp.ndarray | None = None,     # (num_blocks, Hkv) f32
     v_scale: jnp.ndarray | None = None,
+    block_stride: int = 1,
+    shard: jnp.ndarray | None = None,       # scalar int32 ring index
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Split-K decode attention through a block table (paged KV cache).
 
@@ -431,6 +443,12 @@ def paged_flash_decode_partial(
     per-row gather of the virtual sequence ever materializes. The KV tile
     size is pinned to the pool's ``block_size`` (pick a TPU-friendly one:
     a multiple of 128 lanes for production, anything for interpret tests).
+
+    Sharded pools: with ``block_stride`` = ring size D and ``shard`` = this
+    device's ring index (a traced scalar — the same jitted program runs on
+    every shard), the table's column j names *global* virtual block
+    ``j * D + shard``, so the kernel's implicit positions stay absolute and
+    the partial composes with the ring carry fold unchanged.
     """
     b, _, h, d = q.shape
     bs, hkv = k_cache.shape[1], k_cache.shape[2]
@@ -442,13 +460,17 @@ def paged_flash_decode_partial(
 
     qg = q[:, 0].reshape(b, hkv, group, d)
     block_tables = block_tables.astype(jnp.int32)
+    if shard is None:
+        shard1 = jnp.zeros((1,), jnp.int32)
+    else:
+        shard1 = jnp.asarray(shard, jnp.int32).reshape(1)
     qpos2d = q_position.astype(jnp.int32).reshape(b, 1)
     if cache_len is None:
         clen2d = jnp.full((b, 1), _FAR_FUTURE, jnp.int32)
     else:
         clen2d = cache_len.astype(jnp.int32).reshape(b, 1)
 
-    def kv_index(ib, ih, isp, ibk, tbl):
+    def kv_index(ib, ih, isp, ibk, tbl, sh):
         # Physical block for this step's virtual block; -1 (dead) and grid
         # padding clamp to 0 — the kernel's `alive` guard skips compute.
         lb = jnp.minimum(isp * bps + ibk, nb - 1)
@@ -458,13 +480,14 @@ def paged_flash_decode_partial(
     kernel = functools.partial(
         _paged_decode_kernel, sm_scale=sm_scale, block_size=bs,
         blocks_per_split=bps, num_virt_blocks=nb,
-        logits_soft_cap=logits_soft_cap, quant=quant)
+        logits_soft_cap=logits_soft_cap, quant=quant,
+        block_stride=block_stride)
 
     in_specs = [
-        pl.BlockSpec((1, 1), lambda ib, ih, isp, ibk, tbl: (ib, 0)),
-        pl.BlockSpec((1, 1), lambda ib, ih, isp, ibk, tbl: (ib, 0)),
+        pl.BlockSpec((1, 1), lambda ib, ih, isp, ibk, tbl, sh: (ib, 0)),
+        pl.BlockSpec((1, 1), lambda ib, ih, isp, ibk, tbl, sh: (ib, 0)),
         pl.BlockSpec((1, 1, group, d),
-                     lambda ib, ih, isp, ibk, tbl: (ib, ih, 0, 0)),
+                     lambda ib, ih, isp, ibk, tbl, sh: (ib, ih, 0, 0)),
         pl.BlockSpec((1, bs, 1, d), kv_index),
         pl.BlockSpec((1, bs, 1, d), kv_index),
     ]
@@ -472,7 +495,7 @@ def paged_flash_decode_partial(
     if quant:
         assert v_scale is not None
 
-        def scale_index(ib, ih, isp, ibk, tbl):
+        def scale_index(ib, ih, isp, ibk, tbl, sh):
             # The scale of a physical block lives at the same physical
             # index, one f32 per head — resolved through the same
             # prefetched table as the KV tile.
@@ -487,16 +510,19 @@ def paged_flash_decode_partial(
     acc, m, l = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=(b, hkv, num_splits, bps),
             in_specs=in_specs,
             out_specs=[
-                pl.BlockSpec((1, 1, 1, group, d),
-                             lambda ib, ih, isp, ibk, tbl: (ib, ih, isp, 0, 0)),
-                pl.BlockSpec((1, 1, 1, group),
-                             lambda ib, ih, isp, ibk, tbl: (ib, ih, isp, 0)),
-                pl.BlockSpec((1, 1, 1, group),
-                             lambda ib, ih, isp, ibk, tbl: (ib, ih, isp, 0)),
+                pl.BlockSpec(
+                    (1, 1, 1, group, d),
+                    lambda ib, ih, isp, ibk, tbl, sh: (ib, ih, isp, 0, 0)),
+                pl.BlockSpec(
+                    (1, 1, 1, group),
+                    lambda ib, ih, isp, ibk, tbl, sh: (ib, ih, isp, 0)),
+                pl.BlockSpec(
+                    (1, 1, 1, group),
+                    lambda ib, ih, isp, ibk, tbl, sh: (ib, ih, isp, 0)),
             ],
             scratch_shapes=[
                 pltpu.VMEM((group, d), jnp.float32),
@@ -514,7 +540,7 @@ def paged_flash_decode_partial(
         interpret=interpret,
         name="lwm_paged_flash_decode_int8" if quant else
              "lwm_paged_flash_decode",
-    )(block_tables, *operands)
+    )(block_tables, shard1, *operands)
 
     return _merge_splits(acc, m, l, b, h, d)
 

@@ -424,6 +424,69 @@ def ring_flash_decode(
     return out.astype(dec_mod.resolve_out_dtype(out_dtype, q.dtype))
 
 
+def ring_paged_flash_decode(
+    q: jnp.ndarray,            # (B, 1, H, D) — replicated over the ring axis
+    k_cache: jnp.ndarray,      # (NB_local, Bs, Hkv, D) local pool shard
+    v_cache: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (B, NB_local) local physical ids; -1 = dead
+    *,
+    axis_name,
+    q_position: jnp.ndarray,    # (B,) absolute
+    num_splits: int | None = None,
+    interpret: bool = False,
+    cache_len: jnp.ndarray | None = None,   # (B,) ragged fill, absolute
+    logits_soft_cap: float | None = None,
+    k_scale: jnp.ndarray | None = None,     # (NB_local, Hkv) f32
+    v_scale: jnp.ndarray | None = None,
+    tail_carry: tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray] | None = None,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """Fused ring decode over a block-striped *paged* pool (inside shard_map).
+
+    Each device holds a 1/D slice of the physical block pool and a local
+    block table whose column j names global virtual block ``j * D + shard``
+    (round-robin striping). The device folds its local blocks through ONE
+    scalar-prefetched paged split-K kernel call — positions are globalized
+    in-kernel by ``block_stride``/``shard`` — and the resulting raw
+    (acc, m, l) statistics travel the ring exactly as in
+    ``ring_flash_decode``: n-1 ``ppermute`` hops of the O(B·H·(D+2)) carry,
+    folded with the associative log-sum-exp merge. No logits, K/V bytes, or
+    block tables ever cross devices.
+
+    ``tail_carry`` is the full-precision tail-window partial of an int8
+    cache. The tail ring is *replicated* across devices (every shard writes
+    the identical newest-window copy), so its partial must be folded exactly
+    once — after the ring combine — never into the per-device partials,
+    which would count it D times.
+    """
+    from repro.core import decode as dec_mod
+    from repro.core import ring_attention as ring_mod
+    from repro.kernels import flash_decode as fdk
+
+    n = ring_mod.ring_size(axis_name)
+    shard = ring_mod.ring_index(axis_name)
+    partial = fdk.paged_flash_decode_partial(
+        q, k_cache, v_cache, block_tables, q_position,
+        num_splits=num_splits or fdk.DEFAULT_NUM_SPLITS,
+        interpret=interpret, cache_len=cache_len,
+        logits_soft_cap=logits_soft_cap, k_scale=k_scale, v_scale=v_scale,
+        block_stride=n, shard=shard)
+
+    def step(_, state):
+        carry, moving = state
+        moving = ring_mod._rotate(moving, axis_name)
+        return fdk.merge_partials(carry, moving), moving
+
+    carry = partial
+    if n > 1:
+        carry, _ = jax.lax.fori_loop(0, n - 1, step, (carry, partial))
+    if tail_carry is not None:
+        carry = fdk.merge_partials(carry, tail_carry)
+    acc, _, l = carry
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(dec_mod.resolve_out_dtype(out_dtype, q.dtype))
+
+
 # ---------------------------------------------------------------------------
 # Mamba2 / RWKV6
 # ---------------------------------------------------------------------------

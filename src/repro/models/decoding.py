@@ -238,6 +238,151 @@ def _decode_attend(cfg: ModelConfig, q, cache_k, cache_v, cache_pos,
         logits_soft_cap=cfg.logits_soft_cap, impl=impl, cache_len=cache_lens)
 
 
+def _paged_ring_attend(cfg: ModelConfig, q, cache, k_new, v_new, position,
+                       ctx: RuntimeCtx, *, token_valid, cache_lens,
+                       device_tables):
+    """Sharded-pool paged decode: scatter + ring split-K attention in ONE
+    shard_map call.
+
+    The physical pools (and int8 scale rows) are sharded over their blocks
+    axis; ``device_tables`` (D, B, NB_local) holds each device's *local*
+    block table, sharded over its leading axis so shard d sees only its own
+    table. Inside, the scatter drops non-owner writes (global block g lives
+    on shard ``g % D``) and the attention rotates raw (acc, m, l) carries
+    around the ring — no K/V bytes, logits, or tables cross devices. The
+    int8 tail ring + quant_len stay replicated (identical appends on every
+    shard); the deferred flush (``decode_step``) scatters owner-only.
+    """
+    seq = ctx.rules.get("seq") if ctx.rules else None
+    impl = ctx.decode_impl or cfg.decode_impl
+    axis = ctx.ring_axis
+    b = q.shape[0]
+    if cache_lens is None:
+        cache_lens = jnp.full((b,), 2 ** 30, jnp.int32)
+    if token_valid is None:
+        token_valid = jnp.ones((b,), jnp.bool_)
+
+    if "k_scale" in cache:
+        def fn(q, k, v, ks, vs, kt, vt, ql, kn, vn, pos, tbl3, clen, valid):
+            tbl = tbl3[0]
+            n = ring_mod.ring_size(axis)
+            shard = ring_mod.ring_index(axis)
+            nc = dec_mod.quant_paged_cache_update(
+                k, v, ks, vs, kt, vt, ql, kn, vn, pos, tbl, valid=valid,
+                flush=False, block_stride=n, shard=shard)
+            att = dec_mod.ring_paged_decode_attention(
+                q, nc["k"], nc["v"], tbl, axis_name=axis, q_position=pos,
+                cache_len=clen, logits_soft_cap=cfg.logits_soft_cap,
+                impl=impl, k_scale=nc["k_scale"], v_scale=nc["v_scale"],
+                k_tail=nc["k_tail"], v_tail=nc["v_tail"],
+                quant_len=nc["quant_len"])
+            return (att, nc["k"], nc["v"], nc["k_scale"], nc["v_scale"],
+                    nc["k_tail"], nc["v_tail"], nc["quant_len"])
+
+        att, k, v, ks, vs, kt, vt, ql = jc.shard_map(
+            fn, mesh=ctx.mesh,
+            in_specs=(P(), P(seq), P(seq), P(seq), P(seq), P(), P(), P(),
+                      P(), P(), P(), P(seq), P(), P()),
+            out_specs=(P(), P(seq), P(seq), P(seq), P(seq), P(), P(), P()),
+            check=False,
+        )(q, cache["k"], cache["v"], cache["k_scale"], cache["v_scale"],
+          cache["k_tail"], cache["v_tail"], cache["quant_len"],
+          k_new, v_new, position, device_tables, cache_lens, token_valid)
+        return att, dict(k=k, v=v, k_scale=ks, v_scale=vs, k_tail=kt,
+                         v_tail=vt, quant_len=ql)
+
+    def fn(q, k, v, kn, vn, pos, tbl3, clen, valid):
+        tbl = tbl3[0]
+        n = ring_mod.ring_size(axis)
+        shard = ring_mod.ring_index(axis)
+        k, v = dec_mod.paged_cache_update(
+            k, v, kn, vn, pos, tbl, valid=valid, block_stride=n, shard=shard)
+        att = dec_mod.ring_paged_decode_attention(
+            q, k, v, tbl, axis_name=axis, q_position=pos, cache_len=clen,
+            logits_soft_cap=cfg.logits_soft_cap, impl=impl)
+        return att, k, v
+
+    att, k, v = jc.shard_map(
+        fn, mesh=ctx.mesh,
+        in_specs=(P(), P(seq), P(seq), P(), P(), P(), P(seq), P(), P()),
+        out_specs=(P(), P(seq), P(seq)),
+        check=False,
+    )(q, cache["k"], cache["v"], k_new, v_new, position, device_tables,
+      cache_lens, token_valid)
+    return att, {"k": k, "v": v}
+
+
+def _ring_quant_paged_flush(cfg: ModelConfig, stacked, position,
+                            ctx: RuntimeCtx, token_valid, device_tables):
+    """Sharded twin of the fused ``quant_paged_flush`` dispatch: quant_len
+    advances replicated, the pool scatter lands owner-shard-only."""
+    seq = ctx.rules.get("seq") if ctx.rules else None
+    axis = ctx.ring_axis
+    if token_valid is None:
+        token_valid = jnp.ones(position.shape, jnp.bool_)
+
+    def fn(k, v, ks, vs, kt, vt, ql, pos, tbl3, valid):
+        tbl = tbl3[0]
+        n = ring_mod.ring_size(axis)
+        shard = ring_mod.ring_index(axis)
+        out = dec_mod.quant_paged_flush(
+            dict(k=k, v=v, k_scale=ks, v_scale=vs, k_tail=kt, v_tail=vt,
+                 quant_len=ql),
+            pos, tbl, valid=valid, block_stride=n, shard=shard)
+        return (out["k"], out["v"], out["k_scale"], out["v_scale"],
+                out["quant_len"])
+
+    k, v, ks, vs, ql = jc.shard_map(
+        fn, mesh=ctx.mesh,
+        in_specs=(P(None, seq), P(None, seq), P(None, seq), P(None, seq),
+                  P(), P(), P(), P(), P(seq), P()),
+        out_specs=(P(None, seq), P(None, seq), P(None, seq), P(None, seq),
+                   P()),
+        check=False,
+    )(stacked["k"], stacked["v"], stacked["k_scale"], stacked["v_scale"],
+      stacked["k_tail"], stacked["v_tail"], stacked["quant_len"],
+      position, device_tables, token_valid)
+    return dict(stacked, k=k, v=v, k_scale=ks, v_scale=vs, quant_len=ql)
+
+
+def _flush_quant_groups(cfg: ModelConfig, caches, keys, position,
+                        ctx: RuntimeCtx, *, token_valid, block_tables):
+    """ONE fused absmax flush across every quant attention layer group.
+
+    The per-layer window-boundary flushes that used to run inside the
+    decode step's layer scan are deferred (``flush=False``) and batched
+    here: the groups' stacked leaves concatenate over the layer axis and a
+    single vmapped dispatch quantizes + scatters all of them at once.
+    """
+    counts = [caches[k]["k"].shape[0] for k in keys]
+    leaves = ("k", "v", "k_scale", "v_scale", "k_tail", "v_tail",
+              "quant_len")
+    if len(keys) == 1:
+        stacked = {lf: caches[keys[0]][lf] for lf in leaves}
+    else:
+        stacked = {lf: jnp.concatenate([caches[k][lf] for k in keys], axis=0)
+                   for lf in leaves}
+    if block_tables is None:
+        qb = stacked["k"].shape[2] // stacked["k_scale"].shape[2]
+        out = dec_mod.quant_flush(stacked, position, quant_block=qb,
+                                  valid=token_valid)
+    elif ctx.decode_ring:
+        out = _ring_quant_paged_flush(cfg, stacked, position, ctx,
+                                      token_valid, block_tables)
+    else:
+        out = dec_mod.quant_paged_flush(stacked, position, block_tables,
+                                        valid=token_valid)
+    new = dict(caches)
+    off = 0
+    for key, cnt in zip(keys, counts):
+        grp = dict(caches[key])
+        for lf in ("k", "v", "k_scale", "v_scale", "quant_len"):
+            grp[lf] = out[lf][off:off + cnt]
+        new[key] = grp
+        off += cnt
+    return new
+
+
 def _attn_decode_block(cfg: ModelConfig, p, x, cache, position,
                        ctx: RuntimeCtx, cross_kv=None, token_valid=None,
                        cache_lens=None, block_tables=None):
@@ -265,15 +410,20 @@ def _attn_decode_block(cfg: ModelConfig, p, x, cache, position,
     q, k_new, v_new = tfm._project_qkv(cfg, p["attn"], h, pos2d)
     if block_tables is not None:
         if ctx.decode_ring:
-            raise NotImplementedError(
-                "paged KV cache x ring-sharded decode is not implemented: "
-                "the block table indexes one device's physical pool (see "
-                "docs/serving.md, 'Paged cache')")
-        if "k_scale" in cache:
+            # Distributed paged serving: block-striped sharded pool. The
+            # scatter + ring split-K attention run in ONE shard_map call
+            # (``block_tables`` is the (D, B, NB_local) per-device table
+            # stack); only the O(B·H·hd) carry crosses devices.
+            att, new_cache = _paged_ring_attend(
+                cfg, q, cache, k_new, v_new, position, ctx,
+                token_valid=token_valid, cache_lens=cache_lens,
+                device_tables=block_tables)
+        elif "k_scale" in cache:
             new_cache = dec_mod.quant_paged_cache_update(
                 cache["k"], cache["v"], cache["k_scale"], cache["v_scale"],
                 cache["k_tail"], cache["v_tail"], cache["quant_len"],
-                k_new, v_new, position, block_tables, valid=token_valid)
+                k_new, v_new, position, block_tables, valid=token_valid,
+                flush=False)
             att = dec_mod.quant_paged_decode_attention(
                 q, new_cache["k"], new_cache["v"], new_cache["k_scale"],
                 new_cache["v_scale"], new_cache["k_tail"],
@@ -309,7 +459,7 @@ def _attn_decode_block(cfg: ModelConfig, p, x, cache, position,
             cache["k"], cache["v"], cache["k_scale"], cache["v_scale"],
             cache["k_tail"], cache["v_tail"], cache["positions"],
             cache["quant_len"], k_new, v_new, position,
-            quant_block=qb, valid=token_valid)
+            quant_block=qb, valid=token_valid, flush=False)
         att = dec_mod.quant_decode_attention_unsharded(
             q, new_cache["k"], new_cache["v"], new_cache["k_scale"],
             new_cache["v_scale"], new_cache["k_tail"], new_cache["v_tail"],
@@ -457,6 +607,19 @@ def decode_step(
                 xs = (stacked_p, stacked_c, jnp.arange(count))
             x, new_stacked_c = jax.lax.scan(lambda c, i_: body(c, i_), x, xs)
             new_caches[key] = new_stacked_c
+
+    # int8 tail-ring flush, deferred out of the layer scan: every quant
+    # attention group ran its update with ``flush=False`` above, so the
+    # window-boundary absmax flush batches into ONE dispatch across all
+    # layer groups here (attention already read this step's token from the
+    # full-precision tail, so deferral only changes *when* the oldest
+    # window block turns int8 — after the step instead of mid-scan).
+    quant_keys = [key for key, c in new_caches.items()
+                  if isinstance(c, dict) and "quant_len" in c]
+    if quant_keys:
+        new_caches = _flush_quant_groups(
+            cfg, new_caches, quant_keys, position, ctx,
+            token_valid=token_valid, block_tables=block_tables)
 
     if cfg.family == "audio":
         x = L.layer_norm(x, params["final_norm"], params["final_norm_bias"],

@@ -35,7 +35,11 @@ DECODE_IMPL_CHOICES = ("auto", "pallas", "interpret", "xla", "ref")
 class CacheConfig:
     """Cache-pool geometry. ``paged=True`` swaps the contiguous per-slot
     caches for the block-paged pool (refcounted copy-on-write prefix
-    sharing over ``num_blocks`` physical blocks of ``block_size``).
+    sharing over ``num_blocks`` physical blocks of ``block_size``). Under
+    ring-sharded decode (``ctx.decode_ring``) the paged pool is
+    additionally *sequence-sharded over the ring*: each device owns a
+    block-striped slice of the physical blocks and its own allocator
+    (docs/serving.md, "Distributed paged serving").
 
     ``quant="int8"`` stores K/V as int8 with one f32 scale per
     (block, layer, head), keeping the newest ``quant_tail_blocks`` blocks

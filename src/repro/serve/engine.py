@@ -43,7 +43,8 @@ from repro.models import decoding, transformer
 from repro.serve import sampling
 from repro.serve.config import ServeConfig, config_from_kwargs
 from repro.serve.faults import FaultPlan, InjectedFault
-from repro.serve.pool import CachePool, PagedCachePool
+from repro.serve.pool import (CachePool, PagedCachePool,
+                              ShardedPagedCachePool, ring_shards)
 from repro.serve.scheduler import DECODE, Scheduler
 from repro.serve.spec import Drafter
 
@@ -101,9 +102,11 @@ class ServeEngine:
             block-paged pool (``PagedCachePool``): per-slot block tables
             over ``num_blocks`` physical blocks of ``block_size`` tokens,
             refcounted copy-on-write prefix sharing, free-block admission.
-            Paged serving is single-device: incompatible with
-            ``ctx.decode_ring`` (the block table indexes one device's
-            pool).
+            With ``ctx.decode_ring`` the pool is *sequence-sharded over
+            the ring* (``ShardedPagedCachePool``): each device owns its
+            own allocator over a block-striped slice of the physical
+            blocks and decode runs the ring split-K paged kernel — see
+            docs/serving.md, "Distributed paged serving".
           * ``config.faults`` (``FaultConfig``): retry / deadline /
             preemption policy (docs/serving.md, "Failure handling").
           * ``config.spec`` (``SpecConfig``): speculative decoding — a
@@ -141,10 +144,6 @@ class ServeEngine:
         if config.decode_impl is not None:
             ctx = dataclasses.replace(ctx, decode_impl=config.decode_impl)
         cache, fault, spec = config.cache, config.faults, config.spec
-        if cache.paged and ctx.decode_ring:
-            raise NotImplementedError(
-                "paged KV cache x ring-sharded decode is unsupported; see "
-                "docs/serving.md ('Paged cache')")
         if cache.quant != "none":
             if cache.quant != "int8":
                 raise ValueError(f"unknown KV-cache quant {cache.quant!r}; "
@@ -154,11 +153,12 @@ class ServeEngine:
                     "quantized KV cache supports attention-cache families "
                     f"only; {cfg.name} ({cfg.family}) keeps full-precision "
                     "slots")
-            if ctx.decode_ring:
+            if ctx.decode_ring and not cache.paged:
                 raise NotImplementedError(
-                    "quantized KV cache x ring-sharded decode is not "
-                    "implemented (see docs/serving.md, 'Quantized KV "
-                    "cache')")
+                    "quantized CONTIGUOUS KV cache x ring-sharded decode is "
+                    "not implemented; use paged=True — the sharded paged "
+                    "pool quantizes per physical block (see docs/serving.md,"
+                    " 'Distributed paged serving')")
             if cache.quant_tail_blocks < 1:
                 raise ValueError(f"quant_tail_blocks must be >= 1, got "
                                  f"{cache.quant_tail_blocks}")
@@ -289,12 +289,22 @@ class ServeEngine:
         chunk = int(prefill_chunk or self.prefill_chunk)
 
         if self.paged:
-            pool = PagedCachePool(n_slots, cfg=self.cfg,
-                                  max_len=self.max_len,
-                                  block_size=self.block_size,
-                                  num_blocks=self.num_blocks, ctx=self.ctx,
-                                  quant=self.quant,
-                                  quant_tail_blocks=self.quant_tail_blocks)
+            if self.ctx.decode_ring:
+                # Distributed paged serving: one block allocator per ring
+                # device over a sequence-sharded slice of the physical
+                # pool; decode rotates raw (acc, m, l) carries.
+                pool = ShardedPagedCachePool(
+                    n_slots, num_shards=ring_shards(self.ctx), cfg=self.cfg,
+                    max_len=self.max_len, block_size=self.block_size,
+                    num_blocks=self.num_blocks, ctx=self.ctx,
+                    quant=self.quant,
+                    quant_tail_blocks=self.quant_tail_blocks)
+            else:
+                pool = PagedCachePool(
+                    n_slots, cfg=self.cfg, max_len=self.max_len,
+                    block_size=self.block_size, num_blocks=self.num_blocks,
+                    ctx=self.ctx, quant=self.quant,
+                    quant_tail_blocks=self.quant_tail_blocks)
         else:
             pool = CachePool(n_slots, cfg=self.cfg, max_len=self.max_len,
                              ctx=self.ctx, quant=self.quant,

@@ -549,3 +549,323 @@ class PagedCachePool(CachePool):
         return {key: {name: (leaf if name in per_slot else copy(leaf))
                       for name, leaf in group.items()}
                 for key, group in caches.items()}
+
+
+# ---------------------------------------------------------------------------
+# Sequence-sharded paged pool: one allocator per ring device
+# ---------------------------------------------------------------------------
+
+def ring_shards(ctx) -> int:
+    """Host-side size of the decode ring (product of ``ctx.ring_axis``
+    mesh axes; 1 without a mesh)."""
+    if ctx is None or ctx.mesh is None or ctx.ring_axis is None:
+        return 1
+    axes = (tuple(ctx.ring_axis)
+            if isinstance(ctx.ring_axis, (tuple, list))
+            else (ctx.ring_axis,))
+    n = 1
+    for ax in axes:
+        n *= ctx.mesh.shape[ax]
+    return n
+
+
+class ShardedPagedCachePool(PagedCachePool):
+    """Block-striped paged pool sharded over the decode ring.
+
+    Physical blocks shard over the ring: the pool leaves keep their global
+    ``(count, num_blocks, block_size, Hkv, hd)`` shape but live
+    sequence-sharded over the blocks axis, so ring device ``s`` holds only
+    the slice ``[s * blocks_per_shard, (s+1) * blocks_per_shard)`` — a
+    1M-token context's resident KV bytes per device are ~1/D of the
+    single-device paged pool's.
+
+    Layout is *block striping*: a slot's virtual block ``v`` (token span
+    ``[v*bs, (v+1)*bs)``) lives on shard ``v % D`` at local table column
+    ``v // D``, and table entries are shard-LOCAL physical block ids. Each
+    shard's table is one row of ``block_tables`` ``(D, num_slots,
+    table_width)``; inside the engine's shard_map each device squeezes out
+    its own row and the paged split-K kernel reconstructs global token
+    positions as ``(column * D + shard) * block_size + lane``
+    (``kernels.flash_decode``, ``block_stride``/``shard`` operands).
+    Striping keeps every shard's share of any context within one block of
+    equal, so per-device admission math stays trivial.
+
+    Host bookkeeping mirrors that layout: one refcounted ``BlockAllocator``
+    per shard, per-shard admission-reservation ledgers, and a prefix
+    registry keyed exactly like the single-device pool's — a chain
+    position ``i`` block always lives on shard ``i % D`` (every slot
+    stripes identically), so registry values stay local ids and
+    ``match_prefix`` is inherited verbatim. CoW copies are shard-pinned:
+    the copy is drawn from the *owning* shard's allocator and the device
+    splice stays within that shard's slice of the pool.
+
+    The int8 tail ring and ``quant_len`` are per-slot (not per-block) and
+    stay replicated across the ring — only flushed int8 blocks and their
+    scale rows shard. Everything the ``Scheduler`` calls
+    (``free_unreserved`` / ``reserve`` / ``ensure_capacity`` /
+    ``match_prefix`` / ``adopt_prefix`` / ``register_prefix`` /
+    ``rollback`` / ``free``) keeps its contract, so admit/plan/commit and
+    preemption are unchanged.
+    """
+
+    def __init__(self, num_slots: int, *, num_shards: int, cfg=None,
+                 max_len: int, block_size: int = 256,
+                 num_blocks: int | None = None, ctx: RuntimeCtx = NULL_CTX,
+                 quant: str = "none", quant_tail_blocks: int = 2):
+        assert num_shards >= 1
+        super().__init__(num_slots, max_len=max_len, block_size=block_size,
+                         num_blocks=num_blocks, quant=quant,
+                         quant_tail_blocks=quant_tail_blocks)
+        d = num_shards
+        self.num_shards = d
+        # Equal slices: round the physical pool up to a multiple of D.
+        self.blocks_per_shard = -(-self.num_blocks // d)
+        self.num_blocks = self.blocks_per_shard * d
+        # Virtual block v -> shard v % D, local column v // D.
+        self.table_width = -(-self.blocks_per_slot // d)
+        self.allocators = [BlockAllocator(self.blocks_per_shard)
+                           for _ in range(d)]
+        self.allocator = None     # replaced by the per-shard allocators
+        self.block_tables = np.full((d, num_slots, self.table_width), -1,
+                                    np.int32)
+        # Per-shard reservation ledgers (slot -> blocks promised).
+        self._reserved = [dict() for _ in range(d)]
+        if cfg is not None:
+            from repro.models import decoding  # lazy: keeps bookkeeping light
+            self.caches = decoding.init_paged_caches(
+                cfg, self.num_blocks, block_size, ctx, quant=quant,
+                batch=num_slots, quant_tail_blocks=quant_tail_blocks)
+            if ctx.mesh is not None:
+                self.caches = self._shard_caches(self.caches, ctx)
+            self._copy_jit = jax.jit(self._copy_block, donate_argnums=(0,))
+            if quant != "none":
+                self._set_ql_jit = jax.jit(self._set_quant_len,
+                                           donate_argnums=(0,))
+
+    @staticmethod
+    def _shard_caches(caches, ctx: RuntimeCtx):
+        """Place pool leaves sequence-sharded over their blocks axis;
+        per-slot leaves (tail ring, quant_len) replicate."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        seq = ctx.rules.get("seq") if ctx.rules else None
+        per_slot = {"k_tail", "v_tail", "quant_len"}
+
+        def put(name, leaf):
+            spec = (PartitionSpec() if name in per_slot
+                    else PartitionSpec(None, seq))
+            return jax.device_put(leaf, NamedSharding(ctx.mesh, spec))
+
+        return {key: {name: put(name, leaf) for name, leaf in group.items()}
+                for key, group in caches.items()}
+
+    # -- shard/column arithmetic -----------------------------------------------
+
+    def _loc(self, v: int) -> tuple[int, int]:
+        return v % self.num_shards, v // self.num_shards
+
+    def _tbl(self, slot: int, v: int) -> int:
+        s, c = self._loc(v)
+        return int(self.block_tables[s, slot, c])
+
+    def _tbl_set(self, slot: int, v: int, blk: int) -> None:
+        s, c = self._loc(v)
+        self.block_tables[s, slot, c] = blk
+
+    def _global_block(self, shard: int, blk: int) -> int:
+        # The blocks axis shards into D contiguous slices, so shard s's
+        # local block b sits at global row s * blocks_per_shard + b — the
+        # index the (global-view) jitted CoW splice consumes.
+        return shard * self.blocks_per_shard + blk
+
+    # -- slot lifecycle --------------------------------------------------------
+
+    def reset(self, slot: int) -> None:
+        assert (self.block_tables[:, slot] < 0).all(), (
+            f"slot {slot} reset with live blocks")
+        self.cache_len[slot] = 0
+        self.quant_len[slot] = 0
+        self._reg[slot] = (0, b"")
+        if self._set_ql_jit is not None:
+            self.caches = self._set_ql_jit(self.caches, slot, 0)
+
+    def free(self, slot: int) -> int:
+        released = 0
+        for v in range(self.table_width * self.num_shards):
+            s, c = self._loc(v)
+            blk = int(self.block_tables[s, slot, c])
+            if blk >= 0:
+                released += self._deref_local(s, blk)
+                self.block_tables[s, slot, c] = -1
+        self._reg.pop(slot, None)
+        for ledger in self._reserved:
+            ledger.pop(slot, None)
+        CachePool.free(self, slot)
+        return released
+
+    def _deref_local(self, shard: int, blk: int) -> int:
+        """Drop one reference on shard-local block; 1 iff actually freed."""
+        if self.allocators[shard].deref(blk):
+            key = self._block_key.pop((shard, blk), None)
+            if key is not None:
+                copies = self._registry[key]
+                copies.remove(blk)
+                if not copies:
+                    del self._registry[key]
+                self.registry_version += 1
+            return 1
+        return 0
+
+    def rollback(self, slot: int, new_len: int) -> int:
+        cur = int(self.cache_len[slot])
+        assert 0 <= new_len <= cur, (
+            f"slot {slot}: rollback to {new_len} outside [0, {cur}]")
+        assert self.quant == "none" or new_len >= int(self.quant_len[slot]), (
+            f"slot {slot}: rollback to {new_len} cuts into the flushed "
+            f"int8 span [0, {int(self.quant_len[slot])})")
+        keep = self.blocks_for(new_len)
+        freed = 0
+        for v in range(keep, self.table_width * self.num_shards):
+            s, c = self._loc(v)
+            blk = int(self.block_tables[s, slot, c])
+            if blk >= 0:
+                freed += self._deref_local(s, blk)
+                self.block_tables[s, slot, c] = -1
+        self.cache_len[slot] = new_len
+        return freed
+
+    # -- capacity --------------------------------------------------------------
+
+    @property
+    def live_blocks(self) -> int:
+        return self.num_blocks - sum(a.num_free for a in self.allocators)
+
+    @property
+    def free_unreserved(self) -> int:
+        """Admission-safe free count: D x the tightest shard. Striping
+        spreads a slot's virtual blocks round-robin, so an append of n
+        blocks draws at most ceil(n / D) from any one shard — admitting
+        while n <= D * min_shard_free can never overcommit a shard."""
+        tight = min(a.num_free - sum(ledger.values())
+                    for a, ledger in zip(self.allocators, self._reserved))
+        return max(tight, 0) * self.num_shards
+
+    def reserve(self, slot: int, blocks: int) -> None:
+        # Shard-agnostic conservative split (the virtual indices the
+        # promise will land on depend on a prefix adoption that happens
+        # after this call): promise ceil(blocks / D) on EVERY shard. At
+        # most D - 1 blocks of over-reservation per admitted slot, gone
+        # when the slot frees.
+        per = -(-max(blocks, 0) // self.num_shards)
+        for ledger in self._reserved:
+            if per:
+                ledger[slot] = per
+            else:
+                ledger.pop(slot, None)
+
+    def _draw_local(self, shard: int, slot: int) -> bool:
+        ledger = self._reserved[shard]
+        left = ledger.get(slot, 0)
+        if left:
+            ledger[slot] = left - 1
+        return bool(left)
+
+    def ensure_capacity(self, slot: int, new_len: int) -> bool:
+        bs = self.block_size
+        if new_len > self.max_len:
+            return False
+        cur = int(self.cache_len[slot])
+        if new_len <= cur:
+            return True
+        first = cur // bs
+        last = (new_len - 1) // bs
+        # Copy-on-write stays shard-pinned: the copy comes from the OWNING
+        # shard's allocator and the device splice never leaves its slice.
+        if cur % bs and self._tbl(slot, first) >= 0:
+            s, c = self._loc(first)
+            blk = int(self.block_tables[s, slot, c])
+            if self.allocators[s].ref[blk] > 1:
+                copy = self.allocators[s].alloc()
+                if copy is None:
+                    return False
+                if self._copy_jit is not None:
+                    self.caches = self._copy_jit(
+                        self.caches, self._global_block(s, blk),
+                        self._global_block(s, copy))
+                self.allocators[s].deref(blk)  # ref > 1: never frees here
+                self.block_tables[s, slot, c] = copy
+                self._draw_local(s, slot)
+        newly: list[tuple[int, int, int, bool]] = []
+        for v in range(first, last + 1):
+            if self._tbl(slot, v) < 0:
+                s, c = self._loc(v)
+                blk = self.allocators[s].alloc()
+                if blk is None:            # roll back this call's allocs
+                    for vv, ss, bb, drew in newly:
+                        self.allocators[ss].deref(bb)
+                        self._tbl_set(slot, vv, -1)
+                        if drew:
+                            ledger = self._reserved[ss]
+                            ledger[slot] = ledger.get(slot, 0) + 1
+                    return False
+                self.block_tables[s, slot, c] = blk
+                newly.append((v, s, blk, self._draw_local(s, slot)))
+        return True
+
+    # -- prefix sharing (match_prefix inherited: registry keys are layout-
+    # independent and values are local ids whose shard is implied by chain
+    # position) ----------------------------------------------------------------
+
+    def adopt_prefix(self, slot: int, prompt: np.ndarray, matched: int,
+                     blocks: list[int]) -> None:
+        if not blocks:
+            self.reset(slot)
+            return
+        assert matched <= INT32_MAX
+        prompt = np.ascontiguousarray(prompt, np.int32)
+        bs = self.block_size
+        for i, blk in enumerate(blocks):
+            s, c = self._loc(i)
+            self.allocators[s].share(blk)
+            self.block_tables[s, slot, c] = blk
+        self.cache_len[slot] = matched
+        if self.quant != "none":
+            assert matched % bs == 0, (
+                f"quantized adoption must be block-aligned, got {matched}")
+            self.quant_len[slot] = matched
+            if self._set_ql_jit is not None:
+                self.caches = self._set_ql_jit(self.caches, slot, matched)
+        n_full = min(matched // bs, len(blocks))
+        digest = b""
+        for i in range(n_full):
+            digest = _chain_digest(digest,
+                                   prompt[i * bs:(i + 1) * bs].tobytes())
+        self._reg[slot] = (n_full, digest)
+
+    def register_prefix(self, slot: int, consumed: np.ndarray, *,
+                        final: bool = False) -> None:
+        consumed = np.ascontiguousarray(consumed, np.int32)
+        bs = self.block_size
+        done, digest = self._reg.get(slot, (0, b""))
+        n_full = len(consumed) // bs
+        if self.quant != "none":
+            n_full = min(n_full, int(self.quant_len[slot]) // bs)
+            final = False
+        for i in range(done, n_full):
+            digest = _chain_digest(digest,
+                                   consumed[i * bs:(i + 1) * bs].tobytes())
+            self._register_local(("f", digest), i % self.num_shards,
+                                 self._tbl(slot, i))
+        self._reg[slot] = (n_full, digest)
+        if final and len(consumed) % bs:
+            tail = consumed[n_full * bs:]
+            self._register_local(("p", digest, tail.tobytes()),
+                                 n_full % self.num_shards,
+                                 self._tbl(slot, n_full))
+
+    def _register_local(self, key: tuple, shard: int, blk: int) -> None:
+        assert blk >= 0
+        if (shard, blk) in self._block_key:  # adopted block: already listed
+            return
+        self._registry.setdefault(key, []).append(blk)
+        self._block_key[(shard, blk)] = key
+        self.registry_version += 1

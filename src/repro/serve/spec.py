@@ -30,9 +30,11 @@ Per engine iteration the engine calls, in order:
   * ``sync(sched)``       — ONE batched drafter prefill step feeding every
     lagging slot up to ``sync_chunk`` stream tokens toward the target's
     ``cache_len``; a slot drafts only once fully synced.
-  * ``propose(...)``      — ``k`` sequential width-1 batched greedy drafter
-    steps seeded with each slot's pending ``next_token``; returns the
-    drafted tokens (host ints) for the scheduler's verify plan.
+  * ``propose(...)``      — ONE fused jitted dispatch scanning ``k``
+    width-1 greedy drafter steps on device (each step's argmax feeds the
+    next step's input, no host round-trip between steps), seeded with each
+    slot's pending ``next_token``; returns the drafted tokens (host ints)
+    for the scheduler's verify plan.
   * ``truncate(slot, n)`` — after the target committed/rolled back:
     drafter cache_len := min(its own, the target's new fill). One rule
     covers accept, reject, degrade and preemption; on a full accept the
@@ -57,6 +59,32 @@ from repro.serve import sampling
 from repro.serve.pool import CachePool
 
 
+def _propose_scan(cfg, ctx, k_max, params, caches, tok0, offsets, counts,
+                  vlo, vhi):
+    """``k_max`` fused width-1 greedy drafter steps in one dispatch: a
+    ``lax.scan`` whose carry feeds each step's on-device argmax forward as
+    the next input token. Row ``r`` participates while ``i < counts[r]``
+    (masked cache write + per-row old/new carry select past its budget),
+    so one compilation serves any mix of per-slot draft widths at that
+    ``k_max``. Step ``i`` writes at position ``offsets + i`` and attends
+    through its own token (``cache_lens = pos + 1``) — bit-identical to
+    ``k`` separate width-1 ``prefill_step`` calls."""
+    def body(carry, i):
+        caches, tok = carry
+        valid = i < counts
+        pos = offsets + i
+        logits, caches = decoding.decode_step(
+            cfg, params, tok[:, None], caches, pos, ctx=ctx,
+            token_valid=valid, cache_lens=pos + 1)
+        nxt = sampling.greedy_batch(logits, vlo, vhi)[:, 0]
+        tok = jnp.where(valid, nxt, tok)
+        return (caches, tok), nxt
+
+    (caches, _), toks = jax.lax.scan(
+        body, (caches, tok0), jnp.arange(k_max, dtype=jnp.int32))
+    return toks, caches            # toks: (k_max, B)
+
+
 class Drafter:
     def __init__(self, cfg, params, *, num_slots: int, max_len: int,
                  sync_chunk: int = 8, ctx: RuntimeCtx = NULL_CTX):
@@ -74,11 +102,15 @@ class Drafter:
         self.pool = CachePool(num_slots, cfg=cfg, max_len=max_len, ctx=ctx)
         self._step = jax.jit(functools.partial(
             decoding.prefill_step, cfg, ctx=ctx), donate_argnums=(2,))
+        # Fused batched-width proposer: compiled once per distinct k_max
+        # (<= draft_len values), replacing k separate width-1 dispatches.
+        self._propose = jax.jit(functools.partial(_propose_scan, cfg, ctx),
+                                static_argnums=(0,), donate_argnums=(2,))
         self._greedy = jax.jit(sampling.greedy_batch)
         # Per-slot stream origin, recorded at admission.
         self._base = np.zeros(num_slots, np.int64)   # len(st.prompt)
         self._pre = np.zeros(num_slots, np.int64)    # len(st.tokens) primed
-        self.calls = 0          # drafter model steps (NOT target model_calls)
+        self.calls = 0          # drafter dispatches (NOT target model_calls)
 
     # -- slot lifecycle --------------------------------------------------------
 
@@ -142,37 +174,34 @@ class Drafter:
     def propose(self, slot_k: dict[int, int], next_token: dict[int, int],
                 vision_lo: np.ndarray, vision_hi: np.ndarray
                 ) -> dict[int, list[int]]:
-        """Draft up to ``slot_k[slot]`` greedy tokens per slot: ``k``
-        sequential width-1 batched drafter steps, seeded with the slot's
-        pending ``next_token`` (never yet in any cache). Returns host-side
-        proposals; the drafter's cache absorbs the proposals as it goes
-        (position L+i holds draft i's *input*), to be truncated against
-        the target's post-verify fill."""
+        """Draft up to ``slot_k[slot]`` greedy tokens per slot in ONE
+        fused dispatch: a jitted scan of width-1 drafter steps whose
+        on-device argmax feeds each next step (``_propose_scan``), seeded
+        with the slot's pending ``next_token`` (never yet in any cache).
+        Returns host-side proposals; the drafter's cache absorbs the
+        proposals as it goes (position L+i holds draft i's *input*), to be
+        truncated against the target's post-verify fill."""
         if not slot_k:
             return {}
         b = self.pool.num_slots
-        cur = {s: int(t) for s, t in next_token.items()}
-        out: dict[int, list[int]] = {s: [] for s in slot_k}
-        for i in range(max(slot_k.values())):
-            rows = [s for s, k in slot_k.items() if i < k]
-            tokens = np.zeros((b, 1), np.int32)
-            offsets = np.zeros(b, np.int32)
-            lengths = np.zeros(b, np.int32)
-            for s in rows:
-                tokens[s, 0] = cur[s]
-                offsets[s] = self.pool.cache_len[s]
-                lengths[s] = 1
-            logits, self.pool.caches = self._step(
-                self.params, jnp.asarray(tokens), self.pool.caches,
-                jnp.asarray(offsets), jnp.asarray(lengths))
-            toks = np.asarray(self._greedy(logits, jnp.asarray(vision_lo),
-                                           jnp.asarray(vision_hi)))[:, 0]
-            self.calls += 1
-            for s in rows:
-                self.pool.advance(s, 1)
-                d = int(toks[s])
-                out[s].append(d)
-                cur[s] = d
+        k_max = max(slot_k.values())
+        tok0 = np.zeros(b, np.int32)
+        offsets = np.zeros(b, np.int32)
+        counts = np.zeros(b, np.int32)
+        for s, k in slot_k.items():
+            tok0[s] = next_token[s]
+            offsets[s] = self.pool.cache_len[s]
+            counts[s] = k
+        toks, self.pool.caches = self._propose(
+            k_max, self.params, self.pool.caches, jnp.asarray(tok0),
+            jnp.asarray(offsets), jnp.asarray(counts),
+            jnp.asarray(vision_lo), jnp.asarray(vision_hi))
+        toks = np.asarray(toks)
+        self.calls += 1
+        out: dict[int, list[int]] = {}
+        for s, k in slot_k.items():
+            self.pool.advance(s, k)
+            out[s] = [int(t) for t in toks[:k, s]]
         return out
 
     def truncate(self, slot: int, target_len: int) -> None:

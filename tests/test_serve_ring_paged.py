@@ -1,0 +1,275 @@
+"""Distributed paged serving: sharded-pool invariants and ring parity.
+
+Acceptance-level guarantees for the sequence-sharded paged pool
+(``serve.pool.ShardedPagedCachePool`` + the ring split-K paged decode):
+
+  * per-shard allocator soundness — a hypothesis property test drives
+    random admit/grow/rollback/free/prefix-share sequences against the
+    sharded pool and asserts, per shard: refcounts equal live table
+    references, table entries stay inside the shard's slice, the free
+    count tracks live blocks, and everything returns on teardown;
+  * 8-device parity (slow, subprocess) — the sharded-paged engine
+    produces exactly the single-device paged engine's greedy tokens
+    (which equal the contiguous engine's), under "xla" AND "interpret"
+    decode impls, including a CoW shared-prefix fork, int8 quant on the
+    sharded pool, and a fault-forced speculative rollback that
+    deallocates sharded tail blocks.
+"""
+import os
+import random
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+import pytest
+
+from _hypothesis_compat import given, settings, strategies
+
+from repro.serve.pool import ShardedPagedCachePool
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+# ---------------------------------------------------------------------------
+# Per-shard allocator/bookkeeping property test (host-side, no devices).
+# ---------------------------------------------------------------------------
+
+def _check_shard_invariants(pool: ShardedPagedCachePool) -> None:
+    for s in range(pool.num_shards):
+        alloc = pool.allocators[s]
+        counts: dict[int, int] = {}
+        for slot in range(pool.num_slots):
+            for c in range(pool.table_width):
+                b = int(pool.block_tables[s, slot, c])
+                if b >= 0:
+                    assert 0 <= b < pool.blocks_per_shard, (
+                        "table entry escaped the shard slice")
+                    counts[b] = counts.get(b, 0) + 1
+        # refcount == live table references, exactly, per shard
+        assert {b: int(alloc.ref[b]) for b in counts} == counts
+        assert (alloc.ref >= 0).all()
+        assert alloc.num_free == pool.blocks_per_shard - len(counts)
+        for b in alloc._free:
+            assert alloc.ref[b] == 0
+    # registry only ever points at live blocks (ref >= 1 on their shard)
+    for key, copies in pool._registry.items():
+        assert copies, "registry key with no live copies"
+    for (s, b), key in pool._block_key.items():
+        assert pool.allocators[s].ref[b] >= 1
+        assert b in pool._registry[key]
+    assert pool.free_unreserved >= 0
+    assert 0 <= pool.live_blocks <= pool.num_blocks
+
+
+@settings(max_examples=15, deadline=None)
+@given(strategies.integers(0, 2 ** 31 - 1))
+def test_sharded_pool_per_shard_invariants(seed):
+    """Random admit (with prefix match/adopt/register), decode growth,
+    speculative rollback, and retire sequences keep every shard's
+    allocator sound and block-striped."""
+    rng = random.Random(seed)
+    d = rng.choice([2, 3, 4, 8])
+    bs = 4
+    pool = ShardedPagedCachePool(3, num_shards=d, max_len=64, block_size=bs,
+                                 num_blocks=rng.randint(8, 40))
+    live: dict[int, np.ndarray] = {}    # slot -> prompt driving its stream
+
+    def admit():
+        slot = pool.alloc()
+        if slot is None:
+            return
+        pool.reset(slot)
+        # Small prompt space so prefix sharing actually engages.
+        start = rng.choice([0, 100])
+        n = rng.randint(2, 20)
+        prompt = np.arange(start, start + n, dtype=np.int32)
+        matched, blocks = pool.match_prefix(prompt)
+        matched = min(matched, n - 1)           # scheduler's >= 1-token rule
+        keep = blocks[:matched // bs]
+        if matched % bs:
+            keep.append(blocks[matched // bs])
+        pool.reserve(slot, pool.blocks_for(n) - len(keep) + 1)
+        if keep:
+            pool.adopt_prefix(slot, prompt, matched, keep)
+        if not pool.ensure_capacity(slot, n):
+            pool.free(slot)
+            return
+        pool.advance(slot, n - int(pool.cache_len[slot]))
+        pool.register_prefix(slot, prompt, final=True)
+        live[slot] = prompt
+
+    for _ in range(120):
+        op = rng.random()
+        if op < 0.35 or not live:
+            admit()
+        elif op < 0.60:
+            # decode growth: a few appended tokens (CoW when shared)
+            slot = rng.choice(sorted(live))
+            cur = int(pool.cache_len[slot])
+            if pool.ensure_capacity(slot, cur + rng.randint(1, 6)):
+                pool.advance(slot, rng.randint(1, 6))
+        elif op < 0.80:
+            # speculative rollback: drop a random tail span
+            slot = rng.choice(sorted(live))
+            cur = int(pool.cache_len[slot])
+            pool.rollback(slot, rng.randint(0, cur))
+        else:
+            slot = rng.choice(sorted(live))
+            pool.free(slot)
+            del live[slot]
+        _check_shard_invariants(pool)
+
+    for slot in sorted(live):
+        pool.free(slot)
+    _check_shard_invariants(pool)
+    assert pool.live_blocks == 0 and not pool._registry
+    for alloc in pool.allocators:
+        assert alloc.num_free == pool.blocks_per_shard
+
+
+def test_sharded_pool_block_striping_layout():
+    """Virtual block v of any slot lands on shard v % D at column v // D —
+    the exact inverse of the kernel's glb = column * D + shard."""
+    pool = ShardedPagedCachePool(2, num_shards=4, max_len=64, block_size=4)
+    slot = pool.alloc()
+    pool.reset(slot)
+    assert pool.ensure_capacity(slot, 64)       # all 16 virtual blocks
+    for v in range(16):
+        s, c = v % 4, v // 4
+        assert pool.block_tables[s, slot, c] >= 0
+        # every OTHER shard's cell for this column belongs to a different
+        # virtual block of the same slot (fully allocated here), so no
+        # cross-shard aliasing is possible by construction
+    pool.advance(slot, 64)
+    assert pool.live_blocks == 16
+    pool.free(slot)
+    assert pool.live_blocks == 0
+
+
+def test_sharded_admission_math_is_conservative():
+    """free_unreserved = D x tightest shard: admitting n <= free_unreserved
+    blocks can never overcommit any single shard."""
+    d = 4
+    pool = ShardedPagedCachePool(2, num_shards=d, max_len=256, block_size=4,
+                                 num_blocks=16)     # 4 per shard
+    assert pool.free_unreserved == 16
+    slot = pool.alloc()
+    pool.reset(slot)
+    # 5 blocks stripe 2/1/1/1 -> tightest shard has 2 free
+    assert pool.ensure_capacity(slot, 5 * 4)
+    pool.advance(slot, 5 * 4)
+    assert pool.free_unreserved == 2 * d
+    # reservations are conservative too: promising 3 blocks holds
+    # ceil(3/4) = 1 on every shard
+    other = pool.alloc()
+    pool.reset(other)
+    pool.reserve(other, 3)
+    assert pool.free_unreserved == 1 * d
+    pool.free(other)
+    pool.free(slot)
+    assert pool.free_unreserved == 16
+
+
+# ---------------------------------------------------------------------------
+# 8-device engine parity (subprocess, slow): sharded == single == contiguous.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_ring_paged_engine_parity_multidevice():
+    """8-way sharded-paged serving emits bit-identical greedy tokens to the
+    single-device paged engine (itself equal to the contiguous engine):
+    CoW shared-prefix fork, both decode impls, int8 quant, and a
+    fault-forced speculative rollback on the sharded pool."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np
+        from repro.core import jax_compat as jc
+        from repro.configs import get_reduced
+        from repro.models.registry import build_model
+        from repro.models.context import RuntimeCtx
+        from repro.serve import (CacheConfig, Request, ServeConfig,
+                                 ServeEngine, SpecConfig)
+        from repro.serve.faults import FaultPlan
+
+        cfg = get_reduced("lwm-7b")
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+        mesh = jc.make_mesh((8,), ("seq",))
+        ctx = RuntimeCtx(mesh=mesh, rules={"seq": "seq"}, ring_axis="seq",
+                         decode_ring=True)
+
+        # Identical-prompt pair + a late fork-after-16 request (admitted
+        # once a slot frees, hitting the registered prefix) + a distinct
+        # one; lens straddle block boundaries (bs=8, chunk=4).
+        p_shared = np.arange(10, 31, dtype=np.int32)       # 21 tokens
+        reqs = [Request(prompt=p_shared, max_new_tokens=4),
+                Request(prompt=p_shared.copy(), max_new_tokens=5),
+                Request(prompt=np.concatenate(
+                    [p_shared[:16], np.arange(70, 75)]).astype(np.int32),
+                        max_new_tokens=4),                 # forks after 16
+                Request(prompt=np.arange(40, 49, dtype=np.int32),
+                        max_new_tokens=3)]
+
+        def run(paged, ring, impl, quant="none"):
+            sc = ServeConfig(cache=CacheConfig(
+                max_len=64, paged=paged, block_size=8, quant=quant),
+                decode_impl=impl)
+            eng = ServeEngine(cfg, params, sc, ctx=ctx if ring else
+                              RuntimeCtx())
+            out = eng.serve(list(reqs), num_slots=2, prefill_chunk=4)
+            return [r.tokens for r in out], eng.stats
+
+        cont, _ = run(False, False, "xla")
+        single, _ = run(True, False, "xla")
+        ring, st = run(True, True, "xla")
+        for a, b, c in zip(cont, single, ring):
+            np.testing.assert_array_equal(a, b)
+            np.testing.assert_array_equal(b, c)
+        assert st["prefix_hit_tokens"] > 0      # CoW sharing engaged
+        print("xla parity ok")
+
+        # ring split-K paged kernel body (interpret == the TPU kernel)
+        single_i, _ = run(True, False, "interpret")
+        ring_i, _ = run(True, True, "interpret")
+        for a, b in zip(single_i, ring_i):
+            np.testing.assert_array_equal(a, b)
+        print("interpret parity ok")
+
+        # int8 quant on the sharded pool (scale rows shard with blocks)
+        single_q, _ = run(True, False, "xla", quant="int8")
+        ring_q, _ = run(True, True, "xla", quant="int8")
+        for a, b in zip(single_q, ring_q):
+            np.testing.assert_array_equal(a, b)
+        print("int8 parity ok")
+
+        # speculative rollback on the sharded pool: a flipped draft step
+        # forces rejection -> rollback dealloc of sharded tail blocks
+        def run_spec(ring):
+            sc = ServeConfig(
+                cache=CacheConfig(max_len=64, paged=True, block_size=8),
+                spec=SpecConfig(drafter=cfg, drafter_params=params,
+                                draft_len=4, enabled=True),
+                decode_impl="xla")
+            plan = FaultPlan(flip_steps=(5, 7))
+            eng = ServeEngine(cfg, params, sc,
+                              ctx=ctx if ring else RuntimeCtx(),
+                              faults=plan)
+            out = eng.serve(list(reqs), num_slots=2, prefill_chunk=4)
+            return [r.tokens for r in out], eng.stats, plan
+
+        t_single, _, _ = run_spec(False)
+        t_ring, st, plan = run_spec(True)
+        for a, b in zip(t_single, t_ring):
+            np.testing.assert_array_equal(a, b)
+        assert plan.summary().get("draft_flip", 0) >= 1  # flips landed
+        assert st["spec_rollback_tokens"] >= 1  # rejection rolled back
+        print("spec rollback parity ok")
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=3000)
+    assert r.returncode == 0, f"subprocess failed:\n{r.stdout}\n{r.stderr}"
+    assert "spec rollback parity ok" in r.stdout

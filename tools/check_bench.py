@@ -24,6 +24,13 @@ claims rest on:
     1M-context shared-prefix analytic row must show >= 8x resident bytes
     per concurrent request with replayed token counts matching the
     contiguous baseline.
+  * BENCH_serve_ring_paged.json — the ring-sharded paged pool must hold
+    strictly fewer resident KV bytes per DEVICE than the single-device
+    paged pool with bit-exact greedy token parity on the measured
+    8-device workload, and the 1M-context analytic replay must keep
+    per-device residency within 1.25/D of the single-device total
+    (striping granularity <= 25% over the ideal 1/D) at replayed token
+    parity.
   * BENCH_context_stages.json — every measured ladder stage reports a
     positive tok/s under a real stage policy; the accumulation-on/off pair
     consumed identical token budgets; and at every full-scale Appendix-F
@@ -217,6 +224,59 @@ def check_serve_paged() -> None:
     _check(measured >= 1, "serve_paged: no measured row at all")
     _check(stage_rows >= 1,
            "serve_paged: the 1M-context analytic_paper_stage row is gone")
+
+
+def check_serve_ring_paged() -> None:
+    rows = _load("BENCH_serve_ring_paged.json")
+    if rows is None:
+        return
+    measured = 0
+    stage_rows = 0
+    for row in rows or []:
+        if "analytic_paper_stage" in row:
+            stage = row["analytic_paper_stage"]
+            stage_rows += 1
+            delta = stage.get("delta", {})
+            d = stage.get("workload", {}).get("num_shards", 0)
+            # Fail-closed defaults: a missing/renamed key must FAIL the gate.
+            _check(delta.get("tokens_match") is True,
+                   "serve_ring_paged[1M-analytic]: sharded replay token "
+                   "count no longer matches the single-device baseline")
+            _check(delta.get("sharded_strictly_fewer_bytes_per_device")
+                   is True,
+                   "serve_ring_paged[1M-analytic]: delta flag lost the "
+                   "strict per-device bytes ordering")
+            _check(d >= 2 and delta.get("per_device_ratio", 1.0)
+                   <= 1.25 / max(d, 1),
+                   "serve_ring_paged[1M-analytic]: per-device residency "
+                   f"ratio {delta.get('per_device_ratio')} exceeds 1.25/D "
+                   f"(D={d}) — striping no longer balances the pool")
+            _check(delta.get("within_125pct_of_ideal") is True,
+                   "serve_ring_paged[1M-analytic]: delta flag lost the "
+                   "1.25/D bound")
+            continue
+        measured += 1
+        delta = row.get("delta", {})
+        _check(delta.get("tokens_match") is True,
+               "serve_ring_paged[measured]: sharded and single-device "
+               "paged engines no longer produce identical greedy tokens")
+        _check(delta.get("peak_blocks_match") is True,
+               "serve_ring_paged[measured]: sharded peak live-block total "
+               "diverged from the single-device pool (allocation "
+               "accounting drift)")
+        _check(row.get("sharded", {}).get(
+                   "resident_kv_bytes_per_device", 10 ** 18)
+               < row.get("single_device", {}).get(
+                   "resident_kv_bytes_per_device", -1),
+               "serve_ring_paged[measured]: sharded per-device bytes no "
+               "longer undercut the single-device pool")
+        _check(row.get("sharded", {}).get("prefix_hit_tokens", 0) > 0,
+               "serve_ring_paged[measured]: prefix sharing never engaged "
+               "on the sharded pool (registry regression?)")
+    _check(measured >= 1, "serve_ring_paged: no measured row at all")
+    _check(stage_rows >= 1,
+           "serve_ring_paged: the 1M-context analytic_paper_stage row is "
+           "gone")
 
 
 def check_serve_chaos() -> None:
@@ -416,6 +476,7 @@ def main() -> int:
     check_decode_fused()
     check_serve_batching()
     check_serve_paged()
+    check_serve_ring_paged()
     check_serve_chaos()
     check_serve_spec()
     check_serve_quant()
@@ -427,7 +488,9 @@ def main() -> int:
     print("ok: committed BENCH_*.json accounting holds (fused beats xla; no "
           "materialized logits buffers; continuous batching wastes fewer "
           "pad-token steps than static; paged cache beats contiguous "
-          "residency with token parity; stage-boundary reshard beats "
+          "residency with token parity; ring-sharded paged pool holds "
+          "~1/D resident bytes per device at bit-exact parity; "
+          "stage-boundary reshard beats "
           "replicate with accum token parity; chaos run recovers token-exact "
           "with bounded replay recompute; speculation accepts > 1 token per "
           "verify step with exact parity on both pools; int8 KV cache cuts "
