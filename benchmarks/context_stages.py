@@ -19,22 +19,37 @@ fail-closed by ``tools/check_bench.py``):
     spec-diff reshard moves per device vs naively gathering the TrainState
     replicated — the quantity the trainer's ``reshard_state`` boundary hop
     is designed to win.
+  * analytic 2D-crossover rows — at every sequence-parallel full-scale
+    stage, ``sharding.seq_parallel_comm_bytes`` prices the pure ring vs
+    the ring x head-parallel (ring2d) layout and records which policy the
+    crossover picks; >= 256K stages must pick ring2d.
+  * measured ring2d grid — a (2,2,2) DxHxM host mesh (8-device subprocess)
+    trains one short stage under every (policy in {ring, ring2d},
+    remat_policy in {none, nothing_saveable}) pair: tok/s, loss
+    trajectory (ring vs ring2d parity to fold-order tolerance, remat
+    bitwise), token parity, and the compiled step's peak temp bytes
+    (``compiled.memory_analysis()`` — the CPU-portable stand-in for
+    device memory stats) showing remat cutting peak live bytes.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
+import sys
 
 from repro.configs import get_config, get_reduced
 from repro.data.pipeline import LWM_1K, LWM_8K, TEXT_STAGE
 from repro.launch.mesh import make_host_mesh
 from repro.models.registry import build_model
 from repro.train import StageSpec, Trainer
-from repro.train.sharding import policy_for_stage, reshard_plan
+from repro.train.sharding import (policy_for_stage, reshard_plan,
+                                  seq_parallel_comm_bytes)
 
 HERE = os.path.dirname(os.path.abspath(__file__))
 OUT_PATH = os.path.join(HERE, "..", "BENCH_context_stages.json")
+SRC = os.path.join(HERE, "..", "src")
 
 # Reduced ladder mirroring Table 11 (seq scaled /256, theta schedule kept).
 TEXT_LADDER = [
@@ -44,12 +59,15 @@ VISION_LADDER = [
     ("1K", 256, 5e7), ("8K", 512, 5e7),
 ]
 
-# Appendix-F-style per-stage (data, model) splits of one 256-device pod:
-# the 4M-token batch fills the data axis at short contexts; as seq doubles
-# the rows shrink and the split shifts toward tensor/sequence parallelism.
+# Appendix-F-style per-stage (data, heads, model) splits of one 256-device
+# pod: the 4M-token batch fills the data axes at short contexts; as seq
+# doubles the rows shrink, the split shifts toward tensor/sequence
+# parallelism, and once sequence parallelism is wide (>= 256K) a "heads"
+# axis carves the ring in two dimensions (ring x head-parallel a2a).
 FULL_SEQS = [32_768, 131_072, 262_144, 524_288, 1_048_576]
-FULL_SPLITS = {32_768: (64, 4), 131_072: (32, 8), 262_144: (16, 16),
-               524_288: (16, 16), 1_048_576: (8, 32)}
+FULL_SPLITS = {32_768: (64, 1, 4), 131_072: (32, 1, 8),
+               262_144: (32, 2, 4), 524_288: (16, 4, 4),
+               1_048_576: (8, 8, 4)}
 TOKENS_PER_BATCH = 4_194_304
 
 
@@ -57,8 +75,16 @@ class _MeshShape:
     """Duck-typed mesh (shape mapping only) — enough for spec/byte logic,
     no devices needed for the full-scale analytic rows."""
 
-    def __init__(self, data: int, model: int):
+    def __init__(self, data: int, model: int, heads: int = 1):
         self.shape = {"data": data, "model": model}
+        if heads > 1:
+            self.shape = {"data": data, "heads": heads, "model": model}
+
+
+def _policy_name(pol) -> str:
+    if pol.head_axis is not None:
+        return "ring2d"
+    return "ring" if pol.ring_axis is not None else "fsdp"
 
 
 def _stages(vision: bool, steps: int) -> list[StageSpec]:
@@ -125,16 +151,22 @@ def _accum_parity(*, steps: int) -> dict:
     }
 
 
+def _full_scale_policies(cfg):
+    policies = {}
+    for seq in FULL_SEQS:
+        data, heads, tp = FULL_SPLITS[seq]
+        rows = TOKENS_PER_BATCH // seq
+        policies[seq] = (policy_for_stage(
+            cfg, _MeshShape(data, tp, heads), seq, rows),
+            (data, heads, tp), rows)
+    return policies
+
+
 def _boundary_rows() -> list[dict]:
     """Full-scale Appendix-F ladder: bytes moved at every stage boundary."""
     cfg = get_config("lwm-7b")
     model = build_model(cfg)
-    policies = {}
-    for seq in FULL_SEQS:
-        data, tp = FULL_SPLITS[seq]
-        rows = TOKENS_PER_BATCH // seq
-        policies[seq] = (policy_for_stage(cfg, _MeshShape(data, tp), seq, rows),
-                         (data, tp), rows)
+    policies = _full_scale_policies(cfg)
     rows_out = []
     for prev, nxt in zip(FULL_SEQS, FULL_SEQS[1:]):
         src, src_split, src_rows = policies[prev]
@@ -144,10 +176,12 @@ def _boundary_rows() -> list[dict]:
             "bench": "context_stages",
             "analytic_boundary": {
                 "from_seq": prev, "to_seq": nxt,
-                "from_mesh": {"data": src_split[0], "model": src_split[1]},
-                "to_mesh": {"data": dst_split[0], "model": dst_split[1]},
-                "from_policy": "ring" if src.ring_axis else "fsdp",
-                "to_policy": "ring" if dst.ring_axis else "fsdp",
+                "from_mesh": {"data": src_split[0], "heads": src_split[1],
+                              "model": src_split[2]},
+                "to_mesh": {"data": dst_split[0], "heads": dst_split[1],
+                            "model": dst_split[2]},
+                "from_policy": _policy_name(src),
+                "to_policy": _policy_name(dst),
                 "from_batch_rows": src_rows, "to_batch_rows": dst_rows,
                 **plan,
                 "reshard_beats_replicate":
@@ -156,6 +190,180 @@ def _boundary_rows() -> list[dict]:
             },
         })
     return rows_out
+
+
+def _crossover_rows() -> list[dict]:
+    """Full-scale analytic ring-vs-ring2d comm pricing per SP stage."""
+    cfg = get_config("lwm-7b")
+    rows_out = []
+    for seq, (pol, (data, heads, tp), rows) in _full_scale_policies(
+            cfg).items():
+        name = _policy_name(pol)
+        if name == "fsdp":
+            continue
+        b = seq_parallel_comm_bytes(cfg, seq, rows, ring_size=data,
+                                    head_size=heads)
+        rows_out.append({
+            "bench": "context_stages",
+            "analytic_crossover": {
+                "seq_len": seq, "batch_rows": rows,
+                "mesh": {"data": data, "heads": heads, "model": tp},
+                "chosen_policy": name,
+                "ring_bytes_per_device": b["ring_bytes_per_device"],
+                "ring2d_bytes_per_device": b["ring2d_bytes_per_device"],
+                "ring2d_a2a_bytes_per_device":
+                    b["ring2d_a2a_bytes_per_device"],
+                "ring2d_beats_ring": b["ring2d_bytes_per_device"]
+                                     < b["ring_bytes_per_device"],
+            },
+        })
+    return rows_out
+
+
+_GRID_SCRIPT = r"""
+import json, os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from repro.configs import get_reduced
+from repro.launch.mesh import make_host_mesh
+from repro.models.registry import build_model
+from repro.train import StageSpec, Trainer
+from repro.train.sharding import policy_for_stage, state_shardings
+from repro.train.train_step import (LossConfig, init_train_state,
+                                    make_train_step)
+
+STEPS = int(sys.argv[1])
+cfg = get_reduced("lwm-7b")
+mesh = make_host_mesh((2, 2, 2), ("data", "heads", "model"))
+model = build_model(cfg)
+
+# peak-live-bytes probe at a longer seq (where activations dominate):
+# compiled.memory_analysis() temp bytes — CPU-portable stand-in for device
+# memory stats (devices report none on the host platform).
+S_PROBE = 1024
+state_sh = jax.eval_shape(lambda r: init_train_state(model, r),
+                          jax.random.PRNGKey(0))
+probe_batch = {
+    "tokens": jax.ShapeDtypeStruct((1, S_PROBE), jnp.int32),
+    "labels": jax.ShapeDtypeStruct((1, S_PROBE), jnp.int32),
+    "segment_ids": jax.ShapeDtypeStruct((1, S_PROBE), jnp.int32),
+    "positions": jax.ShapeDtypeStruct((1, S_PROBE), jnp.int32),
+    "loss_weights": jax.ShapeDtypeStruct((1, S_PROBE), jnp.float32),
+}
+
+rows = []
+for pol_name in ("ring", "ring2d"):
+    for rp in (None, "nothing_saveable"):
+        pol = policy_for_stage(cfg, mesh, S_PROBE, 1, force=pol_name,
+                               remat_policy=rp)
+        step = make_train_step(cfg, ctx=pol.ctx(), learning_rate=1e-3,
+                               lcfg=LossConfig())
+        compiled = jax.jit(
+            step,
+            in_shardings=(state_shardings(model, pol),
+                          pol.batch_sharding(probe_batch, seq_sharded=True)),
+            out_shardings=(state_shardings(model, pol), None),
+        ).lower(state_sh, probe_batch).compile()
+        temp = compiled.memory_analysis().temp_size_in_bytes
+
+        st = StageSpec(name=f"{pol_name}-{rp or 'none'}", seq_len=256,
+                       rope_theta=1e6, steps=STEPS, batch_rows=1, lr=3e-4,
+                       warmup=1, remat_policy=rp, policy=pol_name)
+        tr = Trainer(cfg, [st], seed=0, mesh=mesh, log_every=10 ** 9,
+                     log_fn=lambda *_: None)
+        h = tr.run()[0]
+        rows.append({
+            "policy": pol_name, "remat_policy": rp or "none",
+            "seq_len": 256, "steps": STEPS,
+            "losses": [round(x, 6) for x in h["losses"]],
+            "final_loss": round(h["final_loss"], 6),
+            "tokens": h["tokens"],
+            "tok_per_s": round(h["tokens"] / h["wall_s"], 1),
+            "peak_temp_bytes_probe": int(temp),
+            "probe": {"kind": "memory_analysis.temp_size_in_bytes",
+                      "seq_len": S_PROBE},
+        })
+
+# single-step parity from IDENTICAL params + microbatch (optimizer-free
+# comparison: multi-step trajectories drift chaotically at smoke scale as
+# fold-order noise compounds through updates — one step isolates the
+# attention layouts themselves).
+S_PAR = 256
+state = init_train_state(model, jax.random.PRNGKey(0))
+batch = {
+    "tokens": jax.random.randint(jax.random.PRNGKey(1), (1, S_PAR), 0,
+                                  cfg.vocab_size),
+    "labels": jax.random.randint(jax.random.PRNGKey(2), (1, S_PAR), 0,
+                                  cfg.vocab_size),
+    "segment_ids": jnp.ones((1, S_PAR), jnp.int32),
+    "positions": jnp.broadcast_to(jnp.arange(S_PAR, dtype=jnp.int32),
+                                  (1, S_PAR)),
+    "loss_weights": jnp.ones((1, S_PAR), jnp.float32),
+}
+par = {}
+for pol_name in ("ring", "ring2d"):
+    pol = policy_for_stage(cfg, mesh, S_PAR, 1, force=pol_name)
+    step = make_train_step(cfg, ctx=pol.ctx(), learning_rate=1e-3,
+                           lcfg=LossConfig())
+    sh = state_shardings(model, pol)
+    _, m = jax.jit(step, in_shardings=(sh, pol.batch_sharding(
+        batch, seq_sharded=True)), out_shardings=(sh, None))(
+        jax.device_put(state, sh), batch)
+    par[pol_name] = {"loss": float(m["loss"]),
+                     "grad_norm": float(m["grad_norm"])}
+print("GRID_JSON:" + json.dumps({"grid": rows, "step_parity": par}))
+"""
+
+
+def _ring2d_grid(*, steps: int) -> list[dict]:
+    """Measured (policy x remat) grid on an 8-device (2,2,2) subprocess."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _GRID_SCRIPT, str(steps)],
+                       env=env, capture_output=True, text=True, timeout=1800)
+    if r.returncode != 0:
+        raise RuntimeError(f"ring2d grid subprocess failed:\n{r.stdout}\n"
+                           f"{r.stderr}")
+    payload = [ln for ln in r.stdout.splitlines()
+               if ln.startswith("GRID_JSON:")][0]
+    out = json.loads(payload[len("GRID_JSON:"):])
+    grid, par = out["grid"], out["step_parity"]
+
+    by = {(g["policy"], g["remat_policy"]): g for g in grid}
+    # Parity is judged on ONE step from identical params/batch (the
+    # step_parity probe): multi-step smoke trajectories optimize
+    # independently, so fold-order noise compounds through updates and the
+    # final losses drift apart without any layout bug. The trajectory delta
+    # is kept as an informational field only.
+    loss_delta = abs(par["ring"]["loss"] - par["ring2d"]["loss"])
+    grad_delta = abs(par["ring"]["grad_norm"] - par["ring2d"]["grad_norm"]
+                     ) / max(par["ring"]["grad_norm"], 1e-9)
+    ring, ring2d = by[("ring", "none")], by[("ring2d", "none")]
+    traj_delta = max(abs(a - b) for a, b in
+                     zip(ring["losses"], ring2d["losses"]))
+    remat_loss_delta = max(
+        abs(a - b) for pol in ("ring", "ring2d")
+        for a, b in zip(by[(pol, "none")]["losses"],
+                        by[(pol, "nothing_saveable")]["losses"]))
+    rows = [{"bench": "context_stages", "mode": "measured_2d", **g}
+            for g in grid]
+    rows.append({
+        "bench": "context_stages",
+        "ring2d_parity": {
+            "tokens_match": len({g["tokens"] for g in grid}) == 1,
+            "loss_delta_ring_vs_ring2d": round(loss_delta, 6),
+            "grad_norm_rel_delta": round(grad_delta, 6),
+            "step_parity": par,
+            "trajectory_delta_info": round(traj_delta, 6),
+            "loss_delta_remat": round(remat_loss_delta, 6),
+            "remat_cuts_peak_bytes": {
+                pol: by[(pol, "nothing_saveable")]["peak_temp_bytes_probe"]
+                     < by[(pol, "none")]["peak_temp_bytes_probe"]
+                for pol in ("ring", "ring2d")
+            },
+        },
+    })
+    return rows
 
 
 def run(*, vision: bool = False, steps: int = 20, quick: bool = False,
@@ -171,7 +379,7 @@ def run(*, vision: bool = False, steps: int = 20, quick: bool = False,
 
         from repro.train.train_step import init_train_state, make_train_step
 
-        rows = _boundary_rows()
+        rows = _boundary_rows() + _crossover_rows()
         cfg = get_reduced("lwm-7b")
         model = build_model(cfg)
         state = jax.eval_shape(
@@ -191,6 +399,8 @@ def run(*, vision: bool = False, steps: int = 20, quick: bool = False,
     if not vision:
         rows.append(_accum_parity(steps=steps))
         rows.extend(_boundary_rows())
+        rows.extend(_crossover_rows())
+        rows.extend(_ring2d_grid(steps=max(steps // 3, 3)))
         with open(OUT_PATH, "w") as f:
             json.dump(rows, f, indent=2)
     return rows

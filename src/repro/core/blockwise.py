@@ -174,6 +174,7 @@ def blockwise_attention(
     kv_block_size: int = 512,
     logits_soft_cap: float | None = None,
     impl: str | None = None,
+    remat_policy: str | None = None,
 ) -> jnp.ndarray:
     """Memory-efficient exact attention (the single-device BPT attention).
 
@@ -186,7 +187,15 @@ def blockwise_attention(
     the kernel only on TPU (off-TPU it would degrade to the O(S^2)
     reference, defeating this function's memory contract); None/"xla"/"ref"
     keeps this einsum loop.
+
+    ``remat_policy`` (core.remat) wraps each query-block fold in
+    ``jax.checkpoint`` so the backward recomputes the per-block (p, carry)
+    intermediates of the einsum loop instead of saving them across the
+    whole scan ("dots_saveable" keeps the einsum outputs, recomputing only
+    the elementwise glue).
     """
+    from repro.core import remat as remat_mod
+
     b, sq, h, d = q.shape
     skv = k.shape[1]
     if impl == "auto" and jax.default_backend() == "tpu":
@@ -209,7 +218,7 @@ def blockwise_attention(
         qblk = sq
     nq = sq // qblk
 
-    def one_q_block(args):
+    def _one_q_block(args):
         qb, qpb, qsb = args  # (B, qblk, H, D), (B, qblk), (B, qblk)|None
         carry = init_carry(b, qblk, h, v.shape[-1])
         carry = attend_shard(
@@ -220,7 +229,10 @@ def blockwise_attention(
             causal=causal, kv_block_size=kv_block_size,
             logits_soft_cap=logits_soft_cap,
         )
-        return finalize_carry(carry, dtype=q.dtype)
+        return remat_mod.tag_output(finalize_carry(carry, dtype=q.dtype),
+                                    remat_policy)
+
+    one_q_block = remat_mod.apply_remat(_one_q_block, remat_policy)
 
     q_blocks = jnp.moveaxis(q.reshape(b, nq, qblk, h, d), 1, 0)
     qp_blocks = jnp.moveaxis(q_positions.reshape(b, nq, qblk), 1, 0)

@@ -1,0 +1,80 @@
+"""Rematerialization-policy control for the attention inner loops.
+
+The progressive context ladder (paper Appendix F) trades recompute FLOPs for
+the activation memory to reach longer seq_len on the same devices. This
+module single-sources the mapping from a config-level policy *name* to a
+``jax.checkpoint`` saveable-filter, applied around the ring forward (fused
+Pallas custom_vjp or XLA blockwise loop) and the single-device blockwise
+einsum loop:
+
+  name                 what the backward pass may reuse
+  "none"               everything (no jax.checkpoint wrapper; XLA decides)
+  "nothing_saveable"   nothing — the whole wrapped region (including the
+                       ring's ppermute traffic) re-executes in the backward
+  "dots_saveable"      matmul/einsum outputs only (recompute the cheap
+                       elementwise glue, keep the expensive contractions)
+  "custom"             only values tagged ``checkpoint_name(..., RING_OUT)``
+                       — the flash-style policy: keep the finalized
+                       attention output, recompute the per-block internals
+
+Aliases "nothing" / "dots" (ModelConfig.remat_policy's historical values)
+resolve to their ``*_saveable`` forms so one knob drives both the per-layer
+scan remat and the attention-loop remat.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+from jax import ad_checkpoint
+
+# Tag applied to the finalized attention output inside remat-wrapped attention
+# regions; the "custom" policy saves exactly these.
+RING_OUT = "ring_attn_out"
+
+REMAT_POLICY_NAMES = ("none", "nothing_saveable", "dots_saveable", "custom")
+
+_ALIASES = {
+    None: "none",
+    "nothing": "nothing_saveable",
+    "dots": "dots_saveable",
+}
+
+
+def canonical_name(name: str | None) -> str:
+    name = _ALIASES.get(name, name)
+    if name not in REMAT_POLICY_NAMES:
+        raise ValueError(
+            f"unknown remat_policy {name!r}; expected one of "
+            f"{'|'.join(REMAT_POLICY_NAMES)} (or aliases nothing|dots)")
+    return name
+
+
+def resolve_remat_policy(name: str | None):
+    """Policy name -> (wrap?, jax.checkpoint ``policy=`` argument)."""
+    name = canonical_name(name)
+    if name == "none":
+        return False, None
+    if name == "nothing_saveable":
+        return True, jax.checkpoint_policies.nothing_saveable
+    if name == "dots_saveable":
+        return True, jax.checkpoint_policies.dots_saveable
+    return True, jax.checkpoint_policies.save_only_these_names(RING_OUT)
+
+
+def apply_remat(fn: Callable, name: str | None) -> Callable:
+    """Wrap ``fn`` in ``jax.checkpoint`` per the named policy ("none" = id).
+
+    ``fn`` must take array-only positional arguments (close over statics).
+    """
+    wrap, policy = resolve_remat_policy(name)
+    if not wrap:
+        return fn
+    return jax.checkpoint(fn, policy=policy)
+
+
+def tag_output(x, name: str | None):
+    """``checkpoint_name`` the attention output so "custom" can save it."""
+    if canonical_name(name) == "custom":
+        return ad_checkpoint.checkpoint_name(x, RING_OUT)
+    return x

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 from repro.core import jax_compat as jc
 
 from repro.core import blockwise
+from repro.core import remat as remat_mod
 
 
 def _axis_tuple(axis_name) -> tuple:
@@ -145,12 +146,18 @@ def ring_attention(
     logits_soft_cap: float | None = None,
     skip_masked_blocks: bool = True,
     impl: str | None = None,
+    remat_policy: str | None = None,
 ) -> jnp.ndarray:
     """Exact ring attention over the local query shard. Runs inside shard_map.
 
     ``impl`` selects the per-shard engine (see ``resolve_ring_impl``): the
     fused Pallas flash kernel folds each arriving K/V shard into the carry
     in VMEM; the "xla" path is the original blockwise einsum loop.
+
+    ``remat_policy`` (core.remat) wraps the whole ring loop in
+    ``jax.checkpoint``: with "nothing_saveable" the backward re-executes the
+    forward ring (including its ppermute traffic) instead of keeping the
+    per-layer (out, lse, rotated-K/V) residuals live.
     """
     b, s_local, h, d = q.shape
     impl = resolve_ring_impl(impl, logits_soft_cap=logits_soft_cap)
@@ -166,40 +173,166 @@ def ring_attention(
             q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
             causal=causal, q_block=q_block_size, kv_block=kv_block_size,
             impl=impl, block_skip=skip_masked_blocks,
-            logits_soft_cap=logits_soft_cap)
+            logits_soft_cap=logits_soft_cap, remat_policy=remat_policy)
     n = ring_size(axis_name)
     axes = _axis_tuple(axis_name)
+    has_seg = kv_segment_ids is not None
 
-    carry = blockwise.init_carry(b, s_local, h, v.shape[-1])
-    # Mark the (constant) initial carry as varying over the ring axes so both
-    # branches of the causal block-skip `cond` have matching vma types.
-    carry = jax.tree.map(lambda x: jc.pcast_varying(x, axes), carry)
-    seg_dummy = jnp.zeros_like(kv_positions) if kv_segment_ids is None else kv_segment_ids
+    def _run(q, k, v, q_positions, kv_positions, q_seg, kv_seg):
+        carry = blockwise.init_carry(b, s_local, h, v.shape[-1])
+        # Mark the (constant) initial carry as varying over the ring axes so
+        # both branches of the causal block-skip `cond` have matching vma
+        # types.
+        carry = jax.tree.map(lambda x: jc.pcast_varying(x, axes), carry)
 
-    def step(i, state):
-        carry, k_cur, v_cur, kvp_cur, kvseg_cur = state
-        # Issue the rotation for the *next* step first: no data dependency on
-        # this step's compute, so XLA can overlap the ppermute with attention.
-        k_nxt, v_nxt, kvp_nxt, kvseg_nxt = _rotate(
-            (k_cur, v_cur, kvp_cur, kvseg_cur), axis_name)
-        carry = blockwise.attend_shard(
-            q, k_cur, v_cur, carry,
-            q_positions=q_positions, kv_positions=kvp_cur,
-            q_segment_ids=q_segment_ids,
-            kv_segment_ids=kvseg_cur if kv_segment_ids is not None else None,
-            causal=causal, kv_block_size=kv_block_size,
-            logits_soft_cap=logits_soft_cap,
-            skip_masked_blocks=skip_masked_blocks,
-        )
-        return carry, k_nxt, v_nxt, kvp_nxt, kvseg_nxt
+        def step(i, state):
+            carry, k_cur, v_cur, kvp_cur, kvseg_cur = state
+            # Issue the rotation for the *next* step first: no data
+            # dependency on this step's compute, so XLA can overlap the
+            # ppermute with attention.
+            k_nxt, v_nxt, kvp_nxt, kvseg_nxt = _rotate(
+                (k_cur, v_cur, kvp_cur, kvseg_cur), axis_name)
+            carry = blockwise.attend_shard(
+                q, k_cur, v_cur, carry,
+                q_positions=q_positions, kv_positions=kvp_cur,
+                q_segment_ids=q_seg if has_seg else None,
+                kv_segment_ids=kvseg_cur if has_seg else None,
+                causal=causal, kv_block_size=kv_block_size,
+                logits_soft_cap=logits_soft_cap,
+                skip_masked_blocks=skip_masked_blocks,
+            )
+            return carry, k_nxt, v_nxt, kvp_nxt, kvseg_nxt
 
-    state = (carry, k, v, kv_positions, seg_dummy)
-    if n == 1:
-        state = step(0, state)
-    else:
-        state = jax.lax.fori_loop(0, n, step, state)
-    carry = state[0]
-    return blockwise.finalize_carry(carry, dtype=q.dtype)
+        state = (carry, k, v, kv_positions, kv_seg)
+        if n == 1:
+            state = step(0, state)
+        else:
+            state = jax.lax.fori_loop(0, n, step, state)
+        carry = state[0]
+        out = blockwise.finalize_carry(carry, dtype=q.dtype)
+        return remat_mod.tag_output(out, remat_policy)
+
+    seg_q = jnp.zeros_like(q_positions) if q_segment_ids is None else q_segment_ids
+    seg_kv = jnp.zeros_like(kv_positions) if kv_segment_ids is None else kv_segment_ids
+    run = remat_mod.apply_remat(_run, remat_policy)
+    return run(q, k, v, q_positions, kv_positions, seg_q, seg_kv)
+
+
+# ---------------------------------------------------------------------------
+# 2D sequence parallelism: head-parallel all-to-all x ring (LongVILA-style)
+# ---------------------------------------------------------------------------
+
+def head_axis_size(heads_axis) -> int:
+    return int(jax.lax.psum(1, heads_axis))
+
+
+def head_all_to_all(x: jnp.ndarray, heads_axis, *, to_heads: bool) -> jnp.ndarray:
+    """Re-layout one (B, S_local, H, D) array across the ``heads`` mesh axis.
+
+    ``to_heads=True``: sequence-sharded -> head-sharded. Each device splits
+    its head dim ``Hx`` ways and concatenates the received pieces along the
+    sequence dim: (B, S, H, D) -> (B, S*Hx, H/Hx, D). Device (h, r) ends up
+    holding head group ``h`` for the sequence chunks {h'*R + r} of all ``Hx``
+    peers — a chunk-granular striped layout over the ring, which the
+    position-driven ring engines handle unchanged. ``to_heads=False`` is the
+    exact inverse (used on the output; its transpose is what autodiff emits
+    for dq/dk/dv).
+    """
+    if to_heads:
+        return jax.lax.all_to_all(x, heads_axis, split_axis=2, concat_axis=1,
+                                  tiled=True)
+    return jax.lax.all_to_all(x, heads_axis, split_axis=1, concat_axis=2,
+                              tiled=True)
+
+
+def head_all_gather_seq(x: jnp.ndarray, heads_axis) -> jnp.ndarray:
+    """Gather per-token metadata (positions / segment ids) along the seq dim.
+
+    all_gather concatenates in heads-axis index order — the same order
+    ``head_all_to_all`` concatenates the sequence chunks, so the metadata
+    stays aligned with its tokens.
+    """
+    return jax.lax.all_gather(x, heads_axis, axis=1, tiled=True)
+
+
+def ring_attention_2d(
+    q: jnp.ndarray,                 # (B, S_local, H, D); S_local = S/(Hx*R)
+    k: jnp.ndarray,                 # (B, S_local, Hkv, D)
+    v: jnp.ndarray,                 # (B, S_local, Hkv, D)
+    *,
+    heads_axis: str,                # mesh axis for head-parallel all-to-all
+    axis_name,                      # remaining ring axis (or tuple)
+    q_positions: jnp.ndarray,       # (B, S_local) absolute positions
+    kv_positions: jnp.ndarray,      # (B, S_local)
+    q_segment_ids: jnp.ndarray | None = None,
+    kv_segment_ids: jnp.ndarray | None = None,
+    causal: bool = True,
+    kv_block_size: int = 512,
+    q_block_size: int = 512,
+    logits_soft_cap: float | None = None,
+    skip_masked_blocks: bool = True,
+    impl: str | None = None,
+    remat_policy: str | None = None,
+) -> jnp.ndarray:
+    """2D sequence-parallel attention: all-to-all over ``heads_axis``, then
+    the 1D ring over ``axis_name``. Runs inside shard_map over BOTH axes.
+
+    The sequence arrives sharded over (heads_axis, ring axes). Q/K/V are
+    all-to-all'd to head-sharded layout (each device: S/R tokens, H/Hx
+    heads), the existing ring engines run around the Hx-times-shorter ring
+    (custom_vjp carry algebra unchanged), and the output is all-to-all'd
+    back. The backward all-to-alls dq/dk/dv back automatically (the a2a's
+    autodiff transpose is the opposite-direction a2a).
+
+    Eligibility (``Hq % Hx == 0 and Hkv % Hx == 0``, symmetric head dims) is
+    enforced at trace time; ``sharding.policy_for_stage`` checks the same
+    conditions up front and falls back to the pure ring, so a failure here
+    means a policy bug, never a silent mis-sharding.
+    """
+    hx = head_axis_size(heads_axis)
+    kwargs = dict(
+        q_positions=q_positions, kv_positions=kv_positions,
+        q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
+        causal=causal, kv_block_size=kv_block_size, q_block_size=q_block_size,
+        logits_soft_cap=logits_soft_cap, skip_masked_blocks=skip_masked_blocks,
+        impl=impl, remat_policy=remat_policy)
+    if hx == 1:
+        return ring_attention(q, k, v, axis_name=axis_name, **kwargs)
+    b, s_local, h, d = q.shape
+    hkv = k.shape[2]
+    if h % hx != 0 or hkv % hx != 0:
+        raise ValueError(
+            f"ring2d ineligible: {h} query / {hkv} kv heads not divisible by "
+            f"heads axis size {hx} (policy_for_stage should have fallen back "
+            "to the pure ring)")
+    if v.shape[-1] != d or k.shape[-1] != d:
+        raise ValueError("ring2d does not support asymmetric head dims (MLA);"
+                         " use the pure ring")
+
+    impl_res = resolve_ring_impl(impl, logits_soft_cap=logits_soft_cap)
+    if impl_res in ("pallas", "interpret"):
+        from repro.kernels import ops as kops  # lazy: avoids import cycle
+        return kops.ring_flash_attention_2d(
+            q, k, v, heads_axis=heads_axis, axis_name=axis_name,
+            q_positions=q_positions, kv_positions=kv_positions,
+            q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
+            causal=causal, q_block=q_block_size, kv_block=kv_block_size,
+            impl=impl_res, block_skip=skip_masked_blocks,
+            logits_soft_cap=logits_soft_cap, remat_policy=remat_policy)
+    kwargs["impl"] = impl_res
+
+    qh = head_all_to_all(q, heads_axis, to_heads=True)
+    kh = head_all_to_all(k, heads_axis, to_heads=True)
+    vh = head_all_to_all(v, heads_axis, to_heads=True)
+    kwargs["q_positions"] = head_all_gather_seq(q_positions, heads_axis)
+    kwargs["kv_positions"] = head_all_gather_seq(kv_positions, heads_axis)
+    if q_segment_ids is not None:
+        kwargs["q_segment_ids"] = head_all_gather_seq(q_segment_ids, heads_axis)
+    if kv_segment_ids is not None:
+        kwargs["kv_segment_ids"] = head_all_gather_seq(kv_segment_ids, heads_axis)
+
+    out = ring_attention(qh, kh, vh, axis_name=axis_name, **kwargs)
+    return head_all_to_all(out, heads_axis, to_heads=False)
 
 
 def ring_decode_attention(

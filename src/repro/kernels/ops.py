@@ -283,6 +283,7 @@ def ring_flash_attention(
     impl: str = "auto",
     block_skip: bool = True,
     logits_soft_cap: float | None = None,
+    remat_policy: str | None = None,
 ) -> jnp.ndarray:
     """Differentiable fused RingAttention over the local query shard.
 
@@ -290,7 +291,15 @@ def ring_flash_attention(
     ``core.ring_attention.ring_attention``, which this replaces on the hot
     path. ``impl="ref"`` (or "auto" off-TPU) falls back to the XLA blockwise
     ring — same math, materialized logits.
+
+    ``remat_policy`` (core.remat) wraps the custom_vjp ring in
+    ``jax.checkpoint``: the backward then re-runs the forward ring loop to
+    regenerate (out, lse) instead of keeping them (and the layout
+    transposes) resident between forward and backward — the Afro-lingo
+    ``nothing_saveable`` recipe applied to the fused kernel.
     """
+    from repro.core import remat as remat_mod
+
     b, s, h, d = q.shape
     if q_segment_ids is None:
         q_segment_ids = jnp.ones((b, s), jnp.int32)
@@ -309,14 +318,80 @@ def ring_flash_attention(
             q_positions=q_positions, kv_positions=kv_positions,
             q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
             causal=causal, kv_block_size=kv_block, impl="xla",
-            skip_masked_blocks=block_skip, logits_soft_cap=logits_soft_cap)
+            skip_masked_blocks=block_skip, logits_soft_cap=logits_soft_cap,
+            remat_policy=remat_policy)
 
-    qt, kt, vt = _bshd_to_bhsd(q), _bshd_to_bhsd(k), _bshd_to_bhsd(v)
-    out = _ring_flash_core(
-        qt, kt, vt, q_positions, kv_positions, q_segment_ids, kv_segment_ids,
-        axis_name, causal, q_block, kv_block, impl == "interpret", block_skip,
-        logits_soft_cap)
-    return _bhsd_to_bshd(out)
+    def _core(q, k, v, qpos, kpos, qseg, kseg):
+        qt, kt, vt = _bshd_to_bhsd(q), _bshd_to_bhsd(k), _bshd_to_bhsd(v)
+        out = _ring_flash_core(
+            qt, kt, vt, qpos, kpos, qseg, kseg,
+            axis_name, causal, q_block, kv_block, impl == "interpret",
+            block_skip, logits_soft_cap)
+        return remat_mod.tag_output(_bhsd_to_bshd(out), remat_policy)
+
+    core = remat_mod.apply_remat(_core, remat_policy)
+    return core(q, k, v, q_positions, kv_positions,
+                q_segment_ids, kv_segment_ids)
+
+
+def ring_flash_attention_2d(
+    q: jnp.ndarray,            # (B, S_local, H, D); S_local = S/(Hx*R)
+    k: jnp.ndarray,            # (B, S_local, Hkv, D)
+    v: jnp.ndarray,
+    *,
+    heads_axis: str,           # mesh axis for the head-parallel all-to-all
+    axis_name,                 # remaining ring axis (or tuple)
+    q_positions: jnp.ndarray,  # (B, S_local) absolute
+    kv_positions: jnp.ndarray,
+    q_segment_ids: jnp.ndarray | None = None,
+    kv_segment_ids: jnp.ndarray | None = None,
+    causal: bool = True,
+    q_block: int = fa.DEFAULT_Q_BLOCK,
+    kv_block: int = fa.DEFAULT_KV_BLOCK,
+    impl: str = "auto",
+    block_skip: bool = True,
+    logits_soft_cap: float | None = None,
+    remat_policy: str | None = None,
+) -> jnp.ndarray:
+    """Fused 2D sequence-parallel RingAttention (inside shard_map, both axes).
+
+    All-to-alls Q/K/V from sequence-sharded to head-sharded layout over
+    ``heads_axis`` (each device: Hx-times-longer sequence chunk, H/Hx
+    heads), runs the fused ring fwd/bwd around the now-Hx-times-shorter ring
+    over ``axis_name`` — the custom_vjp carry algebra is untouched — and
+    all-to-alls the output back. In the backward, autodiff's transpose of
+    the all-to-alls returns dq/dk/dv to the sequence-sharded layout.
+    """
+    from repro.core import ring_attention as ring_mod
+
+    hx = ring_mod.head_axis_size(heads_axis)
+    if hx == 1:
+        return ring_flash_attention(
+            q, k, v, axis_name=axis_name,
+            q_positions=q_positions, kv_positions=kv_positions,
+            q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
+            causal=causal, q_block=q_block, kv_block=kv_block, impl=impl,
+            block_skip=block_skip, logits_soft_cap=logits_soft_cap,
+            remat_policy=remat_policy)
+
+    qh = ring_mod.head_all_to_all(q, heads_axis, to_heads=True)
+    kh = ring_mod.head_all_to_all(k, heads_axis, to_heads=True)
+    vh = ring_mod.head_all_to_all(v, heads_axis, to_heads=True)
+    qpos = ring_mod.head_all_gather_seq(q_positions, heads_axis)
+    kpos = ring_mod.head_all_gather_seq(kv_positions, heads_axis)
+    qseg = (ring_mod.head_all_gather_seq(q_segment_ids, heads_axis)
+            if q_segment_ids is not None else None)
+    kseg = (ring_mod.head_all_gather_seq(kv_segment_ids, heads_axis)
+            if kv_segment_ids is not None else None)
+
+    out = ring_flash_attention(
+        qh, kh, vh, axis_name=axis_name,
+        q_positions=qpos, kv_positions=kpos,
+        q_segment_ids=qseg, kv_segment_ids=kseg,
+        causal=causal, q_block=q_block, kv_block=kv_block, impl=impl,
+        block_skip=block_skip, logits_soft_cap=logits_soft_cap,
+        remat_policy=remat_policy)
+    return ring_mod.head_all_to_all(out, heads_axis, to_heads=False)
 
 
 # ---------------------------------------------------------------------------

@@ -31,16 +31,22 @@ def make_host_mesh(shape: tuple[int, ...] = (), axes: tuple[str, ...] = ()):
 
 
 def parse_mesh(spec: str):
-    """"DxM" (or "D") -> a ("data", "model") host mesh, e.g. "4x2", "8".
+    """"D", "DxM", or "DxHxM" -> a host mesh, e.g. "8", "4x2", "2x2x2".
 
-    The model axis defaults to 1 so sharding policies (which address both
-    axes) always resolve. Device count must equal D*M — under
+    Two parts map to ("data", "model"); three parts map to
+    ("data", "heads", "model") — the middle "heads" axis carries the
+    head-parallel half of 2D sequence parallelism (train_ring2d) and joins
+    the data-parallel domain for batch-sharded policies. The model axis
+    defaults to 1 so sharding policies (which address both axes) always
+    resolve. Device count must equal the product — under
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on CPU, or the
     real accelerator count otherwise.
     """
     parts = [int(p) for p in spec.lower().split("x")]
     if len(parts) == 1:
         parts.append(1)
-    if len(parts) != 2 or any(p < 1 for p in parts):
-        raise ValueError(f"mesh spec {spec!r}; expected 'D' or 'DxM'")
-    return make_host_mesh(tuple(parts), ("data", "model"))
+    if len(parts) not in (2, 3) or any(p < 1 for p in parts):
+        raise ValueError(f"mesh spec {spec!r}; expected 'D', 'DxM', or 'DxHxM'")
+    axes = (("data", "model") if len(parts) == 2
+            else ("data", "heads", "model"))
+    return make_host_mesh(tuple(parts), axes)

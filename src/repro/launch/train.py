@@ -35,7 +35,8 @@ from repro.train import StageSpec, Trainer
 
 
 def parse_stages(spec: str, rows: int, vision: bool,
-                 accum: int = 1) -> list[StageSpec]:
+                 accum: int = 1, remat_policy: str | None = None,
+                 policy: str | None = None) -> list[StageSpec]:
     """"256:10,512:10" -> two stages (seq_len:steps), theta ladder applied."""
     thetas = [1e6, 1e7, 1e7, 2.5e7, 5e7]
     out = []
@@ -45,7 +46,8 @@ def parse_stages(spec: str, rows: int, vision: bool,
             name=f"s{seq}", seq_len=int(seq),
             rope_theta=thetas[min(i, len(thetas) - 1)], steps=int(steps),
             batch_rows=rows, mixture=LWM_1K if vision else TEXT_STAGE,
-            lr=3e-4, warmup=max(int(steps) // 10, 1), accum_steps=accum))
+            lr=3e-4, warmup=max(int(steps) // 10, 1), accum_steps=accum,
+            remat_policy=remat_policy, policy=policy))
     return out
 
 
@@ -63,8 +65,19 @@ def main(argv=None) -> int:
     ap.add_argument("--vision", action="store_true",
                     help="train on the text-image mixture (paper stage II)")
     ap.add_argument("--mesh", default=None,
-                    help="host mesh 'DxM': compile stages under real "
-                         "sharding policies (FSDP/ring per stage)")
+                    help="host mesh 'DxM' or 'DxHxM': compile stages under "
+                         "real sharding policies (FSDP/ring per stage; a "
+                         "3-axis mesh enables the 2D ring x head-parallel "
+                         "policy)")
+    ap.add_argument("--remat-policy", default=None,
+                    choices=["none", "nothing_saveable", "dots_saveable",
+                             "custom"],
+                    help="attention-loop remat policy (core.remat) applied "
+                         "to every stage")
+    ap.add_argument("--policy", default=None,
+                    choices=["fsdp", "ring", "ring2d"],
+                    help="pin every stage's sharding policy instead of the "
+                         "per-stage crossover (bench/CI determinism)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0,
                     help="full-state checkpoint cadence in steps (0 = only "
@@ -87,7 +100,8 @@ def main(argv=None) -> int:
     if mesh is not None:
         print(f"mesh={dict(mesh.shape)} (per-stage policy selection on)")
 
-    stages = parse_stages(args.stages, args.rows, args.vision, args.accum)
+    stages = parse_stages(args.stages, args.rows, args.vision, args.accum,
+                          args.remat_policy, args.policy)
     tr = Trainer(cfg, stages, seed=args.seed, mesh=mesh,
                  checkpoint_dir=args.checkpoint_dir,
                  checkpoint_every=args.checkpoint_every)

@@ -27,6 +27,10 @@ class RuntimeCtx:
     decode_ring: bool = False              # ring-sharded KV cache at decode
     decode_impl: str | None = None         # decode-attention engine override:
     #   "pallas" | "interpret" | "xla"/"ref" | "auto" (see core.decode)
+    head_axis: Any = None                  # head-parallel mesh axis: attention
+    #   runs the 2D (all-to-all x ring) path when set alongside ring_axis
+    remat_policy: str | None = None        # attention-loop remat policy:
+    #   none | nothing_saveable | dots_saveable | custom (see core.remat)
 
     def spec(self, logical: tuple) -> P:
         if self.rules is None:
@@ -53,6 +57,11 @@ class RuntimeCtx:
     @property
     def sequence_parallel(self) -> bool:
         return self.ring_axis is not None
+
+    @property
+    def head_parallel(self) -> bool:
+        """2D sequence parallelism: ring x head-parallel all-to-all."""
+        return self.ring_axis is not None and self.head_axis is not None
 
     @property
     def num_data_shards(self) -> int:

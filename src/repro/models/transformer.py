@@ -103,7 +103,8 @@ def _attend(cfg: ModelConfig, q, k, v, positions, segment_ids, ctx: RuntimeCtx,
         q_positions=positions, kv_positions=positions,
         q_segment_ids=segment_ids, kv_segment_ids=segment_ids,
         q_block_size=cfg.q_block, kv_block_size=cfg.kv_block,
-        logits_soft_cap=cfg.logits_soft_cap)
+        logits_soft_cap=cfg.logits_soft_cap,
+        remat_policy=ctx.remat_policy)
 
 
 def _ring_attend(cfg, q, k, v, positions, segment_ids, ctx, *, causal):
@@ -125,15 +126,34 @@ def _ring_attend(cfg, q, k, v, positions, segment_ids, ctx, *, causal):
         ctx.ring_impl or cfg.ring_impl, logits_soft_cap=cfg.logits_soft_cap)
     skip = True if ring_impl in ("pallas", "interpret") else not ctx.striped
 
-    def fn(q, k, v, pos, seg):
-        return ring_mod.ring_attention(
-            q, k, v, axis_name=ctx.ring_axis,
-            q_positions=pos, kv_positions=pos,
-            q_segment_ids=seg, kv_segment_ids=seg,
-            causal=causal, kv_block_size=cfg.kv_block,
-            q_block_size=cfg.q_block,
-            logits_soft_cap=cfg.logits_soft_cap,
-            skip_masked_blocks=skip, impl=ring_impl)
+    if ctx.head_parallel:
+        # 2D sequence parallelism: all-to-all Q/K/V over ctx.head_axis to
+        # head-sharded layout, ring over the (head_axis-times shorter)
+        # ctx.ring_axis, all-to-all the output back. The post-gather
+        # sequence is chunk-striped over the ring; the position-driven
+        # engines are exact under any chunk placement, so nothing changes
+        # downstream.
+        def fn(q, k, v, pos, seg):
+            return ring_mod.ring_attention_2d(
+                q, k, v, heads_axis=ctx.head_axis, axis_name=ctx.ring_axis,
+                q_positions=pos, kv_positions=pos,
+                q_segment_ids=seg, kv_segment_ids=seg,
+                causal=causal, kv_block_size=cfg.kv_block,
+                q_block_size=cfg.q_block,
+                logits_soft_cap=cfg.logits_soft_cap,
+                skip_masked_blocks=skip, impl=ring_impl,
+                remat_policy=ctx.remat_policy)
+    else:
+        def fn(q, k, v, pos, seg):
+            return ring_mod.ring_attention(
+                q, k, v, axis_name=ctx.ring_axis,
+                q_positions=pos, kv_positions=pos,
+                q_segment_ids=seg, kv_segment_ids=seg,
+                causal=causal, kv_block_size=cfg.kv_block,
+                q_block_size=cfg.q_block,
+                logits_soft_cap=cfg.logits_soft_cap,
+                skip_masked_blocks=skip, impl=ring_impl,
+                remat_policy=ctx.remat_policy)
 
     return jc.shard_map(
         fn, mesh=ctx.mesh,

@@ -24,6 +24,7 @@ to replication for that axis — recorded so the roofline can call it out.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Any, Mapping
 
 import jax
@@ -32,6 +33,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
 from repro.models.context import RuntimeCtx
+
+_log = logging.getLogger("repro.train.sharding")
 
 # Priority when two logical axes of one param want the same mesh axis: the
 # higher-priority one wins, the other is replicated.
@@ -52,16 +55,31 @@ class ShardingPolicy:
     rules: Mapping[str, Any]          # logical axis -> mesh axis (or tuple)
     batch_axes: Any                   # mesh axes sharding the batch dim
     ring_axis: Any = None             # sequence/ring axes (train or decode)
+    head_axis: Any = None             # head-parallel axis (2D ring x a2a)
     decode_ring: bool = False
     striped: bool = False
     attn_impl: str | None = None
+    remat_policy: str | None = None   # attention-loop remat (core.remat)
     replicated_fallbacks: tuple = ()  # (param_path, logical_axis) replicated
 
     def ctx(self) -> RuntimeCtx:
         return RuntimeCtx(
             mesh=self.mesh, rules=dict(self.rules), ring_axis=self.ring_axis,
             striped=self.striped, batch_axes=self.batch_axes,
-            attn_impl=self.attn_impl, decode_ring=self.decode_ring)
+            attn_impl=self.attn_impl, decode_ring=self.decode_ring,
+            head_axis=self.head_axis, remat_policy=self.remat_policy)
+
+    @property
+    def seq_axes(self) -> Any:
+        """All mesh axes sharding the sequence dim (head axis outermost)."""
+        if self.ring_axis is None:
+            return None
+        if self.head_axis is None:
+            return self.ring_axis
+        ring = (tuple(self.ring_axis)
+                if isinstance(self.ring_axis, (tuple, list))
+                else (self.ring_axis,))
+        return (self.head_axis,) + ring
 
     # -- parameter shardings --------------------------------------------------
 
@@ -110,7 +128,7 @@ class ShardingPolicy:
     # -- batch shardings -------------------------------------------------------
 
     def batch_spec(self, *, seq_sharded: bool = False) -> P:
-        seq_ax = self.ring_axis if seq_sharded else None
+        seq_ax = self.seq_axes if seq_sharded else None
         return P(self.batch_axes, seq_ax)
 
     def batch_sharding(self, batch_tree, *, seq_sharded: bool = False,
@@ -128,7 +146,7 @@ class ShardingPolicy:
             if nd - len(lead) == 1:
                 return NamedSharding(self.mesh, P(*lead, self.batch_axes))
             spec = lead + [self.batch_axes,
-                           self.ring_axis if seq_sharded else None]
+                           self.seq_axes if seq_sharded else None]
             spec += [None] * (nd - len(spec))
             return NamedSharding(self.mesh, P(*spec))
 
@@ -173,14 +191,22 @@ class ShardingPolicy:
 def make_policy(
     cfg: ModelConfig,
     mesh: Mesh,
-    shape_kind: str,               # "train" | "train_ring" | "prefill" | "decode" | "decode_ring"
+    shape_kind: str,               # "train" | "train_ring" | "train_ring2d"
+    #                                | "prefill" | "decode" | "decode_ring"
     *,
     global_batch: int | None = None,
     striped: bool = False,
     attn_impl: str | None = None,
+    remat_policy: str | None = None,
 ) -> ShardingPolicy:
     multi_pod = "pod" in mesh.shape
+    has_heads = "heads" in mesh.shape
     data_axes = ("pod", "data") if multi_pod else ("data",)
+    if has_heads:
+        # 3-axis DxHxM mesh: the "heads" axis joins the data-parallel domain
+        # for batch-sharded policies and carries the head-parallel all-to-all
+        # for train_ring2d (pure-ring policies fold it into the ring).
+        data_axes = data_axes + ("heads",)
 
     # Parameter rules shared by all policies: FSDP over "data", TP over
     # "model". The ring occupying "data" (train_ring / decode_ring) does NOT
@@ -213,22 +239,48 @@ def make_policy(
     tp_only_rules = dict(fsdp_rules)
 
     if shape_kind == "train":
-        batch_axes = data_axes if multi_pod else "data"
+        batch_axes = data_axes if (multi_pod or has_heads) else "data"
         bsz = _axis_size(mesh, batch_axes)
         if global_batch is not None and global_batch % bsz != 0:
-            batch_axes = "data" if not multi_pod else ("pod", "data")
+            batch_axes = data_axes if (multi_pod or has_heads) else "data"
         rules = dict(fsdp_rules, batch=batch_axes, seq=None,
                      tokens=batch_axes)
-        return ShardingPolicy(mesh, rules, batch_axes, attn_impl=attn_impl)
+        return ShardingPolicy(mesh, rules, batch_axes, attn_impl=attn_impl,
+                              remat_policy=remat_policy)
 
     if shape_kind == "train_ring":
         # Paper's long-context training: sequence over "data" (+"pod"),
-        # batch replicated or over "pod" if it divides.
-        ring = ("pod", "data") if multi_pod else ("data",)
+        # batch replicated or over "pod" if it divides. On a DxHxM mesh the
+        # "heads" axis joins as the OUTER ring segment, so the pure ring
+        # uses every sequence shard the 2D policy would (fair fallback).
+        if has_heads:
+            ring = ("heads", "data")
+        else:
+            ring = ("pod", "data") if multi_pod else ("data",)
         rules = dict(tp_only_rules, batch=None, seq=ring,
                      heads="model", )
         return ShardingPolicy(mesh, rules, None, ring_axis=ring,
-                              striped=striped, attn_impl=attn_impl)
+                              striped=striped, attn_impl=attn_impl,
+                              remat_policy=remat_policy)
+
+    if shape_kind == "train_ring2d":
+        # 2D sequence parallelism (ring x head-parallel): the sequence is
+        # sharded over ("heads", "data") exactly like the pure ring above —
+        # same global layout, so a ring <-> ring2d stage boundary moves no
+        # activation bytes — but attention all-to-alls Q/K/V to head-sharded
+        # layout over "heads" and runs the Hx-times-shorter ring over "data".
+        if not has_heads or _axis_size(mesh, "heads") < 2:
+            raise ValueError(
+                "train_ring2d needs a 'heads' mesh axis of size >= 2 "
+                f"(mesh axes: {dict(mesh.shape)})")
+        if multi_pod:
+            raise ValueError("train_ring2d on a multi-pod mesh is not "
+                             "supported (ring would span pod+data)")
+        rules = dict(tp_only_rules, batch=None, seq=("heads", "data"),
+                     heads="model")
+        return ShardingPolicy(mesh, rules, None, ring_axis=("data",),
+                              head_axis="heads", striped=striped,
+                              attn_impl=attn_impl, remat_policy=remat_policy)
 
     if shape_kind == "prefill":
         batch_axes = data_axes if multi_pod else "data"
@@ -257,6 +309,90 @@ def make_policy(
 # Progressive-training stage policies (paper Appendix F)
 # ---------------------------------------------------------------------------
 
+def ring2d_eligible(cfg: ModelConfig, mesh, seq_len: int) -> tuple[bool, str]:
+    """Can this (config, mesh, seq_len) run the 2D ring x head-parallel path?
+
+    Returns ``(ok, reason)``. The conditions mirror what the attention
+    all-to-all needs at trace time — checked HERE so an ineligible stage
+    falls back to the pure ring with a logged reason instead of failing (or
+    silently mis-sharding) inside shard_map:
+
+      * a "heads" mesh axis of size >= 2, single pod;
+      * every sequence shard axis must divide seq_len;
+      * Hq and Hkv must divide by the heads axis (times TP when TP shards
+        the head dim — the a2a splits the *local* post-TP heads);
+      * symmetric head dims (MLA's qk vs v dims can't share one a2a).
+    """
+    if "heads" not in mesh.shape:
+        return False, "mesh has no 'heads' axis"
+    hx = _axis_size(mesh, "heads")
+    if hx < 2:
+        return False, "'heads' mesh axis has size 1"
+    if "pod" in mesh.shape:
+        return False, "multi-pod mesh (ring would span pod+data)"
+    n_shards = _axis_size(mesh, ("heads", "data"))
+    if seq_len % n_shards != 0:
+        return False, f"seq_len {seq_len} % ring size {n_shards} != 0"
+    tp = _axis_size(mesh, "model")
+    heads_div = tp if (cfg.num_heads % tp == 0
+                       and cfg.num_kv_heads % tp == 0) else 1
+    if (cfg.num_heads % (heads_div * hx) != 0
+            or cfg.num_kv_heads % (heads_div * hx) != 0):
+        return False, (f"Hq={cfg.num_heads}/Hkv={cfg.num_kv_heads} not "
+                       f"divisible by head axis {hx} (x TP {heads_div})")
+    if cfg.mla is not None:
+        return False, "asymmetric head dims (MLA)"
+    return True, ""
+
+
+def seq_parallel_comm_bytes(
+    cfg: ModelConfig,
+    seq_len: int,
+    batch_rows: int,
+    *,
+    ring_size: int,                # devices on the (post-a2a) inner ring axis
+    head_size: int,                # devices on the head-parallel axis
+    dtype_bytes: int = 2,
+) -> dict:
+    """Analytic per-device attention-comm bytes: pure ring vs ring2d.
+
+    Appendix-F-style accounting over one step's fwd+bwd, per device, summed
+    over layers, with ``N = ring_size * head_size`` total sequence shards
+    and per-(shard, kv-head) bytes ``c = B * (S/N) * head_dim * dtype_bytes``:
+
+        ring    6 (N-1) c Hkv              fwd rotates K,V over N-1 hops;
+                                           bwd rotates k, v, dk, dv.
+        ring2d  6 (R-1) c Hkv              same per-hop bytes (S/R tokens x
+                                           Hkv/Hx heads) but only R-1 hops,
+                + 2 (Hx-1)/Hx c (2Hq+2Hkv) fwd a2a of Q,K,V in + O out; bwd
+                                           is the transpose a2a (dO in +
+                                           dQ,dK,dV back).
+
+    The pure-ring term scales with the FULL shard count N while ring2d's
+    scales with R = N/Hx: shortening the ring by Hx trades ~6 c Hkv (N - R)
+    hop-bytes for ~8 c Hq a2a-bytes, so the crossover lands on ring2d once
+    sequence parallelism is wide (>= 256K on the Appendix-F splits) but can
+    stay with the pure ring on narrow meshes.
+    """
+    n = ring_size * head_size
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    c = batch_rows * (seq_len / n) * hd * dtype_bytes
+    ring_bytes = 6 * (n - 1) * c * hkv
+    a2a_bytes = 2 * ((head_size - 1) / head_size) * c * (2 * hq + 2 * hkv)
+    ring2d_bytes = 6 * (ring_size - 1) * c * hkv + a2a_bytes
+    layers = cfg.num_layers
+    return {
+        "seq_len": seq_len,
+        "batch_rows": batch_rows,
+        "ring_size": ring_size,
+        "head_size": head_size,
+        "ring_bytes_per_device": int(ring_bytes * layers),
+        "ring2d_bytes_per_device": int(ring2d_bytes * layers),
+        "ring2d_a2a_bytes_per_device": int(a2a_bytes * layers),
+    }
+
+
 def policy_for_stage(
     cfg: ModelConfig,
     mesh: Mesh,
@@ -265,6 +401,9 @@ def policy_for_stage(
     *,
     attn_impl: str | None = None,
     striped: bool = False,
+    remat_policy: str | None = None,
+    force: str | None = None,     # None | "fsdp" | "ring" | "ring2d"
+    log_fn=None,
 ) -> ShardingPolicy:
     """Select the mesh layout for one progressive-training stage.
 
@@ -272,23 +411,60 @@ def policy_for_stage(
     global batch has enough rows to fill the data axes, so the stage trains
     FSDP/data-parallel ("train"); as seq_len doubles, ``batch_rows =
     tokens_per_batch / seq_len`` shrinks below the data-axis size and the
-    stage flips to RingAttention sequence parallelism ("train_ring" — batch
-    replicated, sequence sharded over the ring axes). The crossover is
-    purely arithmetic: prefer data parallelism while the rows divide the
-    data axes, otherwise shard the sequence (which must divide the ring).
+    stage flips to sequence parallelism. On a 3-axis DxHxM mesh the
+    sequence-parallel stage then picks between the pure ring and the 2D
+    ring x head-parallel layout: ``ring2d_eligible`` gates on divisibility
+    (ineligible stages fall back to the pure ring with a logged reason) and
+    the ``seq_parallel_comm_bytes`` analytic crossover picks the cheaper.
+
+    ``force`` pins the choice for benchmark grids / CI determinism; forcing
+    "ring2d" on an ineligible stage raises rather than mis-sharding.
     """
+    log = log_fn or _log.warning
     multi_pod = "pod" in mesh.shape
-    data = _axis_size(mesh, ("pod", "data") if multi_pod else ("data",))
+    has_heads = "heads" in mesh.shape and _axis_size(mesh, "heads") > 1
+    seq_domain = ("pod", "data") if multi_pod else ("data",)
+    if has_heads:
+        seq_domain = seq_domain + ("heads",)
+    data = _axis_size(mesh, seq_domain)
+    kw = dict(global_batch=batch_rows, attn_impl=attn_impl,
+              remat_policy=remat_policy)
+
+    if force not in (None, "fsdp", "ring", "ring2d"):
+        raise ValueError(f"unknown forced policy {force!r}")
+    if force == "ring2d":
+        ok, reason = ring2d_eligible(cfg, mesh, seq_len)
+        if not ok:
+            raise ValueError(f"forced ring2d is ineligible: {reason}")
+        return make_policy(cfg, mesh, "train_ring2d", striped=striped, **kw)
+    if force == "ring":
+        return make_policy(cfg, mesh, "train_ring", striped=striped, **kw)
+    if force == "fsdp":
+        return make_policy(cfg, mesh, "train", **kw)
+
     if batch_rows % data == 0 and batch_rows >= data:
-        return make_policy(cfg, mesh, "train", global_batch=batch_rows,
-                           attn_impl=attn_impl)
+        return make_policy(cfg, mesh, "train", **kw)
+    if has_heads:
+        ok, reason = ring2d_eligible(cfg, mesh, seq_len)
+        if ok:
+            bytes_ = seq_parallel_comm_bytes(
+                cfg, seq_len, batch_rows,
+                ring_size=_axis_size(mesh, "data"),
+                head_size=_axis_size(mesh, "heads"))
+            if (bytes_["ring2d_bytes_per_device"]
+                    < bytes_["ring_bytes_per_device"]):
+                return make_policy(cfg, mesh, "train_ring2d",
+                                   striped=striped, **kw)
+            reason = (f"comms model favors pure ring "
+                      f"({bytes_['ring_bytes_per_device']:,} B/device vs "
+                      f"ring2d {bytes_['ring2d_bytes_per_device']:,})")
+        log(f"[policy] seq_len={seq_len}: head-parallel rejected ({reason}); "
+            "falling back to pure ring")
     if seq_len % data == 0:
-        return make_policy(cfg, mesh, "train_ring", global_batch=batch_rows,
-                           striped=striped, attn_impl=attn_impl)
+        return make_policy(cfg, mesh, "train_ring", striped=striped, **kw)
     # Neither rows nor sequence divide the data axes (tiny smoke shapes):
     # batch-parallel layout with the batch dim replicated.
-    pol = make_policy(cfg, mesh, "train", global_batch=batch_rows,
-                      attn_impl=attn_impl)
+    pol = make_policy(cfg, mesh, "train", **kw)
     rules = dict(pol.rules, batch=None, tokens=None)
     return dataclasses.replace(pol, rules=rules, batch_axes=None)
 

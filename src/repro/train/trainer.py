@@ -65,6 +65,8 @@ class StageSpec:
     min_lr: float | None = None
     packing_mode: str = "masked"
     accum_steps: int = 1               # microbatches per optimizer update
+    remat_policy: str | None = None    # attention-loop remat (core.remat)
+    policy: str | None = None          # force "fsdp"|"ring"|"ring2d" (bench/CI)
 
 
 # The paper's stage ladders, scaled by ``scale`` for runnable examples:
@@ -152,7 +154,9 @@ class Trainer:
         if self.mesh is None:
             return None
         return policy_for_stage(cfg, self.mesh, stage.seq_len,
-                                stage.batch_rows)
+                                stage.batch_rows,
+                                remat_policy=stage.remat_policy,
+                                force=stage.policy)
 
     def _compile_step(self, cfg, stage, policy, model, batch0):
         """jit the stage's step with the policy's explicit shardings; the
@@ -257,7 +261,9 @@ class Trainer:
             "rope_theta": stage.rope_theta, "steps": stage.steps,
             "accum_steps": stage.accum_steps,
             "policy": ("none" if policy is None else
+                       "ring2d" if policy.head_axis is not None else
                        "ring" if policy.ring_axis is not None else "fsdp"),
+            "remat_policy": stage.remat_policy,
             "first_loss": losses_log[0] if losses_log else float("nan"),
             "final_loss": (float(np.mean(losses_log[-min(5, len(losses_log)):]))
                            if losses_log else float("nan")),

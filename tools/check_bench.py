@@ -33,9 +33,16 @@ claims rest on:
     parity.
   * BENCH_context_stages.json — every measured ladder stage reports a
     positive tok/s under a real stage policy; the accumulation-on/off pair
-    consumed identical token budgets; and at every full-scale Appendix-F
+    consumed identical token budgets; at every full-scale Appendix-F
     stage boundary the spec-diff reshard moves fewer bytes per device than
-    gathering the TrainState replicated.
+    gathering the TrainState replicated; every full-scale sequence-parallel
+    stage >= 256K must price ring2d (ring x head-parallel) below the pure
+    ring in the analytic comms-byte crossover AND have the policy selector
+    actually pick it; the measured (2,2,2)-mesh grid must show ring2d
+    training with token parity, its same-params single-step loss/grads
+    matching the pure ring to fold-order tolerance, and
+    remat_policy=nothing_saveable cutting each
+    policy's compiled peak temp bytes at (near-)identical loss.
   * BENCH_serve_chaos.json — under the injected fault plan (>= 1
     OOM-preemption, >= 1 retried step failure, 1 NaN-poisoned request)
     every request completes, every non-poisoned request's greedy tokens
@@ -432,7 +439,61 @@ def check_context_stages() -> None:
     measured = 0
     parity_rows = 0
     boundaries = 0
+    crossovers = 0
+    measured_2d = 0
+    ring2d_parity = 0
     for row in rows or []:
+        if row.get("mode") == "measured_2d":
+            measured_2d += 1
+            tag = f"{row.get('policy', '?')}/{row.get('remat_policy', '?')}"
+            # Fail-closed defaults: a missing/renamed key must FAIL the gate.
+            _check(row.get("tok_per_s", 0.0) > 0.0,
+                   f"context_stages[2d:{tag}]: no positive tok_per_s")
+            _check(row.get("peak_temp_bytes_probe", 0) > 0,
+                   f"context_stages[2d:{tag}]: peak-bytes probe missing")
+            continue
+        if "ring2d_parity" in row:
+            ring2d_parity += 1
+            p = row["ring2d_parity"]
+            _check(p.get("tokens_match") is True,
+                   "context_stages[2d]: ring/ring2d/remat runs no longer "
+                   "consume identical token budgets")
+            # Single-step parity from identical params/batch: a genuine
+            # fold-order delta. (Trajectory losses drift as independent
+            # optimizer runs amplify that noise — informational only.)
+            _check(p.get("loss_delta_ring_vs_ring2d", 1.0) <= 5e-3,
+                   "context_stages[2d]: ring vs ring2d same-params step "
+                   "losses diverged beyond fold-order tolerance "
+                   f"(delta={p.get('loss_delta_ring_vs_ring2d')})")
+            _check(p.get("grad_norm_rel_delta", 1.0) <= 2e-2,
+                   "context_stages[2d]: ring vs ring2d grad norms diverged "
+                   f"(rel delta={p.get('grad_norm_rel_delta')})")
+            _check(p.get("loss_delta_remat", 1.0) <= 1e-3,
+                   "context_stages[2d]: remat changed the measured loss "
+                   f"(delta={p.get('loss_delta_remat')}) — remat must trade "
+                   "memory for recompute, never math")
+            cuts = p.get("remat_cuts_peak_bytes", {})
+            for pol in ("ring", "ring2d"):
+                _check(cuts.get(pol) is True,
+                       f"context_stages[2d:{pol}]: nothing_saveable no "
+                       "longer cuts the compiled step's peak temp bytes")
+            continue
+        if "analytic_crossover" in row:
+            crossovers += 1
+            c = row["analytic_crossover"]
+            seq = c.get("seq_len", 0)
+            _check(c.get("ring2d_bytes_per_device", 10 ** 18)
+                   < c.get("ring_bytes_per_device", -1),
+                   f"context_stages[crossover:{seq}]: ring2d comm bytes no "
+                   "longer undercut the pure ring")
+            _check(c.get("ring2d_beats_ring") is True,
+                   f"context_stages[crossover:{seq}]: delta flag lost the "
+                   "ordering")
+            if seq >= 262_144:
+                _check(c.get("chosen_policy") == "ring2d",
+                       f"context_stages[crossover:{seq}]: policy selector "
+                       "no longer picks ring2d at a wide-SP stage")
+            continue
         if row.get("mode") == "measured":
             measured += 1
             stage = row.get("stage", "?")
@@ -469,6 +530,14 @@ def check_context_stages() -> None:
     _check(boundaries >= 4,
            "context_stages: expected 4 full-scale stage-boundary rows "
            "(32K->128K->256K->512K->1M)")
+    _check(crossovers >= 3,
+           "context_stages: expected >= 3 analytic ring-vs-ring2d "
+           "crossover rows (256K/512K/1M)")
+    _check(measured_2d >= 4,
+           "context_stages: expected the 4-way (policy x remat) measured "
+           "ring2d grid")
+    _check(ring2d_parity >= 1,
+           "context_stages: the ring2d_parity summary row is gone")
 
 
 def main() -> int:
